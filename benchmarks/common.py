@@ -1,0 +1,98 @@
+"""Shared benchmark fixture: one synthetic corpus + CluSD index + trained
+selectors, cached at module scope. Sizes scale with BENCH_SCALE (default
+CPU-friendly; the benchmark *structure* matches the paper's MS MARCO setup,
+the absolute numbers are synthetic-corpus analogues — see EXPERIMENTS.md)."""
+
+import dataclasses
+import functools
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import clusd as cl
+from repro.core import train_lstm as tl
+from repro.data import mrr_at, recall_at, synth_corpus, synth_queries
+
+SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
+
+
+def bench_cfg(n_clusters=None, dim=None):
+    return dataclasses.replace(
+        get_config("clusd-msmarco", "smoke"),
+        n_docs=int(24000 * SCALE), dim=dim or 48, vocab=2048,
+        n_clusters=n_clusters or 256,
+        max_postings=1024, doc_terms=16,
+        k_sparse=512, bins=(10, 25, 50, 100, 200, 512),
+        n_candidates=32, u_bins=6, lstm_hidden=32, n_neighbors=64,
+        theta=0.02, max_selected=16, alpha=0.5, k_final=512,
+        train_queries=int(768 * SCALE), epochs=30)
+
+
+@functools.lru_cache(maxsize=4)
+def corpus_and_index(n_clusters=256, dim=48, seed=0):
+    cfg = bench_cfg(n_clusters, dim)
+    corpus = synth_corpus(seed, cfg.n_docs, cfg.dim, cfg.vocab,
+                          topic_noise=0.5)
+    index = cl.build_index(cfg, jax.random.key(seed), corpus.embeddings,
+                           corpus.doc_terms, corpus.doc_weights)
+    return cfg, corpus, index
+
+
+@functools.lru_cache(maxsize=4)
+def trained_index(n_clusters=256, dim=48, selector="lstm", seed=0):
+    cfg, corpus, index = corpus_and_index(n_clusters, dim, seed)
+    tq = synth_queries(1, corpus, cfg.train_queries)
+    _, feats, labels = tl.make_labels(cfg, index, tq.q_dense, tq.q_terms,
+                                      tq.q_weights)
+    params, hist = tl.train_selector(cfg, jax.random.key(2),
+                                     np.asarray(feats), np.asarray(labels),
+                                     selector=selector)
+    return cfg, corpus, index, params, (np.asarray(feats),
+                                        np.asarray(labels)), hist
+
+
+def test_queries(corpus, n=256, seed=9):
+    # dense/sparse noise chosen so neither retriever saturates (paper regime:
+    # dense MRR ~ sparse MRR, fusion clearly better than both)
+    return synth_queries(seed, corpus, int(n * max(SCALE, 0.25)),
+                         dense_noise=0.30, term_noise_frac=0.4)
+
+
+def timed(fn, *args, reps=3):
+    fn(*args)  # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return out, float(np.median(ts)) * 1e3
+
+
+def quality(ids, qs, k_final=512):
+    return {"MRR@10": round(mrr_at(np.asarray(ids), qs.rel_doc), 4),
+            "R@100": round(recall_at(np.asarray(ids), qs.rel_doc, 100), 4)}
+
+
+def tune_theta(cfg, index, params, feats, target_avg):
+    """Match the paper's Table-8 protocol: pick theta so the average number
+    of selected clusters hits a target."""
+    from repro.core.lstm import SELECTORS
+    import jax.numpy as jnp
+    _, apply = SELECTORS["lstm"]
+    probs = np.asarray(apply(params, jnp.asarray(feats)))
+    lo, hi = 0.0, 1.0
+    for _ in range(30):
+        mid = (lo + hi) / 2
+        avg = (probs >= mid).sum(1).mean()
+        if avg > target_avg:
+            lo = mid
+        else:
+            hi = mid
+    return (lo + hi) / 2

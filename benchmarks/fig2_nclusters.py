@@ -1,0 +1,46 @@
+"""Paper Fig. 2: quality/latency vs average number of clusters selected, for
+two cluster-partition sizes N (flat + PQ variants)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import clusd as cl
+from repro.core import quant as qt
+from repro.data import mrr_at, recall_at
+
+
+def run():
+    curves = []
+    for n_clusters in (128, 256):
+        cfg, corpus, index, params, _, _ = C.trained_index(n_clusters)
+        index.lstm_params = params
+        qs = C.test_queries(corpus, n=128)
+        pq = qt.train_pq(jax.random.key(3), corpus.embeddings, nsub=8,
+                         iters=5)
+        for quantized in (False, True):
+            index.quantizer = pq if quantized else None
+            pts = []
+            for theta in (0.9, 0.5, 0.2, 0.05, 0.02):
+                cfg_t = dataclasses.replace(cfg, theta=theta)
+                fn = jax.jit(lambda qd, qt_, qw: cl.retrieve(
+                    cfg_t, index, qd, qt_, qw, selector_params=params))
+                (ids, _, diag), lat = C.timed(fn, qs.q_dense, qs.q_terms,
+                                              qs.q_weights, reps=2)
+                pts.append({
+                    "theta": theta,
+                    "avg_sel": round(float(diag["n_selected"].mean()), 2),
+                    "pctD": round(100 * float(
+                        diag["frac_docs_scanned"].mean()), 3),
+                    "MRR@10": round(mrr_at(np.asarray(ids), qs.rel_doc), 4),
+                    "R@100": round(recall_at(np.asarray(ids), qs.rel_doc,
+                                             100), 4),
+                    "latency_ms": round(lat, 1)})
+            curves.append({"N": n_clusters,
+                           "store": "PQ m=8" if quantized else "flat",
+                           "points": pts})
+        index.quantizer = None
+    return {"table": "fig2_nclusters", "curves": curves}

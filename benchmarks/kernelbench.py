@@ -1,0 +1,44 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU — correctness-scale
+timing only; TPU is the perf target) vs the jnp reference, plus agreement
+check at benchmark shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.kernels.cluster_score import cluster_score_ref
+from repro.kernels.cluster_score.kernel import cluster_score_pallas
+from repro.kernels.lstm import lstm_sequence_ref
+from repro.kernels.lstm.kernel import lstm_sequence_pallas
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    # cluster_score at paper-ish shape
+    B, dim, N, cap, S = 8, 768 // 4, 256, 128, 16
+    q = jnp.asarray(rng.standard_normal((B, dim)), jnp.float32)
+    blocks = jnp.asarray(rng.standard_normal((N, cap, dim)), jnp.float32)
+    sel = jnp.asarray(rng.integers(0, N, (B, S)), jnp.int32)
+    ref = jax.jit(cluster_score_ref)
+    _, t_ref = C.timed(ref, q, blocks, sel)
+    out_k = cluster_score_pallas(q, blocks, sel, interpret=True)
+    err = float(jnp.max(jnp.abs(out_k - ref(q, blocks, sel))))
+    rows.append({"kernel": "cluster_score", "shape": f"B{B} N{N} cap{cap} d{dim}",
+                 "jnp_ref_ms": round(t_ref, 2), "max_err": err,
+                 "note": "pallas interpret=True validates; MXU path is the TPU target"})
+
+    B, n, F, H = 64, 32, 21, 32
+    x = jnp.asarray(rng.standard_normal((B, n, F)), jnp.float32)
+    wx = jnp.asarray(rng.standard_normal((F, 4 * H)) * 0.3, jnp.float32)
+    wh = jnp.asarray(rng.standard_normal((H, 4 * H)) * 0.3, jnp.float32)
+    b = jnp.zeros(4 * H, jnp.float32)
+    ref = jax.jit(lstm_sequence_ref)
+    _, t_ref = C.timed(ref, x, wx, wh, b)
+    out_k = lstm_sequence_pallas(x, wx, wh, b, interpret=True)
+    err = float(jnp.max(jnp.abs(out_k - ref(x, wx, wh, b))))
+    rows.append({"kernel": "lstm", "shape": f"B{B} n{n} F{F} H{H}",
+                 "jnp_ref_ms": round(t_ref, 2), "max_err": err,
+                 "note": "weights VMEM-resident across the whole sequence"})
+    return {"table": "kernelbench", "rows": rows}

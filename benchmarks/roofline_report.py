@@ -1,0 +1,43 @@
+"""Roofline report: reads the dry-run artifacts and prints the per-cell
+three-term table (EXPERIMENTS.md §Roofline is generated from this)."""
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(mesh="single", tag=""):
+    rows = []
+    suffix = f"__{mesh}{('_' + tag) if tag else ''}.json"
+    for f in sorted(glob.glob(os.path.join(ART, f"*{suffix}"))):
+        d = json.load(open(f))
+        rows.append(d)
+    return rows
+
+
+def run():
+    rows = []
+    for d in load_cells("single"):
+        if d.get("status") == "skip":
+            rows.append({"cell": f"{d['arch']} x {d['shape']}",
+                         "status": "SKIP", "note": d["reason"][:60]})
+            continue
+        if d.get("status") != "ok":
+            rows.append({"cell": f"{d['arch']} x {d['shape']}",
+                         "status": "FAIL"})
+            continue
+        r = d["roofline"]
+        rows.append({
+            "cell": f"{d['arch']} x {d['shape']}",
+            "status": "ok",
+            "peak_gb": round(d["memory"]["peak_gb"], 1),
+            "compute_s": f"{r['compute_s']:.2e}",
+            "memory_s": f"{r['memory_s']:.2e}",
+            "collective_s": f"{r['collective_s']:.2e}",
+            "dominant": r["dominant"],
+            "MODEL/HLO": round(d["useful_flops_ratio"], 3),
+            "MFU_bound": round(r["mfu_upper_bound"], 3),
+        })
+    return {"table": "roofline", "rows": rows}

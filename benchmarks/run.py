@@ -1,0 +1,75 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+report. `PYTHONPATH=src python -m benchmarks.run [--only tableX]`.
+
+Results are printed and written to benchmarks/results.json. Absolute
+latencies are CPU-container values (single thread); the retrieval QUALITY
+relations and the I/O-op accounting are the paper-comparable quantities —
+EXPERIMENTS.md maps each table to the paper's claims.
+"""
+
+import argparse
+import importlib
+import json
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MODULES = [
+    "benchmarks.table1_inmemory",
+    "benchmarks.table2_graphnav",
+    "benchmarks.table4_ondisk",
+    "benchmarks.table5_repllama",
+    "benchmarks.table6_sparse_models",
+    "benchmarks.table7_quant",
+    "benchmarks.table8_ablation",
+    "benchmarks.fig2_nclusters",
+    "benchmarks.kernelbench",
+    "benchmarks.roofline_report",
+]
+
+
+def _print_rows(res):
+    rows = res.get("rows") or []
+    for r in rows:
+        print("   ", json.dumps(r))
+    for c in res.get("curves", []):
+        print(f"    N={c['N']} store={c['store']}")
+        for p in c["points"]:
+            print("       ", json.dumps(p))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    results = {}
+    failures = 0
+    for modname in MODULES:
+        short = modname.split(".")[-1]
+        if args.only and args.only not in short:
+            continue
+        print(f"\n=== {short} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            res = mod.run()
+            res["seconds"] = round(time.time() - t0, 1)
+            results[short] = res
+            _print_rows(res)
+            print(f"    ({res['seconds']}s)", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            results[short] = {"error": traceback.format_exc()[-1500:]}
+    out = os.path.join(os.path.dirname(__file__), "results.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nwrote {out}; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

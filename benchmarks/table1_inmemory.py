@@ -1,0 +1,85 @@
+"""Paper Table 1: cluster-based in-memory selective retrieval, with and
+without quantization. Baselines: full fusion (oracle), IVF top-p%, CDFS,
+sparse-only, dense-only."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import baselines as bl
+from repro.core import clusd as cl
+from repro.core import quant as qt
+from repro.core import sparse as sparse_lib
+from repro.data import mrr_at, recall_at
+
+
+def run():
+    cfg, corpus, index, params, (feats, labels), hist = C.trained_index()
+    index.lstm_params = params
+    qs = C.test_queries(corpus)
+    rows = []
+
+    def add(name, ids, lat, pct_d):
+        rows.append({"method": name, "%D": round(pct_d, 4),
+                     **C.quality(ids, qs), "latency_ms": round(lat, 1)})
+
+    # dense only / sparse only / oracle fusion
+    (ids, _), lat = C.timed(
+        jax.jit(lambda q: cl.full_dense_topk(index.embeddings, q, 100)),
+        qs.q_dense)
+    add("D (full dense)", ids, lat, 100.0)
+    (sid, ss), lat = C.timed(
+        jax.jit(lambda t, w: sparse_lib.sparse_retrieve_topk(
+            index.sparse_index, t, w, cfg.k_sparse)),
+        qs.q_terms, qs.q_weights)
+    add("S (sparse)", sid, lat, 0.0)
+    oracle = dataclasses.replace(cfg, theta=-1.0,
+                                 max_selected=cfg.n_candidates)
+    (ids, _, diag), lat = C.timed(
+        jax.jit(lambda qd, qt_, qw: cl.retrieve(oracle, index, qd, qt_, qw,
+                                                selector_params=params)),
+        qs.q_dense, qs.q_terms, qs.q_weights)
+    add("S + D-top32cl (upper bound)", ids, lat,
+        100 * float(diag["frac_docs_scanned"].mean()))
+
+    # IVF p%
+    for pct in (10, 5, 2):
+        n_probe = max(1, int(cfg.n_clusters * pct / 100))
+        (ids, _, _), lat = C.timed(
+            jax.jit(lambda qd, qt_, qw: bl.ivf_retrieve(
+                cfg, index, qd, qt_, qw, n_probe)),
+            qs.q_dense, qs.q_terms, qs.q_weights)
+        add(f"S + D-IVF {pct}%", ids, lat, pct)
+
+    # CDFS
+    (ids, _, d), lat = C.timed(
+        jax.jit(lambda qd, qt_, qw: bl.cdfs_retrieve(cfg, index, qd, qt_, qw)),
+        qs.q_dense, qs.q_terms, qs.q_weights)
+    cap_frac = cfg.cluster_cap / index.n_docs
+    add("S + CDFS", ids, lat, 100 * float(d["n_selected"].mean()) * cap_frac)
+
+    # CluSD
+    (ids, _, diag), lat = C.timed(
+        jax.jit(lambda qd, qt_, qw: cl.retrieve(cfg, index, qd, qt_, qw,
+                                                selector_params=params)),
+        qs.q_dense, qs.q_terms, qs.q_weights)
+    add("S + CluSD", ids, lat, 100 * float(diag["frac_docs_scanned"].mean()))
+    avg_sel = float(diag["n_selected"].mean())
+
+    # quantized section (OPQ analogue)
+    pq = qt.train_pq(jax.random.key(3), corpus.embeddings, nsub=8, iters=6)
+    index.quantizer = pq
+    (ids, _, diag), lat = C.timed(
+        jax.jit(lambda qd, qt_, qw: cl.retrieve(cfg, index, qd, qt_, qw,
+                                                selector_params=params)),
+        qs.q_dense, qs.q_terms, qs.q_weights)
+    add("S + CluSD (PQ m=8)", ids, lat,
+        100 * float(diag["frac_docs_scanned"].mean()))
+    index.quantizer = None
+
+    return {"table": "table1_inmemory", "avg_clusters_selected": avg_sel,
+            "lstm_loss": [round(hist[0], 4), round(hist[-1], 4)],
+            "rows": rows}

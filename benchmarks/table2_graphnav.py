@@ -1,0 +1,41 @@
+"""Paper Table 2: CluSD vs proximity-graph navigation (LADR-like) under a
+matched compute budget, including the extra index-space accounting that is
+CluSD's headline advantage."""
+
+import jax
+
+from benchmarks import common as C
+from repro.core import baselines as bl
+from repro.core import clusd as cl
+
+
+def run():
+    cfg, corpus, index, params, _, _ = C.trained_index()
+    index.lstm_params = params
+    qs = C.test_queries(corpus)
+    D, dim = index.embeddings.shape
+    rows = []
+
+    knn = bl.build_doc_knn(index, n_neighbors=8, probe_clusters=3)
+    for name, kw in [("S + LADR(default)", dict(n_seeds=64, depth=3,
+                                                budget=512)),
+                     ("S + LADR(fast)", dict(n_seeds=16, depth=2,
+                                             budget=256))]:
+        (ids, _, d), lat = C.timed(
+            jax.jit(lambda qd, qt, qw: bl.ladr_retrieve(
+                cfg, index, knn, qd, qt, qw, **kw)),
+            qs.q_dense, qs.q_terms, qs.q_weights)
+        rows.append({"method": name, **C.quality(ids, qs),
+                     "latency_ms": round(lat, 1),
+                     "extra_space_mb": round(D * knn.shape[1] * 4 / 2**20, 2)})
+
+    (ids, _, diag), lat = C.timed(
+        jax.jit(lambda qd, qt, qw: cl.retrieve(cfg, index, qd, qt, qw,
+                                               selector_params=params)),
+        qs.q_dense, qs.q_terms, qs.q_weights)
+    clusd_space = (index.neighbor_ids.size * 8
+                   + index.centroids.size * 4) / 2**20
+    rows.append({"method": "S + CluSD", **C.quality(ids, qs),
+                 "latency_ms": round(lat, 1),
+                 "extra_space_mb": round(float(clusd_space), 2)})
+    return {"table": "table2_graphnav", "rows": rows}

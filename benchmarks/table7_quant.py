@@ -1,0 +1,36 @@
+"""Paper Table 7: CluSD with different quantizers (PQ / OPQ-rotated PQ /
+coarser PQ — DistillVQ & JPQ stand-ins) vs IVF 2% under each quantizer."""
+
+import jax
+
+from benchmarks import common as C
+from repro.core import baselines as bl
+from repro.core import clusd as cl
+from repro.core import quant as qt
+
+
+def run():
+    cfg, corpus, index, params, _, _ = C.trained_index()
+    index.lstm_params = params
+    qs = C.test_queries(corpus, n=192)
+    rows = []
+    for nsub, rotate, tag in [(8, False, "PQ m=8"),
+                              (8, True, "OPQ m=8 (DistillVQ-like)"),
+                              (4, False, "PQ m=4 (JPQ-like)")]:
+        pq = qt.train_pq(jax.random.key(3), corpus.embeddings, nsub=nsub,
+                         iters=6, rotate=rotate)
+        index.quantizer = pq
+        n_probe = max(1, int(cfg.n_clusters * 0.02))
+        ids_i, _, _ = jax.jit(lambda qd, qt_, qw: bl.ivf_retrieve(
+            cfg, index, qd, qt_, qw, n_probe))(
+            qs.q_dense, qs.q_terms, qs.q_weights)
+        ids_c, _, _ = jax.jit(lambda qd, qt_, qw: cl.retrieve(
+            cfg, index, qd, qt_, qw, selector_params=params))(
+            qs.q_dense, qs.q_terms, qs.q_weights)
+        rows.append({"quantizer": tag,
+                     "space_mb": round(pq.space_bytes() / 2**20, 2),
+                     "S+IVF2%_MRR@10": C.quality(ids_i, qs)["MRR@10"],
+                     "S+CluSD_MRR@10": C.quality(ids_c, qs)["MRR@10"],
+                     "S+CluSD_R@100": C.quality(ids_c, qs)["R@100"]})
+    index.quantizer = None
+    return {"table": "table7_quant", "rows": rows}

@@ -1,0 +1,134 @@
+"""Paper Table 8: design options. Stage-I ordering (SortByDist vs
+SortByOverlap), Stage-II selector (pointwise-MLP ~ XGBoost, RNN, LSTM), and
+LSTM feature-group ablations, all at matched average-#selected (3 and 5)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import clusd as cl
+from repro.core import train_lstm as tl
+from repro.core.lstm import SELECTORS
+from repro.data import mrr_at, recall_at
+
+
+def _eval_at_targets(cfg, index, qs, params, selector, stage1, feat_mask,
+                     targets=(3, 5)):
+    """Evaluate retrieval quality with theta tuned to select ~target."""
+    out = {}
+    # features for tuning theta on the test queries
+    from repro.core import sparse as sp
+    sid, ss = sp.sparse_retrieve_topk(index.sparse_index, qs.q_terms,
+                                      qs.q_weights, cfg.k_sparse)
+    sel = cl.select_clusters(cfg, index, qs.q_dense, sid, ss,
+                             selector_params=None, stage1=stage1)
+    feats = np.asarray(sel["feats"]) * feat_mask
+    _, apply = SELECTORS[selector]
+    probs = np.asarray(apply(params, jnp.asarray(feats)))
+    for tgt in targets:
+        lo, hi = 0.0, 1.0
+        for _ in range(30):
+            mid = (lo + hi) / 2
+            if (probs >= mid).sum(1).mean() > tgt:
+                lo = mid
+            else:
+                hi = mid
+        theta = (lo + hi) / 2
+        cfg_t = dataclasses.replace(cfg, theta=float(theta),
+                                    max_selected=max(targets) * 4)
+
+        def retr(qd, qt, qw):
+            sid2, ss2 = sp.sparse_retrieve_topk(index.sparse_index, qt, qw,
+                                                cfg.k_sparse)
+            sel2 = cl.select_clusters(cfg_t, index, qd, sid2, ss2,
+                                      selector_params=None, stage1=stage1)
+            f2 = sel2["feats"] * jnp.asarray(feat_mask)
+            p2 = apply(params, f2)
+            picked = p2 >= cfg_t.theta
+            masked = jnp.where(picked, p2, -1.0)
+            tp, ti = jax.lax.top_k(masked, cfg_t.max_selected)
+            m = tp >= 0.0
+            si = jnp.take_along_axis(sel2["cand"], ti, axis=1)
+            did, ds, dm = cl.score_selected(index, qd, si, m)
+            from repro.core import fusion
+            return fusion.fuse_topk(sid2, ss2, did, jnp.where(dm, ds, 0.0),
+                                    dm, index.n_docs, cfg.alpha, 100)
+
+        ids, _ = jax.jit(retr)(qs.q_dense, qs.q_terms, qs.q_weights)
+        out[tgt] = {"MRR@10": round(mrr_at(np.asarray(ids), qs.rel_doc), 4),
+                    "R@100": round(recall_at(np.asarray(ids), qs.rel_doc,
+                                             100), 4)}
+    return out
+
+
+def _stage1_only(cfg, index, qs, stage1, targets=(3, 5)):
+    from repro.core import sparse as sp
+    from repro.core import fusion
+    out = {}
+    for tgt in targets:
+        def retr(qd, qt, qw):
+            sid, ss = sp.sparse_retrieve_topk(index.sparse_index, qt, qw,
+                                              cfg.k_sparse)
+            sel = cl.select_clusters(cfg, index, qd, sid, ss,
+                                     selector_params=None, stage1=stage1)
+            si = sel["cand"][:, :tgt]
+            m = jnp.ones_like(si, bool)
+            did, ds, dm = cl.score_selected(index, qd, si, m)
+            return fusion.fuse_topk(sid, ss, did, jnp.where(dm, ds, 0.0), dm,
+                                    index.n_docs, cfg.alpha, 100)
+        ids, _ = jax.jit(retr)(qs.q_dense, qs.q_terms, qs.q_weights)
+        out[tgt] = {"MRR@10": round(mrr_at(np.asarray(ids), qs.rel_doc), 4),
+                    "R@100": round(recall_at(np.asarray(ids), qs.rel_doc,
+                                             100), 4)}
+    return out
+
+
+def run():
+    cfg, corpus, index, _, (feats, labels), _ = C.trained_index()
+    qs = C.test_queries(corpus, n=192)
+    F = feats.shape[-1]
+    rows = []
+
+    # ---- stage 1 only ----
+    for stage1 in ("dist", "overlap"):
+        r = _stage1_only(cfg, index, qs, stage1)
+        rows.append({"option": f"StageI={'SortByDist' if stage1=='dist' else 'SortByOverlap'} (no StageII)",
+                     **{f"@{t}": v for t, v in r.items()}})
+
+    # ---- stage 2 model options (paper: stage1 = SortByDist here; train
+    # the selectors on SortByDist candidate sequences to match) ----
+    from repro.data import synth_queries
+    train_q = synth_queries(1, corpus, cfg.train_queries)
+    _, feats_d, labels_d = tl.make_labels(cfg, index, train_q.q_dense,
+                                          train_q.q_terms, train_q.q_weights,
+                                          stage1="dist")
+    feats_d, labels_d = np.asarray(feats_d), np.asarray(labels_d)
+    ones = np.ones((1, 1, F), np.float32)
+    for sel_name, tag in [("mlp", "pointwise-MLP (XGBoost-like)"),
+                          ("rnn", "RNN"), ("lstm", "LSTM")]:
+        params, _ = tl.train_selector(cfg, jax.random.key(4), feats_d,
+                                      labels_d, selector=sel_name, lr=5e-3)
+        r = _eval_at_targets(cfg, index, qs, params, sel_name, "dist", ones)
+        rows.append({"option": f"StageII={tag}",
+                     **{f"@{t}": v for t, v in r.items()}})
+
+    # ---- feature-group ablations (stage1 = SortByOverlap, LSTM) ----
+    u, v = cfg.u_bins, cfg.v_bins
+    masks = {
+        "w/o inter-cluster dist": np.concatenate(
+            [np.ones(1), np.zeros(u), np.ones(2 * v)]).astype(np.float32),
+        "w/o S-C overlap": np.concatenate(
+            [np.ones(1 + u), np.zeros(2 * v)]).astype(np.float32),
+        "default (all features)": np.ones(F, np.float32),
+    }
+    for tag, mask in masks.items():
+        m = mask[None, None, :]
+        params, _ = tl.train_selector(cfg, jax.random.key(5), feats * m,
+                                      labels, selector="lstm", lr=5e-3)
+        r = _eval_at_targets(cfg, index, qs, params, "lstm", "overlap", m)
+        rows.append({"option": f"LSTM {tag}",
+                     **{f"@{t}": v_ for t, v_ in r.items()}})
+    return {"table": "table8_ablation", "rows": rows}

@@ -1,0 +1,21 @@
+"""CluSD serving demo: builds the index, trains the selector, serves batched
+queries with latency percentiles, and exercises the on-disk block-I/O path.
+
+  PYTHONPATH=src python examples/serve_retrieval.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    from repro.launch import serve as serve_mod
+    sys.argv = ["serve", "--docs", "12000", "--clusters", "192",
+                "--queries", "128", "--epochs", "30", "--ondisk"]
+    return serve_mod.main()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

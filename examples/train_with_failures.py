@@ -1,0 +1,26 @@
+"""Fault-tolerant LM training demo: trains a reduced qwen2-1.5b for 60 steps
+with failures injected at steps 22 and 41; the restartable driver restores
+from the latest async checkpoint and finishes the run.
+
+  PYTHONPATH=src python examples/train_with_failures.py
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    from repro.launch import train as train_mod
+    ckpt = tempfile.mkdtemp(prefix="repro_ft_")
+    sys.argv = ["train", "--arch", "qwen2-1.5b", "--variant", "smoke",
+                "--steps", "60", "--batch", "4", "--seq", "64",
+                "--ckpt-dir", ckpt, "--ckpt-every", "10",
+                "--fail-at", "22", "41"]
+    return train_mod.main()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,2 @@
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.roofline import roofline_terms, model_flops

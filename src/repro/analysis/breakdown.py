@@ -1,0 +1,91 @@
+"""Per-collective breakdown of a dry-run cell: which ops move the bytes
+(trip-count aware). The §Perf hypothesis loop starts here.
+
+Usage:
+  PYTHONPATH=src python -m repro.analysis.breakdown --arch arctic-480b \
+      --shape train_4k [--multi] [--set moe_impl=shard_map] [--top 15]
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import Counter
+
+import jax
+
+from repro.analysis import hlo as H
+
+
+def collective_breakdown(hlo_text, n_devices, top=15):
+    comps = H._split_computations(hlo_text)
+    entry = H._entry_name(hlo_text, comps)
+    acc = Counter()
+
+    def walk(name, mult):
+        for line in comps.get(name, ()):
+            got = H._line_collective(line, n_devices)
+            if got:
+                kind, raw, wire = got
+                m = re.search(
+                    r"=\s*((?:\([^=]*?\))|(?:\S+))\s+(all-\w+|reduce-scatter|"
+                    r"collective-permute)", line)
+                shape = m.group(1)[:70] if m else "?"
+                meta = re.search(r'op_name="([^"]*)"', line)
+                op = meta.group(1)[-70:] if meta else ""
+                acc[(kind, shape, op)] += wire * mult
+            cm = re.search(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)", line)
+            if cm and "while" in line:
+                walk(cm.group(2),
+                     mult * H._trip_count(comps.get(cm.group(1), ())))
+            else:
+                cm2 = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", line)
+                if cm2 and re.search(r"\s(call|conditional)\(", line):
+                    walk(cm2.group(1), mult)
+
+    walk(entry, 1)
+    return acc.most_common(top)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--set", action="append", default=[],
+                    help="config overrides key=value")
+    args = ap.parse_args()
+
+    import dataclasses
+    from repro.configs import get_config
+    from repro.configs.shapes import shapes_for
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+    from repro.models.sharding import rules_ctx
+
+    mesh = make_production_mesh(multi_pod=args.multi)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=")
+        overrides[k] = (int(v) if v.isdigit()
+                        else v == "true" if v in ("true", "false") else v)
+    cfg0 = get_config(args.arch)
+    shape = shapes_for(cfg0.family)[args.shape]
+    cell = build_cell(args.arch, shape, mesh, multi_pod=args.multi,
+                      overrides=overrides)
+    with rules_ctx(cell.rules, mesh=mesh, pod_dp=args.multi):
+        comp = jax.jit(cell.fn, in_shardings=cell.in_shardings).lower(
+            *cell.args).compile()
+    txt = comp.as_text()
+    n = mesh.devices.size
+    total = H.collective_bytes(txt, n)
+    print(f"total wire {total.get('wire', 0)/2**30:.2f} GiB/device "
+          f"({total.get('count', 0):.0f} collective sites)")
+    for (kind, shape_s, op), wire in collective_breakdown(txt, n, args.top):
+        print(f"{wire/2**30:9.2f} GiB  {kind:18s} {shape_s:45s} {op}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,297 @@
+"""HLO-text collective accounting.
+
+`cost_analysis()` has no collective figures, so we parse the compiled
+module's text: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op contributes its operand/output bytes. Collectives
+inside `while` bodies (lax.scan over layers!) execute trip-count times, so
+we recover trip counts from the loop-condition constant and multiply.
+
+Reported per collective ring model (per-device wire bytes):
+  all-gather:        (g-1)/g * out_bytes
+  reduce-scatter:    (g-1)/g * in_bytes
+  all-reduce:        2 (g-1)/g * bytes          (RS + AG)
+  all-to-all:        (g-1)/g * bytes
+  collective-permute: bytes
+plus the raw operand-byte sum (`raw_bytes`) per the assignment formula.
+"""
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(?:^|\s)(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(txt):
+    """Sum byte sizes of all shapes in a type string like f32[8,128]."""
+    total = 0
+    for m in _SHAPE_RE.finditer(txt):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+
+def _split_computations(hlo_text):
+    """Return {name: [lines]} for every computation in the module."""
+    comps = {}
+    cur_name, cur_lines = None, []
+    for line in hlo_text.splitlines():
+        if not line.startswith(" "):
+            m = _HEADER_RE.match(line.strip())
+            if m:
+                if cur_name is not None:
+                    comps[cur_name] = cur_lines
+                cur_name, cur_lines = m.group(1), []
+                continue
+            if line.strip() == "}":
+                if cur_name is not None:
+                    comps[cur_name] = cur_lines
+                cur_name, cur_lines = None, []
+                continue
+        if cur_name is not None:
+            cur_lines.append(line.strip())
+    if cur_name is not None:
+        comps[cur_name] = cur_lines
+    return comps
+
+
+def _group_size(line, default):
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def _line_collective(line, n_devices):
+    """Returns (kind, raw_bytes, wire_bytes) or None.
+
+    Scheduled HLO format: `%name = TYPE opcode(%operand, ...), attrs...`
+    Operand references carry no type, so sizes derive from the output TYPE
+    (exact for all-gather/all-reduce/all-to-all/permute; reduce-scatter
+    input = output * group).
+    """
+    _, eq, rhs = line.partition("=")
+    if not eq:
+        return None
+    m = _COLL_RE.search(rhs)
+    if m is None:
+        return None
+    kind, suffix = m.group(1), m.group(2)
+    if suffix == "-done":
+        return None  # counted at -start
+    out_b = _shape_bytes(rhs[:m.start()])
+    g = _group_size(line, n_devices)
+    ring = (g - 1) / max(g, 1)
+    if kind == "all-gather":
+        raw, wire = out_b, ring * out_b
+    elif kind == "reduce-scatter":
+        in_b = out_b * g
+        raw, wire = in_b, ring * in_b
+    elif kind == "all-reduce":
+        raw, wire = out_b, 2 * ring * out_b
+    elif kind == "all-to-all":
+        raw, wire = out_b, ring * out_b
+    else:  # collective-permute
+        raw, wire = out_b, out_b
+    return kind, raw, wire
+
+
+_WHILE_RE = re.compile(r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:call|conditional)\(.*?to_apply=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _trip_count(cond_lines):
+    """Heuristic: the compare constant in the loop condition."""
+    consts = []
+    for line in cond_lines:
+        if "compare" in line or "constant" in line:
+            for m in _CONST_RE.finditer(line):
+                consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _comp_bytes(name, comps, n_devices, memo):
+    if name in memo:
+        return memo[name]
+    memo[name] = defaultdict(float)  # cycle guard
+    totals = defaultdict(float)
+    for line in comps.get(name, ()):
+        got = _line_collective(line, n_devices)
+        if got:
+            kind, raw, wire = got
+            totals[f"{kind}_raw"] += raw
+            totals[f"{kind}_wire"] += wire
+            totals["raw"] += raw
+            totals["wire"] += wire
+            totals["count"] += 1
+        wm = _WHILE_RE.search(line)
+        if wm:
+            cond, body = wm.group(1), wm.group(2)
+            trips = _trip_count(comps.get(cond, ()))
+            sub = _comp_bytes(body, comps, n_devices, memo)
+            for k, v in sub.items():
+                totals[k] += trips * v
+        cm = _CALL_RE.search(line)
+        if cm:
+            sub = _comp_bytes(cm.group(1), comps, n_devices, memo)
+            for k, v in sub.items():
+                totals[k] += v
+        # fusions can't contain collectives; skip
+    memo[name] = totals
+    return totals
+
+
+def _entry_name(hlo_text, comps):
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                return m.group(1)
+    return max(comps, key=lambda k: len(comps[k])) if comps else ""
+
+
+def collective_bytes(hlo_text, n_devices):
+    """Aggregate collective bytes for the entry computation (trip-count
+    aware). Returns dict with per-kind raw/wire byte totals (per device)."""
+    comps = _split_computations(hlo_text)
+    memo = {}
+    totals = _comp_bytes(_entry_name(hlo_text, comps), comps, n_devices, memo)
+    return dict(totals)
+
+
+# ---------------------------------------------------------------------------
+# trip-count-aware FLOPs + HBM-byte estimation
+# (XLA's compiled.cost_analysis() counts while bodies ONCE — verified — so a
+#  scan-over-layers model would be undercounted by n_layers without this.)
+# ---------------------------------------------------------------------------
+
+_OP_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_ARG_RE = re.compile(r"%([\w.\-]+)")
+_FIRST_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# ops whose operands/outputs are views / no real HBM traffic
+_VIEW_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "copy", "after-all", "partition-id", "replica-id", "iota"}
+
+
+def _parse_ops(lines):
+    """Symbol table {name: type_str} + op list [(name, type, opcode, rest)]."""
+    table, ops = {}, []
+    for line in lines:
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, typ, opcode, rest = m.groups()
+        table[name] = typ
+        ops.append((name, typ, opcode, rest))
+    return table, ops
+
+
+def _shape_elems(typ):
+    m = _FIRST_SHAPE_RE.search(typ)
+    if not m:
+        return 0, ""
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    n = 1
+    for d in dims:
+        n *= d
+    return n, m.group(1)
+
+
+def _dot_flops(typ, rest, table):
+    out_elems, _ = _shape_elems(typ)
+    args = _ARG_RE.findall(rest.split("lhs_contracting_dims")[0])
+    if not args:
+        return 0.0
+    lhs_typ = table.get(args[0], "")
+    m = _FIRST_SHAPE_RE.search(lhs_typ)
+    dm = _DIMS_RE.search(rest)
+    if not m or not dm:
+        return 0.0
+    lhs_dims = [int(d) for d in m.group(2).split(",") if d]
+    contract = 1
+    for i in dm.group(1).split(","):
+        if i != "" and int(i) < len(lhs_dims):
+            contract *= lhs_dims[int(i)]
+    return 2.0 * out_elems * contract
+
+
+def _comp_cost(name, comps, memo):
+    """Returns (flops, hbm_bytes) for one computation, recursing into
+    while bodies (x trip count) and fusion/call subcomputations (flops only
+    for fusion internals; fusion bytes are counted at the call site)."""
+    if name in memo:
+        return memo[name]
+    memo[name] = (0.0, 0.0)  # cycle guard
+    lines = comps.get(name, ())
+    table, ops = _parse_ops(lines)
+    flops, hbm = 0.0, 0.0
+    for op_name, typ, opcode, rest in ops:
+        if opcode == "dot":
+            flops += _dot_flops(typ, rest, table)
+        if opcode == "while":
+            wm = _WHILE_RE.search(f"while({rest}")
+            # rest starts after "while(" already; reconstruct minimal
+            cm = re.search(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)", rest)
+            if cm:
+                trips = _trip_count(comps.get(cm.group(1), ()))
+                f, b = _comp_cost(cm.group(2), comps, memo)
+                flops += trips * f
+                hbm += trips * b
+            continue
+        cm = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", rest)
+        if cm and opcode in ("fusion", "call", "conditional"):
+            f, _ = _comp_cost(cm.group(1), comps, memo)
+            flops += f
+        # HBM model: output + operand bytes for every materializing op
+        if opcode in _VIEW_OPS:
+            continue
+        hbm += _shape_bytes(typ)
+        arg_str = rest.split(", calls=")[0].split(", to_apply=")[0]
+        arg_str = arg_str.split("metadata=")[0]
+        depth, end = 0, len(arg_str)
+        for i, ch in enumerate(arg_str):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth < 0:
+                    end = i
+                    break
+        for a in _ARG_RE.findall(arg_str[:end]):
+            hbm += _shape_bytes(table.get(a, ""))
+    memo[name] = (flops, hbm)
+    return memo[name]
+
+
+def hlo_cost(hlo_text):
+    """Trip-count-aware per-device (flops, hbm_bytes) from scheduled HLO."""
+    comps = _split_computations(hlo_text)
+    memo = {}
+    flops, hbm = _comp_cost(_entry_name(hlo_text, comps), comps, memo)
+    return {"flops": flops, "hbm_bytes": hbm}

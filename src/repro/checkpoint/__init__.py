@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import (
+    save_checkpoint, restore_checkpoint, latest_step, CheckpointManager)

@@ -1,0 +1,154 @@
+"""Sharded npz checkpointing with async save and elastic restore.
+
+Layout:
+  <dir>/step_<N>/manifest.json        # treedef paths, shapes, dtypes, shard map
+  <dir>/step_<N>/shard_<i>.npz        # leaf arrays, chunked ~256MB per shard
+  <dir>/step_<N>/.complete            # commit marker (atomic rename)
+
+Restore accepts an optional sharding pytree so a checkpoint written on one
+mesh can be loaded onto a different mesh (elastic scaling): arrays are
+device_put with the *new* shardings. On real multi-host TPU each host would
+write only its addressable shards; here the process owns all shards.
+"""
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+_SHARD_BYTES = 256 * 1024 * 1024
+
+
+def _leaf_paths(tree):
+    paths = []
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        paths.append((jax.tree_util.keystr(path), leaf))
+    return paths
+
+
+def save_checkpoint(ckpt_dir, step, tree, *, async_save=False, extra=None):
+    """Write `tree` under <ckpt_dir>/step_<step>. Returns join handle or None."""
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = final + ".tmp"
+    # Pull to host before a potential async handoff so the caller can donate.
+    leaves = _leaf_paths(tree)
+    host = [(p, np.asarray(x)) for p, x in leaves]
+
+    def _write():
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": int(step), "leaves": [], "extra": extra or {}}
+        shard, shard_bytes, shard_id = {}, 0, 0
+
+        def flush():
+            nonlocal shard, shard_bytes, shard_id
+            if shard:
+                np.savez(os.path.join(tmp, f"shard_{shard_id}.npz"), **shard)
+                shard, shard_bytes = {}, 0
+                shard_id += 1
+
+        for i, (path, arr) in enumerate(host):
+            key = f"leaf_{i}"
+            manifest["leaves"].append({
+                "path": path, "key": key, "shard": shard_id,
+                "shape": list(arr.shape), "dtype": str(arr.dtype)})
+            shard[key] = arr
+            shard_bytes += arr.nbytes
+            if shard_bytes >= _SHARD_BYTES:
+                flush()
+        flush()
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        open(os.path.join(tmp, ".complete"), "w").close()
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_save:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(ckpt_dir):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, d, ".complete")):
+                steps.append(int(d.split("_", 1)[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir, step, target_tree, shardings=None):
+    """Restore into the structure of target_tree (elastic: new shardings ok)."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_shard = {}
+    for leaf in manifest["leaves"]:
+        by_shard.setdefault(leaf["shard"], []).append(leaf)
+    arrays = {}
+    for shard_id, leaves in by_shard.items():
+        with np.load(os.path.join(d, f"shard_{shard_id}.npz")) as z:
+            for leaf in leaves:
+                arrays[leaf["path"]] = z[leaf["key"]]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    shard_flat = (treedef.flatten_up_to(shardings) if shardings is not None
+                  else [None] * len(flat))
+    out = []
+    for (path, ref), shd in zip(flat, shard_flat):
+        key = jax.tree_util.keystr(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key].astype(ref.dtype) if hasattr(ref, "dtype") else arrays[key]
+        out.append(jax.device_put(arr, shd) if shd is not None else arr)
+    return treedef.unflatten(out), manifest.get("extra", {})
+
+
+class CheckpointManager:
+    """Keeps at most `keep` checkpoints; async save with join-on-next-save."""
+
+    def __init__(self, ckpt_dir, keep=3, async_save=True):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.async_save = async_save
+        self._pending = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save(self, step, tree, extra=None):
+        if self._pending is not None:
+            self._pending.join()
+        self._gc()  # previous save is committed now
+        self._pending = save_checkpoint(
+            self.dir, step, tree, async_save=self.async_save, extra=extra)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_", 1)[1]) for d in os.listdir(self.dir)
+            if d.startswith("step_") and not d.endswith(".tmp")
+            and os.path.exists(os.path.join(self.dir, d, ".complete")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    def restore_latest(self, target_tree, shardings=None):
+        self.wait()
+        step = latest_step(self.dir)
+        if step is None:
+            return None, None, None
+        tree, extra = restore_checkpoint(self.dir, step, target_tree, shardings)
+        return step, tree, extra

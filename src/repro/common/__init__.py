@@ -1,0 +1,2 @@
+from repro.common.hw import TPU_V5E
+from repro.common import tree

@@ -1,0 +1,27 @@
+"""Hardware constants for the roofline model (target: TPU v5e)."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float     # per chip, FLOP/s
+    hbm_bandwidth: float       # per chip, B/s
+    hbm_bytes: float           # per chip capacity
+    ici_link_bandwidth: float  # per link per direction, B/s
+    ici_links: int             # torus links per chip (2D torus on v5e: 4)
+    vmem_bytes: float          # VMEM per core
+    mxu_dim: int               # systolic array tile (128x128)
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    hbm_bytes=16 * 1024**3,
+    ici_link_bandwidth=50e9,
+    ici_links=4,
+    vmem_bytes=128 * 1024**2,
+    mxu_dim=128,
+)

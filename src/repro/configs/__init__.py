@@ -1,0 +1,60 @@
+"""Architecture registry: `get_config("<arch-id>")` / `--arch <id>` CLI.
+
+Each module exposes `full()` (the exact assigned config) and `smoke()`
+(a reduced same-family config used by CPU tests).
+"""
+
+import importlib
+
+from repro.configs.base import (
+    TransformerConfig, NequIPConfig, RecsysConfig, CluSDConfig, TrainConfig)
+from repro.configs.shapes import (
+    ShapeSpec, shapes_for, cell_is_skipped, FAMILY_SHAPES)
+
+# arch-id -> module name
+ARCH_REGISTRY = {
+    "arctic-480b": "arctic_480b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "deepseek-67b": "deepseek_67b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "nequip": "nequip",
+    "wide-deep": "wide_deep",
+    "din": "din",
+    "deepfm": "deepfm",
+    "dlrm-mlperf": "dlrm_mlperf",
+    # the paper's own retrieval system
+    "clusd-msmarco": "clusd_msmarco",
+}
+
+ASSIGNED_ARCHS = [a for a in ARCH_REGISTRY if a != "clusd-msmarco"]
+
+
+def _module(arch: str):
+    if arch not in ARCH_REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCH_REGISTRY)}")
+    return importlib.import_module(f"repro.configs.{ARCH_REGISTRY[arch]}")
+
+
+def get_config(arch: str, variant: str = "full"):
+    mod = _module(arch)
+    if not hasattr(mod, variant):
+        raise KeyError(f"arch {arch!r} has no variant {variant!r}")
+    return getattr(mod, variant)()
+
+
+def list_archs():
+    return list(ARCH_REGISTRY)
+
+
+def cells(include_skipped=True):
+    """All (arch, shape_spec, skip_reason) dry-run cells."""
+    out = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg.family).values():
+            reason = cell_is_skipped(cfg, shape)
+            if reason and not include_skipped:
+                continue
+            out.append((arch, shape, reason))
+    return out

@@ -1,0 +1,1 @@
+from repro.core.clusd import CluSDIndex, build_index, retrieve, full_dense_topk

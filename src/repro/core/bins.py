@@ -1,0 +1,38 @@
+"""Position bins over sparse top-k results and the P/Q cluster-overlap
+features (paper §2.2): P(C_i, B_j) = |C_i ∩ B_j| (count overlap) and
+Q(C_i, B_j) = mean sparse score of docs in C_i ∩ B_j (score overlap)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rank_bin_ids(bins, k):
+    """Map rank position 0..k-1 to bin id given cumulative edges, e.g.
+    (10, 25, 50, 100, 200, 500, 1000) -> 7 bins."""
+    ranks = np.arange(k)
+    edges = np.asarray(bins)
+    return jnp.asarray(np.searchsorted(edges, ranks, side="right"), jnp.int32)
+
+
+def overlap_features(top_ids, top_scores, doc_cluster, n_clusters, bin_ids, v):
+    """P and Q features for ALL clusters.
+
+    top_ids: (B, k) sparse top-k doc ids; top_scores: (B, k) (min-max
+    normalized upstream if desired); doc_cluster: (D,) cluster of each doc;
+    bin_ids: (k,) bin of each rank. Returns P, Q: (B, N, v).
+    """
+    B, k = top_ids.shape
+    c_of = jnp.take(doc_cluster, top_ids, axis=0)          # (B, k) — gather
+    slot = c_of * v + bin_ids[None, :]                      # (B, k)
+
+    def one(slots, scores):
+        cnt = jax.ops.segment_sum(jnp.ones((k,), jnp.float32), slots,
+                                  num_segments=n_clusters * v)
+        ssum = jax.ops.segment_sum(scores, slots, num_segments=n_clusters * v)
+        P = cnt.reshape(n_clusters, v)
+        Q = (ssum / jnp.maximum(cnt, 1.0)).reshape(n_clusters, v)
+        return P, Q
+
+    P, Q = jax.vmap(one)(slot, top_scores)
+    return P, Q

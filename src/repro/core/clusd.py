@@ -1,0 +1,155 @@
+"""CluSD end-to-end: index build + online inference (paper §2.1 steps 1-3).
+
+Index artifacts (all static-shape, device-resident or disk-backed):
+  centroids (N, dim) · cluster_docs (N, cap) · doc_cluster (D,)
+  neighbor_ids/sims (N, m) · sparse inverted index · LSTM params
+
+Online retrieve (batched over queries, jit-able end to end):
+  1. sparse retrieval -> top-k ids/scores
+  2. Stage I: P/Q overlap features -> multikey sort -> top-n candidates
+     Stage II: LSTM over candidate sequence -> f(C_i) >= theta -> selected
+     clusters (static budget max_selected, mask-padded)
+  3. gather selected cluster blocks -> dense dot scores -> min-max fusion
+"""
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bins as bins_lib
+from repro.core import features as feat_lib
+from repro.core import fusion as fusion_lib
+from repro.core import kmeans as km
+from repro.core import sparse as sparse_lib
+from repro.core import stage1 as stage1_lib
+from repro.core.lstm import SELECTORS
+
+
+@dataclasses.dataclass
+class CluSDIndex:
+    centroids: Any          # (N, dim)
+    cluster_docs: Any       # (N, cap) int32, -1 pad
+    doc_cluster: Any        # (D,) int32
+    neighbor_ids: Any       # (N, m)
+    neighbor_sims: Any      # (N, m)
+    embeddings: Any         # (D, dim) float  (or None when on disk / quantized)
+    sparse_index: Any       # SparseIndex
+    lstm_params: Any = None
+    quantizer: Any = None   # optional PQ/OPQ (core/quant.py)
+    bin_ids: Any = None     # (k_sparse,) rank -> bin id
+
+    @property
+    def n_docs(self):
+        return int(self.doc_cluster.shape[0])
+
+    @property
+    def n_clusters(self):
+        return int(self.centroids.shape[0])
+
+
+def build_index(cfg, rng, embeddings, doc_terms, doc_weights,
+                kmeans_iters=15) -> CluSDIndex:
+    centroids, assign = km.kmeans(rng, embeddings, cfg.n_clusters,
+                                  iters=kmeans_iters)
+    cluster_docs, doc_cluster = km.build_cluster_table(
+        assign, cfg.n_clusters, cfg.cluster_cap, embeddings, centroids)
+    m = min(cfg.n_neighbors, cfg.n_clusters - 1)
+    nb_ids, nb_sims = km.neighbor_graph(centroids, m)
+    sp = sparse_lib.SparseIndex.build(doc_terms, doc_weights, cfg.vocab,
+                                      cfg.max_postings)
+    return CluSDIndex(
+        centroids=centroids, cluster_docs=cluster_docs,
+        doc_cluster=doc_cluster, neighbor_ids=nb_ids, neighbor_sims=nb_sims,
+        embeddings=embeddings, sparse_index=sp,
+        bin_ids=bins_lib.rank_bin_ids(cfg.bins, cfg.k_sparse))
+
+
+def full_dense_topk(embeddings, q_dense, k):
+    scores = q_dense @ embeddings.T
+    s, i = jax.lax.top_k(scores, k)
+    return i.astype(jnp.int32), s
+
+
+def select_clusters(cfg, index, q_dense, sparse_ids, sparse_scores, *,
+                    selector="lstm", stage1="overlap", theta=None,
+                    use_kernel=False, selector_params=None):
+    """Steps 1-2. Returns dict with candidates, probs, selected ids + mask."""
+    theta = cfg.theta if theta is None else theta
+    qc_sim = q_dense @ index.centroids.T                     # (B, N)
+    P, Q = bins_lib.overlap_features(
+        sparse_ids, fusion_lib.minmax_norm(sparse_scores), index.doc_cluster,
+        index.n_clusters, index.bin_ids, cfg.v_bins)
+    if stage1 == "overlap":
+        cand = stage1_lib.sort_by_overlap(P, qc_sim, cfg.n_candidates)
+    else:
+        cand = stage1_lib.sort_by_dist(qc_sim, cfg.n_candidates)
+
+    feats = feat_lib.candidate_features(
+        cand, qc_sim, P, Q, index.neighbor_ids, index.neighbor_sims,
+        cfg.u_bins)
+    params = selector_params if selector_params is not None else index.lstm_params
+    if params is None:
+        # untrained fallback: stage-1 order only — take first max_selected
+        B, n = cand.shape
+        probs = jnp.linspace(1.0, 0.5, n)[None, :].repeat(B, 0)
+    else:
+        _, apply = SELECTORS[selector]
+        if selector == "lstm":
+            probs = apply(params, feats, use_kernel=use_kernel)
+        else:
+            probs = apply(params, feats)
+
+    picked = probs >= theta                                  # (B, n)
+    # static budget: top max_selected by prob among picked
+    masked = jnp.where(picked, probs, -1.0)
+    top_p, top_i = jax.lax.top_k(masked, min(cfg.max_selected, cand.shape[1]))
+    sel_mask = top_p >= 0.0
+    sel_ids = jnp.take_along_axis(cand, top_i, axis=1)
+    return {"cand": cand, "feats": feats, "probs": probs,
+            "sel_ids": sel_ids, "sel_mask": sel_mask, "qc_sim": qc_sim,
+            "P": P, "Q": Q}
+
+
+def score_selected(index, q_dense, sel_ids, sel_mask, embeddings=None):
+    """Step 3 dense scoring. Returns (doc_ids (B, S*cap), scores, mask)."""
+    emb = embeddings if embeddings is not None else index.embeddings
+    docs = jnp.take(index.cluster_docs, sel_ids, axis=0)     # (B, S, cap)
+    B, S, cap = docs.shape
+    valid = (docs >= 0) & sel_mask[:, :, None]
+    docs_flat = jnp.where(valid, docs, 0).reshape(B, S * cap)
+    vecs = jnp.take(emb, docs_flat, axis=0)                  # (B, S*cap, dim)
+    scores = jnp.einsum("bd,bkd->bk", q_dense, vecs)
+    scores = jnp.where(valid.reshape(B, S * cap), scores, -jnp.inf)
+    return docs_flat.astype(jnp.int32), scores, valid.reshape(B, S * cap)
+
+
+def retrieve(cfg, index, q_dense, q_terms, q_weights, *, selector="lstm",
+             stage1="overlap", theta=None, use_kernel=False,
+             selector_params=None, k=None):
+    """Full CluSD pipeline. Returns (ids, scores, diagnostics)."""
+    k = k or cfg.k_final
+    sparse_ids, sparse_scores = sparse_lib.sparse_retrieve_topk(
+        index.sparse_index, q_terms, q_weights, cfg.k_sparse)
+    sel = select_clusters(cfg, index, q_dense, sparse_ids, sparse_scores,
+                          selector=selector, stage1=stage1, theta=theta,
+                          use_kernel=use_kernel, selector_params=selector_params)
+    if index.quantizer is not None:
+        from repro.core import quant as quant_lib
+        did, dscore, dmask = quant_lib.score_selected_pq(
+            index, q_dense, sel["sel_ids"], sel["sel_mask"])
+    else:
+        did, dscore, dmask = score_selected(index, q_dense, sel["sel_ids"],
+                                            sel["sel_mask"])
+    ids, scores = fusion_lib.fuse_topk(
+        sparse_ids, sparse_scores, did, jnp.where(dmask, dscore, 0.0), dmask,
+        index.n_docs, cfg.alpha, k)
+    diag = {
+        "n_selected": jnp.sum(sel["sel_mask"], axis=1),
+        "frac_docs_scanned": jnp.mean(dmask.astype(jnp.float32), axis=1)
+        * dmask.shape[1] / index.n_docs,
+        "sparse_ids": sparse_ids, "sparse_scores": sparse_scores,
+        **{k_: sel[k_] for k_ in ("cand", "probs", "sel_ids", "sel_mask")},
+    }
+    return ids, scores, diag

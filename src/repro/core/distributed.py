@@ -1,0 +1,208 @@
+"""Distributed CluSD serving (the paper's system as a first-class sharded
+feature — DESIGN.md §4).
+
+Layout: docs are RENUMBERED into cluster-blocked order, doc id = c*cap + s,
+so cluster membership is `id // cap` (no cluster_docs table) and the
+embedding store is a (N, cap, dim) block array sharded over 'model' by
+contiguous cluster ranges — the TPU analogue of the paper's on-disk cluster
+blocks. Queries shard over 'data'.
+
+Serve step (one shard_map over ('data','model')):
+  1. sparse scoring against the locally-owned posting shard -> local dense
+     score array (cap * N_local docs) -> local top-k -> all-gather over
+     'model' -> merged global sparse top-k            [term-at-doc-owner]
+  2. Stage I/II run replicated per query (tiny: O(N) + O(n) LSTM)
+  3. each shard scores the selected clusters IT OWNS (local gather +
+     (B_loc, S, cap, d) dot) -> local top-k -> all-gather merge
+  4. sort-merge fusion (fuse_topk_merge; no O(D) buffer)
+"""
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bins as bins_lib
+from repro.core import features as feat_lib
+from repro.core import fusion as fusion_lib
+from repro.core import stage1 as stage1_lib
+from repro.core.lstm import lstm_apply
+
+
+@dataclasses.dataclass
+class BlockedIndex:
+    """Host-built, device-shardable CluSD index in blocked-doc layout."""
+    blocks: np.ndarray          # (N, cap, dim)
+    valid: np.ndarray           # (N, cap) bool
+    centroids: np.ndarray       # (N, dim)
+    neighbor_ids: np.ndarray    # (N, m)
+    neighbor_sims: np.ndarray   # (N, m)
+    postings_docs: np.ndarray   # (V, P) blocked doc ids, -1 pad
+    postings_weights: np.ndarray  # (V, P)
+    old_to_new: np.ndarray      # (D,) original doc id -> blocked id
+    lstm_params: object = None
+
+    @property
+    def n_clusters(self):
+        return self.blocks.shape[0]
+
+    @property
+    def cap(self):
+        return self.blocks.shape[1]
+
+
+def build_blocked_index(cfg, index, embeddings=None):
+    """Convert a core.clusd.CluSDIndex into blocked layout (host-side)."""
+    emb = np.asarray(embeddings if embeddings is not None else index.embeddings)
+    cd = np.asarray(index.cluster_docs)
+    N, cap = cd.shape
+    dim = emb.shape[1]
+    blocks = np.zeros((N, cap, dim), np.float32)
+    valid = cd >= 0
+    blocks[valid] = emb[cd[valid]]
+    old_to_new = np.full(emb.shape[0], -1, np.int64)
+    c_idx, s_idx = np.nonzero(valid)
+    old_to_new[cd[valid]] = c_idx * cap + s_idx
+    pd = np.asarray(index.sparse_index.postings_docs)
+    pw = np.asarray(index.sparse_index.postings_weights)
+    pd_new = np.where(pd >= 0, old_to_new[np.maximum(pd, 0)], -1).astype(np.int32)
+    return BlockedIndex(
+        blocks=blocks, valid=valid, centroids=np.asarray(index.centroids),
+        neighbor_ids=np.asarray(index.neighbor_ids),
+        neighbor_sims=np.asarray(index.neighbor_sims),
+        postings_docs=pd_new, postings_weights=pw,
+        old_to_new=old_to_new, lstm_params=index.lstm_params)
+
+
+def shard_postings_by_owner(bidx: BlockedIndex, n_shards):
+    """Repartition each term's posting list by doc owner shard so sparse
+    scoring is local: returns (V, n_shards, P_shard) ids + weights."""
+    V, P = bidx.postings_docs.shape
+    N, cap = bidx.blocks.shape[:2]
+    n_local = N // n_shards
+    owner = np.where(bidx.postings_docs >= 0,
+                     (bidx.postings_docs // cap) // n_local, -1)
+    p_shard = 0
+    for s in range(n_shards):
+        p_shard = max(p_shard, int((owner == s).sum(axis=1).max()))
+    p_shard = max(8, -(-p_shard // 8) * 8)
+    docs = np.full((V, n_shards, p_shard), -1, np.int32)
+    ws = np.zeros((V, n_shards, p_shard), np.float32)
+    for t in range(V):
+        for s in range(n_shards):
+            sel = owner[t] == s
+            n = int(sel.sum())
+            if n:
+                docs[t, s, :n] = bidx.postings_docs[t, sel]
+                ws[t, s, :n] = bidx.postings_weights[t, sel]
+    return docs, ws
+
+
+def make_serve_step(cfg, mesh, bidx_shapes, feat_dim):
+    """Returns the jit-able sharded serve fn. bidx_shapes: (N, cap, dim,
+    V, P_shard, m). All heavy arrays enter pre-sharded."""
+    N, cap, dim, V, P_shard, m = bidx_shapes
+    nd, nm = mesh.shape["data"], mesh.shape["model"]
+    n_local = N // nm
+    d_local = n_local * cap
+    k = cfg.k_sparse
+    sentinel = N * cap + 1
+
+    def serve(blocks, postings_docs, postings_weights, centroids,
+              nb_ids, nb_sims, lstm_params, q_dense, q_terms, q_weights):
+        # ---- phase 1+3 under one shard_map ----
+        def shard_fn(blocks_l, pd_l, pw_l, centroids, nb_ids, nb_sims,
+                     lstm_params, q_d, q_t, q_w):
+            mi = jax.lax.axis_index("model")
+            B = q_d.shape[0]
+            # sparse scoring over owned docs
+            qt = jnp.maximum(q_t, 0)
+            qmask = (q_t >= 0) & (q_w > 0)
+            docs = pd_l[qt][:, :, 0, :]            # (B, Tq, P_shard)
+            ws = pw_l[qt][:, :, 0, :]
+            contrib = jnp.where(qmask[..., None] & (docs >= 0),
+                                ws * q_w[..., None], 0.0)
+            local_doc = jnp.where(docs >= 0, docs - mi * d_local, d_local)
+            local_doc = jnp.clip(local_doc, 0, d_local)
+
+            def seg(fd, fc):
+                return jax.ops.segment_sum(fc.reshape(-1), fd.reshape(-1),
+                                           num_segments=d_local + 1)[:d_local]
+
+            s_scores = jax.vmap(seg)(local_doc, contrib)     # (B, d_local)
+            kk = min(k, d_local)
+            sv, si = jax.lax.top_k(s_scores, kk)             # local top-k
+            gid = si + mi * d_local
+            # merge over model axis
+            sv_all = jax.lax.all_gather(sv, "model", axis=1)  # (B, nm, kk)
+            gid_all = jax.lax.all_gather(gid, "model", axis=1)
+            sv_f = sv_all.reshape(B, nm * kk)
+            gid_f = gid_all.reshape(B, nm * kk)
+            mv, mi_ = jax.lax.top_k(sv_f, k)
+            sparse_ids = jnp.take_along_axis(gid_f, mi_, axis=1)
+            sparse_scores = mv
+
+            # ---- stage I/II (replicated across 'model'; per local query) ----
+            qc_sim = q_d @ centroids.T                        # (B, N)
+            doc_cluster = sparse_ids // cap
+            bin_ids = bins_lib.rank_bin_ids(cfg.bins, k)
+            v = cfg.v_bins
+            slot = doc_cluster * v + bin_ids[None, :]
+            sn = fusion_lib.minmax_norm(sparse_scores)
+
+            def pq(sl, sc):
+                cnt = jax.ops.segment_sum(jnp.ones((k,), jnp.float32), sl,
+                                          num_segments=N * v)
+                ssum = jax.ops.segment_sum(sc, sl, num_segments=N * v)
+                return (cnt.reshape(N, v),
+                        (ssum / jnp.maximum(cnt, 1.0)).reshape(N, v))
+
+            P_, Q_ = jax.vmap(pq)(slot, sn)
+            cand = stage1_lib.sort_by_overlap(P_, qc_sim, cfg.n_candidates)
+            feats = feat_lib.candidate_features(
+                cand, qc_sim, P_, Q_, nb_ids, nb_sims, cfg.u_bins)
+            probs = lstm_apply(lstm_params, feats)
+            picked = probs >= cfg.theta
+            masked = jnp.where(picked, probs, -1.0)
+            top_p, top_i = jax.lax.top_k(masked, cfg.max_selected)
+            sel_mask = top_p >= 0.0
+            sel_ids = jnp.take_along_axis(cand, top_i, axis=1)  # (B, S)
+
+            # ---- phase 3: score owned selected clusters ----
+            local_sel = sel_ids - mi * n_local
+            owned = (local_sel >= 0) & (local_sel < n_local) & sel_mask
+            blk = jnp.take(blocks_l, jnp.clip(local_sel, 0, n_local - 1),
+                           axis=0)                            # (B, S, cap, dim)
+            dsc = jnp.einsum("bd,bscd->bsc", q_d, blk)
+            dsc = jnp.where(owned[:, :, None], dsc, -jnp.inf)
+            d_ids = sel_ids[:, :, None] * cap + jnp.arange(cap)[None, None, :]
+            kd = min(cfg.max_selected * cap, 4 * k)
+            dv, di = jax.lax.top_k(dsc.reshape(B, -1), kd)
+            dgid = jnp.take_along_axis(d_ids.reshape(B, -1), di, axis=1)
+            dv_all = jax.lax.all_gather(dv, "model", axis=1).reshape(B, -1)
+            dg_all = jax.lax.all_gather(dgid, "model", axis=1).reshape(B, -1)
+            return sparse_ids, sparse_scores, dg_all, dv_all
+
+        from jax.sharding import PartitionSpec as P
+        fn = jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P("model", None, None), P(None, "model", None),
+                      P(None, "model", None), P(None, None), P(None, None),
+                      P(None, None), P(), P("data", None), P("data", None),
+                      P("data", None)),
+            out_specs=(P("data", None), P("data", None), P("data", None),
+                       P("data", None)),
+            check_vma=False)
+        sparse_ids, sparse_scores, dgid, dval = fn(
+            blocks, postings_docs, postings_weights, centroids, nb_ids,
+            nb_sims, lstm_params, q_dense, q_terms, q_weights)
+        dmask = jnp.isfinite(dval)
+        ids, scores = fusion_lib.fuse_topk_merge(
+            sparse_ids, sparse_scores, dgid,
+            jnp.where(dmask, dval, 0.0), dmask, cfg.alpha,
+            min(cfg.k_final, sparse_ids.shape[1]), sentinel)
+        return ids, scores
+
+    return serve

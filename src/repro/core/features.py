@@ -1,0 +1,46 @@
+"""Stage II LSTM input features (paper §2.3, Fig. 1):
+
+  - query-cluster similarity sim(q, c_i)                      (1)
+  - inter-cluster AvgDist(C_i, A_j), j=1..u over candidate bins (u)
+    using only the top-m centroid neighbor graph (space O(N*m))
+  - overlap features P(C_i, B_j), Q(C_i, B_j), j=1..v          (2v)
+
+Feature vector dim = 1 + u + 2v.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def feature_dim(cfg):
+    return 1 + cfg.u_bins + 2 * cfg.v_bins
+
+
+def candidate_features(cand, qc_sim, P, Q, neighbor_ids, neighbor_sims, u):
+    """Build per-candidate LSTM features.
+
+    cand: (B, n) candidate cluster ids (stage-1 order)
+    qc_sim: (B, N); P, Q: (B, N, v); neighbor_ids/sims: (N, m)
+    Returns (B, n, 1 + u + 2v) float32.
+    """
+    B, n = cand.shape
+
+    def one(cand_q, sim_q, P_q, Q_q):
+        f_sim = jnp.take(sim_q, cand_q)[:, None]            # (n, 1)
+        f_P = jnp.take(P_q, cand_q, axis=0)                 # (n, v)
+        f_Q = jnp.take(Q_q, cand_q, axis=0)                 # (n, v)
+
+        # inter-cluster sims among candidates, masked by the m-NN graph:
+        # sim[i, l] = neighbor_sims[cand_i, j] if cand_l == neighbor_ids[cand_i, j]
+        nb_ids = jnp.take(neighbor_ids, cand_q, axis=0)     # (n, m)
+        nb_sims = jnp.take(neighbor_sims, cand_q, axis=0)   # (n, m)
+        match = nb_ids[:, :, None] == cand_q[None, None, :]  # (n, m, n)
+        sim_mat = jnp.sum(jnp.where(match, nb_sims[:, :, None], 0.0), axis=1)
+
+        # uniform partition of the n candidates into u bins (paper: A_1..A_u)
+        u_size = n // u
+        sim_bins = sim_mat[:, :u_size * u].reshape(n, u, u_size)
+        f_avg = jnp.mean(sim_bins, axis=-1)                 # (n, u)
+        return jnp.concatenate([f_sim, f_avg, f_P, f_Q], axis=-1)
+
+    return jax.vmap(one)(cand, qc_sim, P, Q).astype(jnp.float32)

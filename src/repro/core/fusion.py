@@ -1,0 +1,76 @@
+"""Score fusion (paper Step 3): min-max normalize the per-query top results
+of each retriever, then linear interpolation alpha*sparse + (1-alpha)*dense.
+Docs reached by only one retriever contribute 0 on the missing side after
+normalization (standard CC fusion convention used by CluSD/CDFS)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def minmax_norm(scores, mask=None):
+    """Per-row min-max over valid entries. scores: (B, K)."""
+    if mask is None:
+        mask = jnp.ones_like(scores, bool)
+    big = jnp.where(mask, scores, -jnp.inf)
+    small = jnp.where(mask, scores, jnp.inf)
+    mx = jnp.max(big, axis=-1, keepdims=True)
+    mn = jnp.min(small, axis=-1, keepdims=True)
+    rng = jnp.maximum(mx - mn, 1e-9)
+    out = (scores - mn) / rng
+    return jnp.where(mask, jnp.clip(out, 0.0, 1.0), 0.0)
+
+
+def fuse_topk(sparse_ids, sparse_scores, dense_ids, dense_scores, dense_mask,
+              n_docs, alpha, k):
+    """Union-merge + interpolate + global top-k (exact scatter formulation).
+
+    sparse_ids/scores: (B, Ks); dense_ids/scores: (B, Kd) with dense_mask for
+    padding. Returns (ids (B, k), fused scores (B, k)).
+    """
+    B = sparse_ids.shape[0]
+    s_norm = minmax_norm(sparse_scores)
+    d_norm = minmax_norm(dense_scores, dense_mask)
+
+    def one(sid, ss, did, ds, dm):
+        fused = jnp.zeros((n_docs + 1,), jnp.float32)
+        # dense side: scatter (unique ids by construction; add is safe)
+        did_safe = jnp.where(dm, did, n_docs)
+        fused = fused.at[did_safe].add((1.0 - alpha) * ds * dm)
+        # sparse side
+        fused = fused.at[sid].add(alpha * ss)
+        scores, ids = jax.lax.top_k(fused[:n_docs], k)
+        return ids.astype(jnp.int32), scores
+
+    return jax.vmap(one)(sparse_ids, s_norm, dense_ids, d_norm,
+                         dense_mask.astype(jnp.float32))
+
+
+def fuse_topk_merge(sparse_ids, sparse_scores, dense_ids, dense_scores,
+                    dense_mask, alpha, k, sentinel):
+    """Sort-merge fusion WITHOUT an O(n_docs) scatter buffer — the serving
+    path for corpus-scale retrieval (each side's ids are unique; a doc can
+    appear once per side, so duplicates come in pairs after the sort).
+
+    sentinel: id strictly greater than any real doc id (pads sort last).
+    """
+    s_norm = minmax_norm(sparse_scores)
+    d_norm = minmax_norm(dense_scores, dense_mask)
+
+    def one(sid, ss, did, ds, dm):
+        ids = jnp.concatenate([sid, jnp.where(dm, did, sentinel)])
+        contrib = jnp.concatenate([alpha * ss,
+                                   jnp.where(dm, (1 - alpha) * ds, 0.0)])
+        order = jnp.argsort(ids)
+        ids_s = ids[order]
+        c_s = contrib[order]
+        nxt_same = jnp.concatenate([ids_s[1:] == ids_s[:-1],
+                                    jnp.zeros((1,), bool)])
+        merged = c_s + jnp.where(nxt_same, jnp.roll(c_s, -1), 0.0)
+        dup = jnp.concatenate([jnp.zeros((1,), bool),
+                               ids_s[1:] == ids_s[:-1]])
+        final = jnp.where(dup | (ids_s >= sentinel), -jnp.inf, merged)
+        top_s, top_i = jax.lax.top_k(final, k)
+        return ids_s[top_i].astype(jnp.int32), top_s
+
+    return jax.vmap(one)(sparse_ids, s_norm, dense_ids, d_norm,
+                         dense_mask)

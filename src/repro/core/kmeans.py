@@ -1,0 +1,99 @@
+"""K-means clustering of dense document embeddings (FAISS-IVF analogue) with
+capacity-balanced padded member lists — TPU needs static cluster blocks, so
+clusters are materialized as (N, cap) padded doc-id tables (DESIGN.md §2).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters",))
+def _assign(X, centroids, n_clusters):
+    # (D, dim) x (N, dim) -> nearest centroid by L2
+    x2 = jnp.sum(X * X, axis=1, keepdims=True)
+    c2 = jnp.sum(centroids * centroids, axis=1)
+    d2 = x2 + c2[None, :] - 2.0 * X @ centroids.T
+    return jnp.argmin(d2, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters",))
+def _update(X, assign, n_clusters):
+    sums = jax.ops.segment_sum(X, assign, num_segments=n_clusters)
+    counts = jax.ops.segment_sum(jnp.ones((X.shape[0],), X.dtype), assign,
+                                 num_segments=n_clusters)
+    return sums / jnp.maximum(counts, 1.0)[:, None], counts
+
+
+def kmeans(rng, X, n_clusters, iters=15):
+    """Lloyd's algorithm. X: (D, dim) array. Returns (centroids, assignments)."""
+    D = X.shape[0]
+    idx = jax.random.choice(rng, D, (n_clusters,), replace=False)
+    centroids = X[idx]
+    assign = None
+    for _ in range(iters):
+        assign = _assign(X, centroids, n_clusters)
+        new_c, counts = _update(X, assign, n_clusters)
+        # re-seed empty clusters from random points
+        empty = counts < 0.5
+        rng, sub = jax.random.split(rng)
+        reseed = X[jax.random.choice(sub, D, (n_clusters,))]
+        centroids = jnp.where(empty[:, None], reseed, new_c)
+    assign = _assign(X, centroids, n_clusters)
+    return centroids, assign
+
+
+def build_cluster_table(assign, n_clusters, cap, X=None, centroids=None):
+    """Padded (N, cap) doc-id table; overflow docs are reassigned to their
+    next-nearest cluster with free space (host-side greedy, like balanced IVF).
+
+    Returns (cluster_docs int32 (N, cap) padded with -1, doc_cluster (D,)).
+    """
+    assign = np.asarray(assign).copy()
+    D = assign.shape[0]
+    order = np.arange(D)
+    members = [[] for _ in range(n_clusters)]
+    overflow = []
+    for d in order:
+        c = assign[d]
+        if len(members[c]) < cap:
+            members[c].append(d)
+        else:
+            overflow.append(d)
+    if overflow:
+        if X is None or centroids is None:
+            # round-robin into free slots
+            free = [c for c in range(n_clusters) if len(members[c]) < cap]
+            fi = 0
+            for d in overflow:
+                while len(members[free[fi]]) >= cap:
+                    fi = (fi + 1) % len(free)
+                members[free[fi]].append(d)
+                assign[d] = free[fi]
+        else:
+            Xo = np.asarray(X)[overflow]
+            C = np.asarray(centroids)
+            d2 = (Xo * Xo).sum(1)[:, None] + (C * C).sum(1)[None] - 2 * Xo @ C.T
+            pref = np.argsort(d2, axis=1)
+            for i, d in enumerate(overflow):
+                for c in pref[i]:
+                    if len(members[c]) < cap:
+                        members[c].append(d)
+                        assign[d] = c
+                        break
+                else:
+                    raise RuntimeError("total capacity exceeded")
+    table = np.full((n_clusters, cap), -1, np.int32)
+    for c in range(n_clusters):
+        table[c, :len(members[c])] = members[c]
+    return jnp.asarray(table), jnp.asarray(assign, dtype=jnp.int32)
+
+
+def neighbor_graph(centroids, m):
+    """Top-m inner-product neighbor lists among centroids: (N, m) ids+sims."""
+    sims = centroids @ centroids.T
+    sims = sims - 2e9 * jnp.eye(sims.shape[0], dtype=sims.dtype)  # no self
+    vals, ids = jax.lax.top_k(sims, m)
+    return ids.astype(jnp.int32), vals

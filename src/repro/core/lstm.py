@@ -1,0 +1,110 @@
+"""Stage II selector models (paper §2.3 + Table 8 ablations):
+
+  - LSTM (default, CluSD): walks the n stage-1 candidates in order, emits
+    f(C_i) in [0,1]; clusters with f >= theta are visited.
+  - vanilla RNN (ablation)
+  - pointwise MLP (stand-in for the XGBoost ablation: same features, no
+    sequence state)
+
+The fused Pallas LSTM kernel (repro/kernels/lstm) is used through
+`use_kernel=True`; the jnp scan here doubles as its oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def lstm_init(rng, feat_dim, hidden):
+    r = jax.random.split(rng, 4)
+    H = hidden
+    return {
+        "wx": dense_init(r[0], (feat_dim, 4 * H), jnp.float32),
+        "wh": dense_init(r[1], (H, 4 * H), jnp.float32),
+        "b": jnp.zeros((4 * H,), jnp.float32),
+        "head_w": dense_init(r[2], (H, 1), jnp.float32),
+        "head_b": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def lstm_cell(x, h, c, wx, wh, b):
+    gates = x @ wx + h @ wh + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def lstm_apply(params, feats, use_kernel=False):
+    """feats: (B, n, F) -> selection probabilities (B, n)."""
+    if use_kernel:
+        from repro.kernels.lstm import ops as lstm_ops
+        h_seq = lstm_ops.lstm_sequence(
+            feats, params["wx"], params["wh"], params["b"])
+    else:
+        B, n, F = feats.shape
+        H = params["wh"].shape[0]
+
+        def step(carry, x_t):
+            h, c = carry
+            h, c = lstm_cell(x_t, h, c, params["wx"], params["wh"], params["b"])
+            return (h, c), h
+
+        init = (jnp.zeros((B, H), feats.dtype), jnp.zeros((B, H), feats.dtype))
+        _, h_seq = jax.lax.scan(step, init, jnp.moveaxis(feats, 1, 0))
+        h_seq = jnp.moveaxis(h_seq, 0, 1)                   # (B, n, H)
+    logits = (h_seq @ params["head_w"] + params["head_b"])[..., 0]
+    return jax.nn.sigmoid(logits)
+
+
+def rnn_init(rng, feat_dim, hidden):
+    r = jax.random.split(rng, 3)
+    return {
+        "wx": dense_init(r[0], (feat_dim, hidden), jnp.float32),
+        "wh": dense_init(r[1], (hidden, hidden), jnp.float32),
+        "b": jnp.zeros((hidden,), jnp.float32),
+        "head_w": dense_init(r[2], (hidden, 1), jnp.float32),
+        "head_b": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def rnn_apply(params, feats):
+    B, n, F = feats.shape
+    H = params["wh"].shape[0]
+
+    def step(carry, x_t):
+        h = jnp.tanh(x_t @ params["wx"] + carry @ params["wh"] + params["b"])
+        return h, h
+
+    _, h_seq = jax.lax.scan(step, jnp.zeros((B, H), feats.dtype),
+                            jnp.moveaxis(feats, 1, 0))
+    h_seq = jnp.moveaxis(h_seq, 0, 1)
+    logits = (h_seq @ params["head_w"] + params["head_b"])[..., 0]
+    return jax.nn.sigmoid(logits)
+
+
+def mlp_init(rng, feat_dim, hidden):
+    r = jax.random.split(rng, 3)
+    return {
+        "w1": dense_init(r[0], (feat_dim, hidden), jnp.float32),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": dense_init(r[1], (hidden, hidden), jnp.float32),
+        "b2": jnp.zeros((hidden,), jnp.float32),
+        "head_w": dense_init(r[2], (hidden, 1), jnp.float32),
+        "head_b": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def mlp_apply(params, feats):
+    h = jax.nn.relu(feats @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    logits = (h @ params["head_w"] + params["head_b"])[..., 0]
+    return jax.nn.sigmoid(logits)
+
+
+SELECTORS = {
+    "lstm": (lstm_init, lstm_apply),
+    "rnn": (rnn_init, rnn_apply),
+    "mlp": (mlp_init, mlp_apply),
+}

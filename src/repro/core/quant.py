@@ -1,0 +1,99 @@
+"""Vector quantization for the embedding store (paper Tables 1, 6, 7):
+
+  - PQ: product quantization, nsub subspaces x 256 codes, ADC scoring via
+    per-query lookup tables (gather + sum — TPU-friendly).
+  - OPQ-lite: PCA rotation before PQ (the eigen-allocation variant of OPQ;
+    full OPQ alternates rotation/codebook — PCA-init is its standard seed).
+  - DistillVQ/JPQ stand-ins (Table 7) are PQ retrained with different
+    objectives; here they map to PQ with different nsub/rotation settings.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans as km
+
+
+@dataclasses.dataclass
+class PQ:
+    codebooks: jnp.ndarray   # (nsub, 256, dsub)
+    codes: jnp.ndarray       # (D, nsub) uint8 — int32 on CPU backends
+    rotation: jnp.ndarray    # (dim, dim) or None
+    nsub: int
+
+    def space_bytes(self):
+        return int(self.codes.shape[0]) * self.nsub
+
+
+def train_pq(rng, X, nsub, n_codes=256, iters=10, rotate=False):
+    """X: (D, dim). dim % nsub == 0."""
+    D, dim = X.shape
+    assert dim % nsub == 0, (dim, nsub)
+    R = None
+    if rotate:
+        Xc = X - jnp.mean(X, axis=0, keepdims=True)
+        cov = Xc.T @ Xc / D
+        _, vecs = jnp.linalg.eigh(cov)
+        R = vecs[:, ::-1]                       # descending eigenvalue order
+        X = X @ R
+    dsub = dim // nsub
+    Xs = X.reshape(D, nsub, dsub)
+    books, codes = [], []
+    for s in range(nsub):
+        rng, sub = jax.random.split(rng)
+        n_k = min(n_codes, D)
+        c, a = km.kmeans(sub, Xs[:, s], n_k, iters=iters)
+        if n_k < n_codes:
+            c = jnp.pad(c, ((0, n_codes - n_k), (0, 0)))
+        books.append(c)
+        codes.append(a)
+    return PQ(jnp.stack(books), jnp.stack(codes, axis=1).astype(jnp.int32),
+              R, nsub)
+
+
+def adc_tables(pq: PQ, q):
+    """q: (B, dim) -> LUT (B, nsub, 256)."""
+    if pq.rotation is not None:
+        q = q @ pq.rotation
+    B = q.shape[0]
+    dsub = pq.codebooks.shape[-1]
+    qs = q.reshape(B, pq.nsub, dsub)
+    return jnp.einsum("bsd,skd->bsk", qs, pq.codebooks)
+
+
+def adc_score(pq: PQ, lut, doc_ids):
+    """lut: (B, nsub, 256); doc_ids: (B, K) -> approx scores (B, K).
+
+    score[b, k] = sum_s lut[b, s, codes[doc_ids[b, k], s]]
+    """
+    codes = jnp.take(pq.codes, jnp.maximum(doc_ids, 0), axis=0)  # (B, K, S)
+    B, K, S = codes.shape
+    s_idx = jnp.arange(S)[None, None, :]
+    scores = lut[jnp.arange(B)[:, None, None], s_idx, codes]
+    return jnp.sum(scores, axis=-1)
+
+
+def reconstruct(pq: PQ, doc_ids):
+    """Decode quantized embeddings for given ids: (K, dim)."""
+    codes = jnp.take(pq.codes, doc_ids, axis=0)                  # (K, nsub)
+    vecs = pq.codebooks[jnp.arange(pq.nsub)[None, :], codes]     # (K, nsub, dsub)
+    flat = vecs.reshape(doc_ids.shape[0], -1)
+    if pq.rotation is not None:
+        flat = flat @ pq.rotation.T
+    return flat
+
+
+def score_selected_pq(index, q_dense, sel_ids, sel_mask):
+    """Quantized Step-3 scoring (mirrors clusd.score_selected)."""
+    pq = index.quantizer
+    docs = jnp.take(index.cluster_docs, sel_ids, axis=0)
+    B, S, cap = docs.shape
+    valid = (docs >= 0) & sel_mask[:, :, None]
+    docs_flat = jnp.where(valid, docs, 0).reshape(B, S * cap)
+    lut = adc_tables(pq, q_dense)
+    scores = adc_score(pq, lut, docs_flat)
+    scores = jnp.where(valid.reshape(B, S * cap), scores, -jnp.inf)
+    return docs_flat.astype(jnp.int32), scores, valid.reshape(B, S * cap)

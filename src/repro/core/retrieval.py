@@ -1,0 +1,151 @@
+"""CluSD as a first-class feature for recsys candidate retrieval
+(`retrieval_cand` shape: 1 query x 1M candidates).
+
+Mapping of the paper onto the recsys setting (DESIGN.md §5):
+  sparse lexical retrieval  -> cheap guide scores: the model's wide/linear
+                               branch (wide-deep, deepfm) or a low-dim
+                               prefix dot (dlrm, din)
+  dense embedding clusters  -> k-means clusters of candidate item vectors,
+                               cluster-blocked layout (n_clusters, cap, d)
+  Stage I/II                 -> identical: bin-overlap multikey sort + LSTM
+  partial dense retrieval    -> full-dim dot only on selected cluster blocks
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bins as bins_lib
+from repro.core import features as feat_lib
+from repro.core import fusion as fusion_lib
+from repro.core import stage1 as stage1_lib
+from repro.core.lstm import lstm_apply
+from repro.models import recsys as rs
+from repro.models.sharding import logical
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateIndexSpec:
+    """Static geometry of the candidate-side CluSD index."""
+    n_candidates: int
+    n_clusters: int = 4096
+    cap: int = 512                 # cluster block size (padded)
+    guide_dim: int = 16            # prefix-dot guide width (dlrm/din)
+    k_guide: int = 1024            # guide retrieval depth (= paper's k)
+    bins: tuple = (10, 25, 50, 100, 200, 500, 1024)
+    n_candidates_stage1: int = 32  # n
+    u_bins: int = 6
+    max_selected: int = 32
+    theta: float = 0.02
+    alpha: float = 0.5
+    k_final: int = 100
+    local_topk: bool = False       # shard-local guide top-k merge (§Perf)
+
+    @property
+    def v_bins(self):
+        return len(self.bins)
+
+
+def guide_scores(cfg, params, u, item_vecs, cand_sparse):
+    """Cheap guide over ALL candidates (the 'sparse retrieval' analogue)."""
+    if cfg.kind in ("wide_deep", "deepfm"):
+        n_item = cand_sparse.shape[1]
+        g = sum(rs.embedding_lookup(params["wide"][f"t{i}"],
+                                    cand_sparse[:, i])[:, 0]
+                for i in range(n_item))
+        return g
+    # low-dim prefix dot (PQ-style coarse scorer)
+    gd = min(16, item_vecs.shape[1])
+    return item_vecs[:, :gd] @ u[0, :gd]
+
+
+def _guide_topk(g, spec):
+    """Guide-phase top-k. Optimized path (§Perf): per-shard local top-k +
+    merge — wire bytes nm*k*8B instead of all-gathering the full score
+    vector over the candidate shards."""
+    from repro.models import sharding as sh
+    from jax.sharding import PartitionSpec as P
+    mesh = getattr(sh._state, "mesh", None)
+    if not (spec.local_topk and mesh is not None and "model" in mesh.shape):
+        return jax.lax.top_k(g, spec.k_guide)
+    nm = mesh.shape["model"]
+    shard = g.shape[0] // nm
+    kk = min(spec.k_guide, shard)
+
+    def local(g_l):
+        v, i = jax.lax.top_k(g_l, kk)
+        gid = i + jax.lax.axis_index("model") * shard
+        v_all = jax.lax.all_gather(v, "model")            # (nm, kk)
+        g_all = jax.lax.all_gather(gid, "model")
+        mv, mi = jax.lax.top_k(v_all.reshape(-1), spec.k_guide)
+        return mv, jnp.take(g_all.reshape(-1), mi)
+
+    return jax.shard_map(local, mesh=mesh, in_specs=(P("model"),),
+                         out_specs=(P(), P()), check_vma=False)(g)
+
+
+def clusd_candidate_retrieval(model_cfg, spec: CandidateIndexSpec, params,
+                              batch, cand_sparse, item_blocks, centroids,
+                              lstm_params, neighbor_ids, neighbor_sims,
+                              slot_valid=None):
+    """One query against spec.n_candidates items, CluSD-accelerated.
+
+    item_blocks: (N, cap, d) cluster-blocked candidate vectors — candidate id
+    == c * cap + slot. slot_valid (N*cap,) masks pad slots out of the guide
+    (pad slots otherwise alias item id 0 in the wide branch).
+    """
+    N, cap, d = item_blocks.shape
+    u = rs.user_tower(model_cfg, params, batch)            # (1, d)
+
+    flat_items = item_blocks.reshape(N * cap, d)
+    g = guide_scores(model_cfg, params, u, flat_items, cand_sparse)
+    if slot_valid is not None:
+        g = jnp.where(slot_valid, g, -jnp.inf)
+    g = logical(g, "candidates")
+    g_scores, g_ids = _guide_topk(g, spec)                 # (k,)
+
+    # Stage I: overlap of guide top-k with clusters (cluster = id // cap)
+    bin_ids = bins_lib.rank_bin_ids(spec.bins, spec.k_guide)
+    doc_cluster = g_ids // cap                             # (k,)
+    slot = doc_cluster * spec.v_bins + bin_ids
+    gn = fusion_lib.minmax_norm(g_scores[None])[0]
+    cnt = jax.ops.segment_sum(jnp.ones_like(gn), slot,
+                              num_segments=N * spec.v_bins)
+    ssum = jax.ops.segment_sum(gn, slot, num_segments=N * spec.v_bins)
+    P = cnt.reshape(N, spec.v_bins)[None]
+    Q = (ssum / jnp.maximum(cnt, 1.0)).reshape(N, spec.v_bins)[None]
+    qc_sim = (centroids @ u[0])[None]                      # (1, N)
+    cand = stage1_lib.sort_by_overlap(P, qc_sim, spec.n_candidates_stage1)
+
+    feats = feat_lib.candidate_features(
+        cand, qc_sim, P, Q, neighbor_ids, neighbor_sims, spec.u_bins)
+    probs = lstm_apply(lstm_params, feats)                 # (1, n)
+    picked = probs >= spec.theta
+    masked = jnp.where(picked, probs, -1.0)
+    top_p, top_i = jax.lax.top_k(masked, spec.max_selected)
+    sel_mask = top_p >= 0.0
+    sel_ids = jnp.take_along_axis(cand, top_i, axis=1)[0]  # (S,)
+
+    # Step 3: full-dim dot on selected blocks only
+    blocks = jnp.take(item_blocks, sel_ids, axis=0)        # (S, cap, d)
+    dscore = jnp.einsum("d,scd->sc", u[0], blocks)
+    dscore = jnp.where(sel_mask[0][:, None], dscore, -jnp.inf)
+    did = (sel_ids[:, None] * cap + jnp.arange(cap)[None, :]).reshape(-1)
+    dmask = jnp.isfinite(dscore.reshape(-1))
+
+    ids, scores = fusion_lib.fuse_topk(
+        g_ids[None], g_scores[None], did[None].astype(jnp.int32),
+        jnp.where(dmask, dscore.reshape(-1), 0.0)[None], dmask[None],
+        N * cap, spec.alpha, spec.k_final)
+    return ids[0], scores[0], {"n_selected": jnp.sum(sel_mask)}
+
+
+def brute_force_retrieval(model_cfg, params, batch, item_blocks, k=100):
+    """Baseline: full dot over all candidates."""
+    N, cap, d = item_blocks.shape
+    u = rs.user_tower(model_cfg, params, batch)
+    flat = item_blocks.reshape(N * cap, d)
+    scores = logical(flat @ u[0], "candidates")
+    s, i = jax.lax.top_k(scores, k)
+    return i.astype(jnp.int32), s

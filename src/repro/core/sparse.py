@@ -1,0 +1,78 @@
+"""Sparse lexical retrieval (SPLADE/BM25-style) as a TPU-native inverted
+index: per-term posting lists are impact-ordered, truncated to a static
+budget, and scoring is gather + scatter-add (`jnp.take` + `segment_sum`) —
+the same primitive family as EmbeddingBag (DESIGN.md §2).
+
+Documents/queries are bags of (term_id, weight); the exact rank score is
+L(q) . L(d) = sum over shared terms of qw * dw.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SparseIndex:
+    postings_docs: jnp.ndarray     # (V, P) int32, -1 padded, impact-ordered
+    postings_weights: jnp.ndarray  # (V, P) f32
+    n_docs: int
+
+    @staticmethod
+    def build(doc_terms, doc_weights, vocab, max_postings):
+        """doc_terms: (D, T) int32 term ids (-1 pad); doc_weights: (D, T) f32."""
+        doc_terms = np.asarray(doc_terms)
+        doc_weights = np.asarray(doc_weights)
+        D, T = doc_terms.shape
+        lists = [[] for _ in range(vocab)]
+        for d in range(D):
+            for t, w in zip(doc_terms[d], doc_weights[d]):
+                if t >= 0 and w > 0:
+                    lists[int(t)].append((float(w), d))
+        pd = np.full((vocab, max_postings), -1, np.int32)
+        pw = np.zeros((vocab, max_postings), np.float32)
+        truncated = 0
+        for t in range(vocab):
+            lst = sorted(lists[t], reverse=True)  # impact order
+            if len(lst) > max_postings:
+                truncated += len(lst) - max_postings
+            lst = lst[:max_postings]
+            for i, (w, d) in enumerate(lst):
+                pd[t, i] = d
+                pw[t, i] = w
+        idx = SparseIndex(jnp.asarray(pd), jnp.asarray(pw), D)
+        idx.truncated_postings = truncated
+        return idx
+
+
+def sparse_retrieve(index: SparseIndex, q_terms, q_weights, k):
+    """q_terms: (B, Tq) int32 (-1 pad); q_weights: (B, Tq).
+
+    Returns (top-k doc ids (B, k), top-k scores (B, k), full scores (B, D)).
+    """
+    B = q_terms.shape[0]
+    D = index.n_docs
+    qt = jnp.maximum(q_terms, 0)
+    qmask = (q_terms >= 0) & (q_weights > 0)
+
+    docs = jnp.take(index.postings_docs, qt, axis=0)       # (B, Tq, P)
+    ws = jnp.take(index.postings_weights, qt, axis=0)      # (B, Tq, P)
+    contrib = ws * q_weights[..., None]
+    contrib = jnp.where(qmask[..., None], contrib, 0.0)
+    dmask = docs >= 0
+    flat_docs = jnp.where(dmask, docs, D).reshape(B, -1)   # overflow row D
+    flat_contrib = jnp.where(dmask, contrib, 0.0).reshape(B, -1)
+
+    def one(fd, fc):
+        return jax.ops.segment_sum(fc, fd, num_segments=D + 1)[:D]
+
+    scores = jax.vmap(one)(flat_docs, flat_contrib)        # (B, D)
+    top_scores, top_ids = jax.lax.top_k(scores, k)
+    return top_ids.astype(jnp.int32), top_scores, scores
+
+
+def sparse_retrieve_topk(index: SparseIndex, q_terms, q_weights, k):
+    ids, scores, _ = sparse_retrieve(index, q_terms, q_weights, k)
+    return ids, scores

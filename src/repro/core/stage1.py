@@ -1,0 +1,41 @@
+"""Stage I of Step 2: preliminary top-n cluster selection (paper §2.2).
+
+SortByOverlap: multikey sort on the priority vector (P(C,B_1),...,P(C,B_v)),
+ties broken by query-centroid similarity. Implemented as v+1 passes of
+stable argsort (exact lexicographic order; no packed-key overflow).
+SortByDist: the IVF-style baseline ordering (ablation Table 8).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def _lexsort_desc(keys):
+    """keys: list of (N,) arrays, primary first. Descending. Returns perm."""
+    N = keys[0].shape[0]
+    perm = jnp.arange(N)
+    # least-significant pass first (stable sorts compose lexicographically)
+    for key in reversed(keys):
+        k = jnp.take(key, perm)
+        order = jnp.argsort(-k, stable=True)
+        perm = jnp.take(perm, order)
+    return perm
+
+
+def sort_by_overlap(P, qc_sim, n):
+    """P: (B, N, v); qc_sim: (B, N) query-centroid similarity.
+
+    Returns (B, n) candidate cluster ids, best first.
+    """
+    def one(Pq, simq):
+        keys = [Pq[:, j] for j in range(Pq.shape[1])] + [simq]
+        perm = _lexsort_desc(keys)
+        return perm[:n].astype(jnp.int32)
+
+    return jax.vmap(one)(P, qc_sim)
+
+
+def sort_by_dist(qc_sim, n):
+    """IVF ordering: top-n clusters by query-centroid similarity. (B, n)."""
+    _, ids = jax.lax.top_k(qc_sim, n)
+    return ids.astype(jnp.int32)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (
+    Corpus, QuerySet, synth_corpus, synth_queries, mrr_at, recall_at)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots of CluSD + substrates.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (interpret=True on CPU, compiled on TPU)
+  ref.py    — pure-jnp oracle used by tests/benchmarks
+
+Kernels:
+  lstm          — fused LSTM-selector sequence (paper Stage II hot loop)
+  cluster_score — selected-cluster block gather + dot + running top-k
+                  (paper Step 3: partial dense retrieval)
+  topk          — blocked top-k merge over score tiles
+  embedding_bag — recsys gather+pool (JAX has no native EmbeddingBag)
+  bin_overlap   — P/Q sparse-result x cluster overlap features (Stage I)
+"""

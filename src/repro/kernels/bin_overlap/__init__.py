@@ -1,0 +1,2 @@
+from repro.kernels.bin_overlap.ops import bin_overlap
+from repro.kernels.bin_overlap.ref import bin_overlap_ref

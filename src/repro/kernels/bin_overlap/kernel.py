@@ -1,0 +1,66 @@
+"""Stage-I P/Q overlap-feature kernel.
+
+Computes, per query, the count-overlap P(C, B_j) and score-overlap sum for
+every (cluster, bin) pair from the sparse top-k result list. The (N, v)
+accumulators live in VMEM (8192 x 8 x 4B = 256 KiB); the k result entries
+are folded in with one-hot accumulation over bin columns — a dense
+(k_blk, N) x scatter-free formulation that maps onto the VPU instead of
+serial scalar stores.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _overlap_kernel(c_ref, b_ref, s_ref, p_ref, q_ref, *, n_clusters, v):
+    # c_ref: (1, k) cluster ids; b_ref: (1, k) bin ids; s_ref: (1, k) scores
+    k = c_ref.shape[1]
+    c = c_ref[0, :]
+    bi = b_ref[0, :]
+    s = s_ref[0, :]
+    # accumulate one bin at a time: mask entries of this bin, one-hot over
+    # clusters via comparison against the cluster-id iota (vectorized).
+    p_acc = jnp.zeros((n_clusters, v), jnp.float32)
+    q_acc = jnp.zeros((n_clusters, v), jnp.float32)
+    cl_iota = jax.lax.broadcasted_iota(jnp.int32, (n_clusters, k), 0)
+    onehot = (cl_iota == c[None, :]).astype(jnp.float32)     # (N, k)
+    for j in range(v):
+        m = (bi == j).astype(jnp.float32)                    # (k,)
+        p_acc = p_acc.at[:, j].set(onehot @ m)
+        q_acc = q_acc.at[:, j].set(onehot @ (m * s))
+    p_ref[0] = p_acc
+    q_ref[0] = q_acc
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters", "v", "interpret"))
+def bin_overlap_pallas(cluster_of, bin_ids, scores, *, n_clusters, v,
+                       interpret=True):
+    """cluster_of: (B, k) int32; bin_ids: (B, k) int32; scores: (B, k).
+
+    Returns (P, Qsum, count): P (B, N, v) counts and Q (B, N, v) mean scores.
+    """
+    B, k = cluster_of.shape
+    kern = functools.partial(_overlap_kernel, n_clusters=n_clusters, v=v)
+    P, Qs = pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda b: (b, 0)),
+            pl.BlockSpec((1, k), lambda b: (b, 0)),
+            pl.BlockSpec((1, k), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_clusters, v), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, n_clusters, v), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_clusters, v), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_clusters, v), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cluster_of, bin_ids, scores.astype(jnp.float32))
+    Q = Qs / jnp.maximum(P, 1.0)
+    return P, Q

@@ -1,0 +1,14 @@
+import jax
+
+from repro.kernels.bin_overlap.kernel import bin_overlap_pallas
+from repro.kernels.bin_overlap.ref import bin_overlap_ref
+
+
+def bin_overlap(cluster_of, bin_ids, scores, *, n_clusters, v,
+                use_kernel=True):
+    if not use_kernel:
+        return bin_overlap_ref(cluster_of, bin_ids, scores,
+                               n_clusters=n_clusters, v=v)
+    interpret = jax.default_backend() != "tpu"
+    return bin_overlap_pallas(cluster_of, bin_ids, scores,
+                              n_clusters=n_clusters, v=v, interpret=interpret)

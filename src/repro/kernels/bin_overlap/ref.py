@@ -1,0 +1,20 @@
+"""Oracle for bin_overlap: segment_sum over combined (cluster, bin) slots."""
+
+import jax
+import jax.numpy as jnp
+
+
+def bin_overlap_ref(cluster_of, bin_ids, scores, *, n_clusters, v):
+    B, k = cluster_of.shape
+    slot = cluster_of * v + bin_ids
+
+    def one(sl, sc):
+        cnt = jax.ops.segment_sum(jnp.ones((k,), jnp.float32), sl,
+                                  num_segments=n_clusters * v)
+        ssum = jax.ops.segment_sum(sc.astype(jnp.float32), sl,
+                                   num_segments=n_clusters * v)
+        P = cnt.reshape(n_clusters, v)
+        Q = (ssum / jnp.maximum(cnt, 1.0)).reshape(n_clusters, v)
+        return P, Q
+
+    return jax.vmap(one)(slot, scores)

@@ -1,0 +1,2 @@
+from repro.kernels.cluster_score.ops import cluster_score
+from repro.kernels.cluster_score.ref import cluster_score_ref

@@ -1,0 +1,14 @@
+"""Public op: selected-cluster scoring. Pallas on TPU, interpret-mode
+validation on CPU, with the jnp oracle available as an explicit fallback."""
+
+import jax
+
+from repro.kernels.cluster_score.kernel import cluster_score_pallas
+from repro.kernels.cluster_score.ref import cluster_score_ref
+
+
+def cluster_score(q, blocks, sel_ids, *, use_kernel=True):
+    if not use_kernel:
+        return cluster_score_ref(q, blocks, sel_ids)
+    interpret = jax.default_backend() != "tpu"
+    return cluster_score_pallas(q, blocks, sel_ids, interpret=interpret)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the cluster_score kernel."""
+
+import jax.numpy as jnp
+
+
+def cluster_score_ref(q, blocks, sel_ids):
+    """q: (B, dim); blocks: (N, cap, dim); sel_ids: (B, S) -> (B, S, cap)."""
+    gathered = jnp.take(blocks, sel_ids, axis=0)       # (B, S, cap, dim)
+    return jnp.einsum("bd,bscd->bsc", q, gathered).astype(jnp.float32)

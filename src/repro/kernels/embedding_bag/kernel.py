@@ -1,0 +1,45 @@
+"""EmbeddingBag kernel: gather + pool over the hotness axis.
+
+JAX has no native EmbeddingBag; this kernel performs the row gathers with a
+scalar-prefetch index_map (rows are DMA'd HBM->VMEM directly, never
+materializing the (B, hot, d) gather tensor) and accumulates in the output
+VMEM block across the hot grid axis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, table_ref, out_ref):
+    h = pl.program_id(1)
+
+    @pl.when(h == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[0, :] += table_ref[0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_pallas(table, idx, *, interpret=True):
+    """table: (V, d); idx: (B, hot) int32 -> sum-pooled (B, d)."""
+    B, hot = idx.shape
+    V, d = table.shape
+    out = pl.pallas_call(
+        _bag_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, hot),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda b, h, idx: (idx[b, h], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda b, h, idx: (b, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)
+    return out

@@ -1,0 +1,11 @@
+import jax
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def embedding_bag(table, idx, *, use_kernel=True):
+    if not use_kernel:
+        return embedding_bag_ref(table, idx)
+    interpret = jax.default_backend() != "tpu"
+    return embedding_bag_pallas(table, idx, interpret=interpret)

@@ -1,0 +1,7 @@
+"""Oracle: EmbeddingBag = take + sum (equivalently segment_sum over bags)."""
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, idx):
+    return jnp.sum(jnp.take(table, idx, axis=0), axis=1)

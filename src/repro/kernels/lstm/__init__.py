@@ -1,0 +1,2 @@
+from repro.kernels.lstm.ops import lstm_sequence
+from repro.kernels.lstm.ref import lstm_sequence_ref

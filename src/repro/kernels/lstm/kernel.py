@@ -1,0 +1,69 @@
+"""Fused LSTM-selector kernel (paper Stage II).
+
+The whole candidate sequence is processed in ONE kernel invocation per batch
+block: weights (F x 4H, H x 4H) stay resident in VMEM across all n steps,
+gates are computed fused (no per-step HLO op dispatch / HBM round-trips for
+h and c). Grid = batch blocks only; the time loop is a fori_loop inside the
+kernel over the (B_blk, n, F) VMEM-resident feature tile — n<=64 and F~21,
+so the whole per-block working set is < 1 MiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(x_ref, wx_ref, wh_ref, b_ref, out_ref):
+    # x_ref: (Bb, n, F); wx: (F, 4H); wh: (H, 4H); b: (4H,); out: (Bb, n, H)
+    Bb, n, F = x_ref.shape
+    H = wh_ref.shape[0]
+    wx = wx_ref[...]
+    wh = wh_ref[...]
+    b = b_ref[...]
+
+    def step(t, carry):
+        h, c = carry
+        x_t = x_ref[:, t, :]                                  # (Bb, F)
+        gates = (jnp.dot(x_t, wx, preferred_element_type=jnp.float32)
+                 + jnp.dot(h, wh, preferred_element_type=jnp.float32) + b)
+        i = jax.nn.sigmoid(gates[:, 0 * H:1 * H])
+        f = jax.nn.sigmoid(gates[:, 1 * H:2 * H])
+        g = jnp.tanh(gates[:, 2 * H:3 * H])
+        o = jax.nn.sigmoid(gates[:, 3 * H:4 * H])
+        c = f * c + i * g
+        h = o * jnp.tanh(c)
+        out_ref[:, t, :] = h
+        return h, c
+
+    h0 = jnp.zeros((Bb, H), jnp.float32)
+    c0 = jnp.zeros((Bb, H), jnp.float32)
+    jax.lax.fori_loop(0, n, step, (h0, c0))
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def lstm_sequence_pallas(x, wx, wh, b, *, block_b=8, interpret=True):
+    """x: (B, n, F) -> hidden sequence (B, n, H) float32."""
+    B, n, F = x.shape
+    H = wh.shape[0]
+    Bb = min(block_b, B)
+    if B % Bb:
+        pad = Bb - B % Bb
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+    nb = x.shape[0] // Bb
+    out = pl.pallas_call(
+        _lstm_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((Bb, n, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((F, 4 * H), lambda i: (0, 0)),
+            pl.BlockSpec((H, 4 * H), lambda i: (0, 0)),
+            pl.BlockSpec((4 * H,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((Bb, n, H), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], n, H), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), wx.astype(jnp.float32), wh.astype(jnp.float32),
+      b.astype(jnp.float32))
+    return out[:B]

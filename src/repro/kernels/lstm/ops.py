@@ -1,0 +1,11 @@
+import jax
+
+from repro.kernels.lstm.kernel import lstm_sequence_pallas
+from repro.kernels.lstm.ref import lstm_sequence_ref
+
+
+def lstm_sequence(x, wx, wh, b, *, use_kernel=True):
+    if not use_kernel:
+        return lstm_sequence_ref(x, wx, wh, b)
+    interpret = jax.default_backend() != "tpu"
+    return lstm_sequence_pallas(x, wx, wh, b, interpret=interpret)

@@ -1,0 +1,21 @@
+"""Pure-jnp LSTM oracle (same math as core/lstm.py scan path)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_sequence_ref(x, wx, wh, b):
+    B, n, F = x.shape
+    H = wh.shape[0]
+
+    def step(carry, x_t):
+        h, c = carry
+        gates = x_t @ wx + h @ wh + b
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((B, H), jnp.float32), jnp.zeros((B, H), jnp.float32))
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(x.astype(jnp.float32), 1, 0))
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,2 @@
+from repro.kernels.topk.ops import topk
+from repro.kernels.topk.ref import topk_ref

@@ -1,0 +1,59 @@
+"""Blocked top-k kernel: running top-k merge over score tiles.
+
+Scores (B, D) are streamed tile-by-tile through VMEM; a (k,)-sized running
+best (values + global indices) is carried in the output block across the
+tile grid axis, merged per tile with lax.top_k over the concatenated
+[running ; tile] pair. Avoids materializing a full (B, D) sort — D can be
+the whole corpus shard while k ~ 1000.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_kernel(x_ref, vals_ref, idx_ref, *, k, block_d):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _():
+        vals_ref[...] = jnp.full_like(vals_ref, -jnp.inf)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    tile = x_ref[0, :]                                     # (block_d,)
+    base = t * block_d
+    tile_idx = base + jax.lax.iota(jnp.int32, block_d)
+    cat_v = jnp.concatenate([vals_ref[0, :], tile])
+    cat_i = jnp.concatenate([idx_ref[0, :], tile_idx])
+    best_v, pos = jax.lax.top_k(cat_v, k)
+    vals_ref[0, :] = best_v
+    idx_ref[0, :] = jnp.take(cat_i, pos)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_d", "interpret"))
+def topk_pallas(x, k, *, block_d=2048, interpret=True):
+    """x: (B, D) -> (values (B, k), indices (B, k))."""
+    B, D = x.shape
+    block_d = min(block_d, D)
+    if D % block_d:
+        pad = block_d - D % block_d
+        x = jnp.pad(x, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+    nt = x.shape[1] // block_d
+    kern = functools.partial(_topk_kernel, k=k, block_d=block_d)
+    vals, idx = pl.pallas_call(
+        kern,
+        grid=(B, nt),
+        in_specs=[pl.BlockSpec((1, block_d), lambda b, t: (b, t))],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, t: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), x.dtype),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x)
+    return vals, idx

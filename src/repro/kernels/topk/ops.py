@@ -1,0 +1,11 @@
+import jax
+
+from repro.kernels.topk.kernel import topk_pallas
+from repro.kernels.topk.ref import topk_ref
+
+
+def topk(x, k, *, use_kernel=True):
+    if not use_kernel:
+        return topk_ref(x, k)
+    interpret = jax.default_backend() != "tpu"
+    return topk_pallas(x, k, interpret=interpret)

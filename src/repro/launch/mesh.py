@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+
+Single pod: 16 x 16 = 256 chips (TPU v5e pod), axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model); the pod axis
+is pure data parallelism (gradient all-reduce crosses DCN/optical links).
+"""
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(jax.devices())}. "
+            "Set XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE "
+            "importing jax (launch/dryrun.py does this).")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU multi-device tests (8 fake devices)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,93 @@
+"""CluSD retrieval serving driver: builds the index over a synthetic corpus,
+trains the Stage-II LSTM, then serves batched queries end-to-end (sparse ->
+Stage I/II -> partial dense -> fusion), reporting latency percentiles and
+quality vs the full-retrieval oracle.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --docs 20000 --queries 256 \
+      [--ondisk] [--distributed]
+"""
+
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import baselines as bl
+from repro.core import clusd as cl
+from repro.core import disk as dk
+from repro.core import train_lstm as tl
+from repro.data import mrr_at, recall_at, synth_corpus, synth_queries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--clusters", type=int, default=256)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--epochs", type=int, default=40)
+    ap.add_argument("--ondisk", action="store_true")
+    args = ap.parse_args()
+
+    import dataclasses
+    cfg = dataclasses.replace(
+        get_config("clusd-msmarco", "smoke"),
+        n_docs=args.docs, dim=args.dim, n_clusters=args.clusters,
+        vocab=2048, k_sparse=512, bins=(10, 25, 50, 100, 200, 512),
+        n_candidates=32, max_selected=16, k_final=256,
+        train_queries=512, epochs=args.epochs)
+
+    print("building corpus + index ...", flush=True)
+    corpus = synth_corpus(0, cfg.n_docs, cfg.dim, cfg.vocab)
+    index = cl.build_index(cfg, jax.random.key(0), corpus.embeddings,
+                           corpus.doc_terms, corpus.doc_weights)
+    train_q = synth_queries(1, corpus, cfg.train_queries)
+    _, feats, labels = tl.make_labels(cfg, index, train_q.q_dense,
+                                      train_q.q_terms, train_q.q_weights)
+    index.lstm_params, hist = tl.train_selector(
+        cfg, jax.random.key(2), np.asarray(feats), np.asarray(labels))
+    print(f"LSTM trained: loss {hist[0]:.4f} -> {hist[-1]:.4f}", flush=True)
+
+    test_q = synth_queries(9, corpus, args.queries)
+    fn = jax.jit(lambda qd, qt, qw: cl.retrieve(cfg, index, qd, qt, qw)[:2])
+    lat = []
+    all_ids = []
+    for i in range(0, args.queries, args.batch):
+        qd = test_q.q_dense[i:i + args.batch]
+        qt = test_q.q_terms[i:i + args.batch]
+        qw = test_q.q_weights[i:i + args.batch]
+        t0 = time.perf_counter()
+        ids, scores = fn(qd, qt, qw)
+        ids.block_until_ready()
+        lat.append((time.perf_counter() - t0) * 1e3 / qd.shape[0])
+        all_ids.append(np.asarray(ids))
+    ids = np.concatenate(all_ids)
+    lat = np.asarray(lat[1:])  # drop compile
+
+    oracle_ids, _ = cl.full_dense_topk(index.embeddings, test_q.q_dense, 64)
+    print(f"CluSD   MRR@10={mrr_at(ids, test_q.rel_doc):.4f} "
+          f"R@{cfg.k_final}={recall_at(ids, test_q.rel_doc, cfg.k_final):.4f}")
+    print(f"oracle-dense MRR@10={mrr_at(np.asarray(oracle_ids), test_q.rel_doc):.4f}")
+    print(f"serve latency/query: mean={lat.mean():.2f}ms p99={np.percentile(lat, 99):.2f}ms")
+
+    if args.ondisk:
+        tmp = tempfile.mkdtemp()
+        store = dk.DiskClusterStore(os.path.join(tmp, "blocks.bin"),
+                                    corpus.embeddings, index.cluster_docs)
+        ids_d, _, stats = dk.ondisk_clusd_retrieve(
+            cfg, index, store, test_q.q_dense[:16], test_q.q_terms[:16],
+            test_q.q_weights[:16])
+        print(f"on-disk: {stats.n_ops} block reads, "
+              f"{stats.bytes/2**20:.1f} MiB, model {stats.model_ms():.1f} ms, "
+              f"MRR@10={mrr_at(np.asarray(ids_d), test_q.rel_doc[:16]):.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

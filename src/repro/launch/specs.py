@@ -1,0 +1,377 @@
+"""Dry-run cell builders: for every (arch x shape) return the step function,
+abstract inputs (ShapeDtypeStruct — never allocated), and input shardings
+for a given production mesh. See DESIGN.md §4/§6 for the sharding story.
+"""
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.configs import get_config
+from repro.configs.shapes import ShapeSpec, cell_is_skipped
+from repro.models import nequip as nq
+from repro.models import recsys as rs
+from repro.models import transformer as tf
+from repro.models.sharding import named_sharding, rules_ctx, spec
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    rules: dict
+    meta: dict
+
+
+def _pad_to(x, m):
+    return ((x + m - 1) // m) * m
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _opt_abstract(params_abs, opt_dtype):
+    mk = lambda l: _sds(l.shape, opt_dtype if jnp.issubdtype(l.dtype, jnp.floating)
+                        else l.dtype)
+    return {"mu": jax.tree.map(mk, params_abs),
+            "nu": jax.tree.map(mk, params_abs),
+            "count": _sds((), jnp.int32)}
+
+
+def _opt_shardings(param_sh, mesh):
+    return {"mu": param_sh, "nu": param_sh,
+            "count": NamedSharding(mesh, P())}
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch, cfg, shape, mesh, multi_pod):
+    B, S = shape.global_batch, shape.seq_len
+    rules = {}
+    if shape.mode in ("decode", "prefill"):
+        rules["seq_kv"] = ("model",)  # flash-decode / cache-emit seq shard
+    if B == 1:
+        rules["batch"] = None  # long_500k: batch axis unshardable
+    with rules_ctx(rules, mesh=None, pod_dp=multi_pod):
+        params_abs = tf.abstract_params(cfg)
+        params_sh = tf.param_shardings(cfg, mesh)
+        batch_sh = named_sharding(mesh, "batch", None)
+        if shape.mode == "train":
+            fn = tf.make_train_step(cfg)
+            opt_abs = _opt_abstract(params_abs, cfg.opt_state_dtype)
+            args = (params_abs, opt_abs,
+                    {"tokens": _sds((B, S), jnp.int32),
+                     "labels": _sds((B, S), jnp.int32)})
+            shardings = (params_sh, _opt_shardings(params_sh, mesh),
+                         {"tokens": batch_sh, "labels": batch_sh})
+        elif shape.mode == "prefill":
+            fn = tf.make_prefill_step(cfg)
+            args = (params_abs, _sds((B, S), jnp.int32))
+            shardings = (params_sh, batch_sh)
+        else:  # decode
+            fn = tf.make_decode_step(cfg)
+            cache_abs = tf.abstract_cache(cfg, B, S)
+            cache_sh = tf.cache_shardings(cfg, mesh, B, S)
+            args = (params_abs, cache_abs, _sds((B, 1), jnp.int32),
+                    _sds((), jnp.int32))
+            shardings = (params_sh, cache_sh, batch_sh,
+                         NamedSharding(mesh, P()))
+    return fn, args, shardings, rules
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_sampled_sizes(shape):
+    """Padded (n_nodes, n_edges) of the fanout-sampled subgraph."""
+    n, nodes, edges = shape.batch_nodes, shape.batch_nodes, 0
+    for f in shape.fanout:
+        edges += n * f
+        n = n * f
+        nodes += n
+    return nodes, edges
+
+
+def _gnn_cell(arch, cfg, shape, mesh, multi_pod):
+    dt = jnp.float32
+    rules = {}
+    if shape.name == "molecule":
+        G = shape.n_graphs
+        N = shape.n_nodes * G
+        E = _pad_to(shape.n_edges * G, 512)
+        d_feat = 0
+    elif shape.batch_nodes:  # minibatch_lg — shapes from the neighbor sampler
+        N, E = _gnn_sampled_sizes(shape)
+        N, E = _pad_to(N, 512), _pad_to(E, 512)
+        G = shape.batch_nodes + 1          # +1 ignore bucket for non-targets
+        d_feat = shape.d_feat
+        rules["nodes"] = ("data",)
+    else:
+        N = _pad_to(shape.n_nodes, 512) if shape.n_nodes > 100_000 else shape.n_nodes
+        E = _pad_to(shape.n_edges, 512)
+        G = 1
+        d_feat = shape.d_feat
+        if shape.n_nodes > 100_000:
+            rules["nodes"] = ("data",)
+
+    owner_sharded = getattr(cfg, "msg_impl", "pjit") == "owner_shard_map"
+    with rules_ctx(rules, mesh=None, pod_dp=multi_pod):
+        params_abs = nq.abstract_params(cfg, d_feat)
+        params_sh = nq.param_shardings(cfg, mesh, d_feat)
+        node_sh = named_sharding(mesh, "nodes", None)
+        node1_sh = named_sharding(mesh, "nodes")
+        edge_sh = named_sharding(mesh, "edges")
+        batch = {
+            "positions": _sds((N, 3), dt),
+            "graph_id": _sds((N,), jnp.int32),
+            "energy_target": _sds((G,), dt),
+        }
+        batch_sh = {
+            "positions": node_sh,
+            "graph_id": node1_sh,
+            "energy_target": NamedSharding(mesh, P()),
+        }
+        if owner_sharded:
+            # edges pre-partitioned by dst owner (§Perf); 10% imbalance pad
+            n_shards = mesh.devices.size
+            e_loc = max(8, ((int(1.1 * E / n_shards) + 7) // 8) * 8)
+            shard_spec = NamedSharding(
+                mesh, P(tuple(mesh.axis_names), None))
+            for k, dtp in (("edge_src_sharded", jnp.int32),
+                           ("edge_dst_sharded", jnp.int32),
+                           ("edge_mask_sharded", jnp.float32)):
+                batch[k] = _sds((n_shards, e_loc), dtp)
+                batch_sh[k] = shard_spec
+        else:
+            batch.update({
+                "edge_src": _sds((E,), jnp.int32),
+                "edge_dst": _sds((E,), jnp.int32),
+                "edge_mask": _sds((E,), dt),
+            })
+            batch_sh.update({"edge_src": edge_sh, "edge_dst": edge_sh,
+                             "edge_mask": edge_sh})
+        if d_feat:
+            batch["node_feat"] = _sds((N, d_feat), dt)
+            batch_sh["node_feat"] = node_sh
+        else:
+            batch["species"] = _sds((N,), jnp.int32)
+            batch_sh["species"] = node1_sh
+        if shape.batch_nodes:
+            batch["energy_weight"] = _sds((G,), dt)
+            batch_sh["energy_weight"] = NamedSharding(mesh, P())
+
+        if owner_sharded:
+            from repro.models.nequip_sharded import make_train_step_sharded
+            fn = make_train_step_sharded(cfg, mesh, tuple(mesh.axis_names))
+        else:
+            fn = nq.make_train_step(cfg)
+        opt_abs = _opt_abstract(params_abs, "float32")
+        args = (params_abs, opt_abs, batch)
+        shardings = (params_sh, _opt_shardings(params_sh, mesh), batch_sh)
+    return fn, args, shardings, rules
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_batch(cfg, B, with_label=True):
+    batch = {"sparse": _sds((B, len(cfg.table_sizes)), jnp.int32)}
+    if cfg.kind == "dlrm":
+        batch["dense"] = _sds((B, cfg.n_dense), jnp.float32)
+    if cfg.kind == "din":
+        batch["hist_item"] = _sds((B, cfg.seq_len), jnp.int32)
+        batch["hist_cate"] = _sds((B, cfg.seq_len), jnp.int32)
+        batch["hist_mask"] = _sds((B, cfg.seq_len), jnp.float32)
+    if with_label:
+        batch["label"] = _sds((B,), jnp.int32)
+    return batch
+
+
+def _recsys_batch_shardings(batch, mesh):
+    b2 = named_sharding(mesh, "batch", None)
+    b1 = named_sharding(mesh, "batch")
+    return {k: (b1 if v.ndim == 1 else b2) for k, v in batch.items()}
+
+
+def _recsys_cell(arch, cfg, shape, mesh, multi_pod):
+    from repro.core.retrieval import (
+        CandidateIndexSpec, brute_force_retrieval, clusd_candidate_retrieval)
+    from repro.core.lstm import lstm_init
+    rules = {}
+    with rules_ctx(rules, mesh=None, pod_dp=multi_pod):
+        params_abs = rs.abstract_params(cfg)
+        params_sh = rs.param_shardings(cfg, mesh)
+        if shape.mode in ("train", "serve"):
+            B = shape.batch
+            batch = _recsys_batch(cfg, B, with_label=shape.mode == "train")
+            batch_sh = _recsys_batch_shardings(batch, mesh)
+            if shape.mode == "train":
+                fn = rs.make_train_step(cfg)
+                opt_abs = _opt_abstract(params_abs, "float32")
+                args = (params_abs, opt_abs, batch)
+                shardings = (params_sh, _opt_shardings(params_sh, mesh),
+                             batch_sh)
+            else:
+                fn = rs.make_serve_step(cfg)
+                args = (params_abs, batch)
+                shardings = (params_sh, batch_sh)
+        else:  # retrieval_cand: CluSD-accelerated scorer (paper first-class)
+            spec_ = CandidateIndexSpec(
+                n_candidates=shape.n_candidates, n_clusters=4096, cap=256,
+                local_topk=getattr(cfg, "retrieval_local_topk", False))
+            N, cap, d = spec_.n_clusters, spec_.cap, cfg.embed_dim
+            rules["batch"] = None  # single query
+            batch = _recsys_batch(cfg, 1, with_label=False)
+            batch_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), batch)
+            n_item = 2
+            cand_sparse = _sds((N * cap, n_item), jnp.int32)
+            item_blocks = _sds((N, cap, d), jnp.float32)
+            centroids = _sds((N, d), jnp.float32)
+            nb = min(64, N - 1)
+            nb_ids = _sds((N, nb), jnp.int32)
+            nb_sims = _sds((N, nb), jnp.float32)
+            lstm_abs = jax.eval_shape(
+                lambda: lstm_init(jax.random.key(0),
+                                  1 + spec_.u_bins + 2 * spec_.v_bins, 32))
+            repl = NamedSharding(mesh, P())
+            cand_sh = named_sharding(mesh, "candidates", None)
+            blocks_sh = named_sharding(mesh, "clusters", None, None)
+
+            def fn(params, batch, cand_sparse, item_blocks, centroids,
+                   lstm_params, nb_ids, nb_sims):
+                return clusd_candidate_retrieval(
+                    cfg, spec_, params, batch, cand_sparse, item_blocks,
+                    centroids, lstm_params, nb_ids, nb_sims)
+
+            args = (params_abs, batch, cand_sparse, item_blocks, centroids,
+                    lstm_abs, nb_ids, nb_sims)
+            shardings = (params_sh, batch_sh, cand_sh, blocks_sh, repl,
+                         jax.tree.map(lambda _: repl, lstm_abs), repl, repl)
+    return fn, args, shardings, rules
+
+
+# ---------------------------------------------------------------------------
+# the paper's own system (clusd-msmarco): distributed serve step
+# ---------------------------------------------------------------------------
+
+def _clusd_cell(arch, cfg, shape, mesh, multi_pod):
+    """CluSD serving at MS MARCO scale. impl='shard_map' is the optimized
+    blocked/owner-sharded pipeline (core/distributed.py); impl='pjit' is the
+    naive annotation-only port of the single-host retrieve (its all-gather
+    of the 27 GB embedding store is the §Perf baseline finding)."""
+    from repro.core import distributed as dist
+    from repro.core.lstm import lstm_init
+    from repro.core import features as feat_lib
+    nm = mesh.shape["model"]
+    N, cap, dim, V = cfg.n_clusters, cfg.cluster_cap, cfg.dim, cfg.vocab
+    B = shape.batch or cfg.serve_batch
+    Tq = 32
+    m = min(cfg.n_neighbors, N - 1)
+    p_shard = max(8, cfg.max_postings // nm)
+    feat_dim = 1 + cfg.u_bins + 2 * cfg.v_bins
+    lstm_abs = jax.eval_shape(
+        lambda: lstm_init(jax.random.key(0), feat_dim, cfg.lstm_hidden))
+    repl = NamedSharding(mesh, P())
+    rules = {}
+    args_common = {
+        "centroids": (_sds((N, dim), jnp.float32), repl),
+        "nb_ids": (_sds((N, m), jnp.int32), repl),
+        "nb_sims": (_sds((N, m), jnp.float32), repl),
+        "lstm": (lstm_abs, jax.tree.map(lambda _: repl, lstm_abs)),
+        "qd": (_sds((B, dim), jnp.float32),
+               named_sharding(mesh, "queries", None)),
+        "qt": (_sds((B, Tq), jnp.int32),
+               named_sharding(mesh, "queries", None)),
+        "qw": (_sds((B, Tq), jnp.float32),
+               named_sharding(mesh, "queries", None)),
+    }
+    if cfg.impl == "shard_map":
+        serve = dist.make_serve_step(cfg, mesh, (N, cap, dim, V, p_shard, m),
+                                     feat_dim)
+        blocks = (_sds((N, cap, dim), jnp.float32),
+                  named_sharding(mesh, "clusters", None, None))
+        pd = (_sds((V, nm, p_shard), jnp.int32),
+              NamedSharding(mesh, P(None, "model", None)))
+        pw = (_sds((V, nm, p_shard), jnp.float32),
+              NamedSharding(mesh, P(None, "model", None)))
+        order = [blocks, pd, pw, args_common["centroids"],
+                 args_common["nb_ids"], args_common["nb_sims"],
+                 args_common["lstm"], args_common["qd"], args_common["qt"],
+                 args_common["qw"]]
+        fn = serve
+    else:  # naive pjit port of the single-host pipeline
+        from repro.core import clusd as cl
+        from repro.core.sparse import SparseIndex
+        from repro.core import bins as bins_lib
+
+        bin_ids_const = bins_lib.rank_bin_ids(cfg.bins, cfg.k_sparse)
+
+        def fn(emb, centroids, cluster_docs, doc_cluster, nb_ids, nb_sims,
+               pd, pw, lstm, qd, qt, qw):
+            index = cl.CluSDIndex(
+                centroids=centroids,
+                cluster_docs=cluster_docs, doc_cluster=doc_cluster,
+                neighbor_ids=nb_ids, neighbor_sims=nb_sims,
+                embeddings=emb, sparse_index=SparseIndex(pd, pw, emb.shape[0]),
+                lstm_params=lstm, bin_ids=bin_ids_const)
+            ids, scores, _ = cl.retrieve(cfg, index, qd, qt, qw,
+                                         selector_params=lstm)
+            return ids, scores
+
+        D = N * cap
+        emb = (_sds((D, dim), jnp.float32), named_sharding(mesh, "docs", None))
+        cd_ = (_sds((N, cap), jnp.int32), repl)
+        dc = (_sds((D,), jnp.int32), repl)
+        pd = (_sds((V, cfg.max_postings), jnp.int32),
+              NamedSharding(mesh, P(None, "model")))
+        pw = (_sds((V, cfg.max_postings), jnp.float32),
+              NamedSharding(mesh, P(None, "model")))
+        order = [emb, args_common["centroids"], cd_, dc,
+                 args_common["nb_ids"], args_common["nb_sims"],
+                 pd, pw, args_common["lstm"], args_common["qd"],
+                 args_common["qt"], args_common["qw"]]
+    args = tuple(a for a, _ in order)
+    shardings = tuple(s for _, s in order)
+    return fn, args, shardings, rules
+
+
+# ---------------------------------------------------------------------------
+# entry
+# ---------------------------------------------------------------------------
+
+def build_cell(arch, shape: ShapeSpec, mesh, multi_pod=False,
+               overrides=None) -> Cell:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    skip = cell_is_skipped(cfg, shape)
+    if skip:
+        raise ValueError(f"skipped cell: {skip}")
+    fam = cfg.family
+    if fam == "lm":
+        fn, args, shardings, rules = _lm_cell(arch, cfg, shape, mesh, multi_pod)
+    elif fam == "gnn":
+        fn, args, shardings, rules = _gnn_cell(arch, cfg, shape, mesh, multi_pod)
+    elif fam == "recsys":
+        fn, args, shardings, rules = _recsys_cell(arch, cfg, shape, mesh,
+                                                  multi_pod)
+    elif fam == "retrieval":
+        fn, args, shardings, rules = _clusd_cell(arch, cfg, shape, mesh,
+                                                 multi_pod)
+    else:
+        raise ValueError(fam)
+    return Cell(arch=arch, shape=shape, fn=fn, args=args,
+                in_shardings=shardings, rules=rules,
+                meta={"family": fam, "mode": shape.mode})

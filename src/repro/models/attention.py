@@ -1,0 +1,78 @@
+"""Attention: GQA with optional sliding window; chunked-q train/prefill and
+flash-decode style single-token decode (KV-seq sharded, logsumexp combine
+inserted by SPMD partitioner through the softmax).
+
+Baseline train/prefill computes full masked scores per q-chunk (2x causal
+FLOP waste — tracked in the roofline MODEL_FLOPS ratio; the Pallas/banded
+variants are the §Perf hillclimb).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import logical
+
+
+def _chunk_attend(q, k, v, q_start, *, causal, window, softmax_dtype=jnp.float32):
+    """q: (B, C, Hkv, G, hd); k/v: (B, S, Hkv, hd). Returns (B, C, Hkv, G, hd)."""
+    B, C, Hkv, G, hd = q.shape
+    S = k.shape[1]
+    scores = jnp.einsum("bchgd,bshd->bhgcs", q, k) / (hd ** 0.5)
+    qpos = q_start + jnp.arange(C)[:, None]            # (C, 1)
+    kpos = jnp.arange(S)[None, :]                      # (1, S)
+    mask = jnp.ones((C, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores.astype(softmax_dtype), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgcs,bshd->bchgd", probs, v)
+
+
+def attention(q, k, v, *, causal=True, window=None, q_chunk=512):
+    """q: (B, S, Hq, hd); k/v: (B, S, Hkv, hd) -> (B, S, Hq, hd)."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    q = q.reshape(B, S, Hkv, G, hd)
+    if S <= q_chunk:
+        out = _chunk_attend(q, k, v, 0, causal=causal, window=window)
+        return out.reshape(B, S, Hq, hd)
+    assert S % q_chunk == 0, (S, q_chunk)
+    n = S // q_chunk
+    qc = q.reshape(B, n, q_chunk, Hkv, G, hd)
+
+    def body(_, xs):
+        i, q_i = xs
+        out = _chunk_attend(q_i, k, v, i * q_chunk, causal=causal, window=window)
+        return None, out
+
+    # remat: backward recomputes the (C, S) score slab instead of storing it
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(
+        body, None, (jnp.arange(n), jnp.moveaxis(qc, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, Hq, hd)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token decode. q: (B, 1, Hq, hd); caches: (B, S, Hkv, hd).
+
+    The KV-seq axis is annotated `seq_kv`; when sharded over 'model' the
+    partitioner emits the flash-decode combine (all-reduce of max/sum/out).
+    """
+    B, S, Hkv, hd = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    q = q.reshape(B, Hkv, G, hd)
+    k_cache = logical(k_cache, "batch", "seq_kv", "kv_heads", "head_dim")
+    v_cache = logical(v_cache, "batch", "seq_kv", "kv_heads", "head_dim")
+    scores = jnp.einsum("bhgd,bshd->bhgs", q, k_cache) / (hd ** 0.5)
+    kpos = jnp.arange(S)[None, None, None, :]
+    scores = jnp.where(kpos < cache_len, scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v_cache)
+    return out.reshape(B, 1, Hq, hd)

@@ -1,0 +1,57 @@
+"""Shared layers: init helpers, RMSNorm, MLPs, rotary embeddings."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import logical
+
+
+def dense_init(rng, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def rmsnorm(x, gamma, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU FFN. x: (B, S, d); w_gate/w_up: (d, f); w_down: (f, d).
+
+    NOTE: PartitionSpec None means REPLICATED, not "unspecified" — the batch
+    axis must be named in every constraint or GSPMD gathers it globally.
+    """
+    h = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    h = logical(h, "batch", "seq", "ff_act")
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(x.dtype))
+
+
+def mlp(x, ws, bs, act=jax.nn.relu, final_act=False):
+    """Plain MLP over last dim; ws/bs lists."""
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        x = jnp.einsum("...d,df->...f", x, w.astype(x.dtype)) + b.astype(x.dtype)
+        if i + 1 < len(ws) or final_act:
+            x = act(x)
+    return x
+
+
+def rope_freqs(head_dim, theta):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,306 @@
+"""RecSys model zoo: dlrm-mlperf / deepfm / wide-deep / din.
+
+JAX has no native EmbeddingBag and no CSR sparse — the embedding lookup
+substrate here is built from `jnp.take` + `jax.ops.segment_sum` (assignment
+requirement). Tables are row-sharded over ('data','model') (mod-sharding is
+the shard_map/a2a hillclimb variant in repro/runtime/collectives.py).
+
+`make_retrieval_step` scores one query against n_candidates items two-tower
+style — the surface where the paper's CluSD technique plugs in first-class
+(see repro/core/retrieval.py).
+"""
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.sharding import logical, named_sharding
+from repro.models.transformer import Leaf, _is_leaf
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag substrate
+# ---------------------------------------------------------------------------
+
+def embedding_lookup(table, idx):
+    """table: (rows, d) [row-sharded]; idx: int32 (...,) -> (..., d)."""
+    return jnp.take(table, idx, axis=0)
+
+
+def embedding_bag(table, idx, weights=None, combine="sum"):
+    """Fixed-hotness bag: idx (..., hot) -> (..., d)."""
+    emb = jnp.take(table, idx, axis=0)                     # (..., hot, d)
+    if weights is not None:
+        emb = emb * weights[..., None]
+    if combine == "sum":
+        return jnp.sum(emb, axis=-2)
+    if combine == "mean":
+        return jnp.mean(emb, axis=-2)
+    if combine == "max":
+        return jnp.max(emb, axis=-2)
+    raise ValueError(combine)
+
+
+def embedding_bag_ragged(table, flat_idx, segment_ids, n_bags, weights=None):
+    """Ragged bag (EmbeddingBag semantics): gather + segment_sum."""
+    emb = jnp.take(table, flat_idx, axis=0)                # (nnz, d)
+    if weights is not None:
+        emb = emb * weights[:, None]
+    return jax.ops.segment_sum(emb, segment_ids, num_segments=n_bags)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _mlp_leaves(name, dims_in, dims, pdt, prefix):
+    out = {}
+    d = dims_in
+    for i, h in enumerate(dims):
+        out[f"{prefix}_w{i}"] = Leaf((d, h), pdt, (None, None))
+        out[f"{prefix}_b{i}"] = Leaf((h,), pdt, (None,), init="zeros")
+        d = h
+    return out, d
+
+
+def _padded_rows(rows, mult=512):
+    """Tables are padded to a shardable row count (512 = lcm of every mesh
+    factor used for 'table_rows'); indices never reach the pad rows."""
+    return max(mult, ((rows + mult - 1) // mult) * mult)
+
+
+def param_template(cfg):
+    pdt = cfg.param_dtype
+    t = {"tables": {f"t{i}": Leaf((_padded_rows(rows), cfg.embed_dim), pdt,
+                                  ("table_rows", None))
+                    for i, rows in enumerate(cfg.table_sizes)}}
+    if cfg.kind in ("wide_deep", "deepfm"):
+        # dim-1 tables for the wide / first-order-FM branch
+        t["wide"] = {f"t{i}": Leaf((_padded_rows(rows), 1), pdt,
+                                   ("table_rows", None))
+                     for i, rows in enumerate(cfg.table_sizes)}
+        t["wide_bias"] = Leaf((1,), pdt, (None,), init="zeros")
+
+    if cfg.kind == "dlrm":
+        bot, d = _mlp_leaves("bot", cfg.n_dense, cfg.bot_mlp, pdt, "bot")
+        t.update(bot)
+        n_f = cfg.n_sparse + 1
+        n_int = n_f * (n_f - 1) // 2
+        top_in = n_int + cfg.embed_dim
+        top, _ = _mlp_leaves("top", top_in, cfg.top_mlp, pdt, "top")
+        t.update(top)
+    elif cfg.kind == "deepfm":
+        deep_in = cfg.n_sparse * cfg.embed_dim
+        deep, d = _mlp_leaves("deep", deep_in, cfg.mlp, pdt, "deep")
+        t.update(deep)
+        t["deep_out_w"] = Leaf((d, 1), pdt, (None, None))
+        t["deep_out_b"] = Leaf((1,), pdt, (None,), init="zeros")
+    elif cfg.kind == "wide_deep":
+        deep_in = cfg.n_sparse * cfg.embed_dim
+        deep, d = _mlp_leaves("deep", deep_in, cfg.mlp, pdt, "deep")
+        t.update(deep)
+        t["deep_out_w"] = Leaf((d, 1), pdt, (None, None))
+        t["deep_out_b"] = Leaf((1,), pdt, (None,), init="zeros")
+    elif cfg.kind == "din":
+        # behavior = concat(item, cate) embeddings
+        be = 2 * cfg.embed_dim
+        attn_in = 4 * be
+        attn, d = _mlp_leaves("attn", attn_in, cfg.attn_mlp, pdt, "attn")
+        t.update(attn)
+        t["attn_out_w"] = Leaf((d, 1), pdt, (None, None))
+        t["attn_out_b"] = Leaf((1,), pdt, (None,), init="zeros")
+        # final mlp over [user_emb..., pooled, target]
+        user_dim = (len(cfg.table_sizes) - 2) * cfg.embed_dim
+        mlp_in = user_dim + 2 * be
+        deep, d = _mlp_leaves("deep", mlp_in, cfg.mlp, pdt, "deep")
+        t.update(deep)
+        t["deep_out_w"] = Leaf((d, 1), pdt, (None, None))
+        t["deep_out_b"] = Leaf((1,), pdt, (None,), init="zeros")
+    else:
+        raise ValueError(cfg.kind)
+    return t
+
+
+def init_params(cfg, rng):
+    template = param_template(cfg)
+    flat, treedef = jax.tree.flatten(template, is_leaf=_is_leaf)
+    rngs = jax.random.split(rng, len(flat))
+    leaves = []
+    for leaf, r in zip(flat, rngs):
+        if leaf.init == "zeros":
+            leaves.append(jnp.zeros(leaf.shape, leaf.dtype))
+        else:
+            fan_in = leaf.shape[-2] if len(leaf.shape) >= 2 else leaf.shape[-1]
+            leaves.append(dense_init(r, leaf.shape, leaf.dtype,
+                                     scale=fan_in ** -0.5))
+    return treedef.unflatten(leaves)
+
+
+def abstract_params(cfg):
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, jnp.dtype(l.dtype)),
+                        param_template(cfg), is_leaf=_is_leaf)
+
+
+def param_shardings(cfg, mesh):
+    return jax.tree.map(lambda l: named_sharding(mesh, *l.axes),
+                        param_template(cfg), is_leaf=_is_leaf)
+
+
+def _mlp_apply(params, prefix, x, act=jax.nn.relu, final_act=True):
+    i = 0
+    while f"{prefix}_w{i}" in params:
+        x = x @ params[f"{prefix}_w{i}"] + params[f"{prefix}_b{i}"]
+        last = f"{prefix}_w{i+1}" not in params
+        if (not last) or final_act:
+            x = act(x)
+        i += 1
+    return x
+
+
+# ---------------------------------------------------------------------------
+# forward per kind — returns logits (B,)
+# ---------------------------------------------------------------------------
+
+def forward(cfg, params, batch):
+    sparse = batch["sparse"]                    # (B, n_sparse) int32
+    B = sparse.shape[0]
+    sparse = logical(sparse, "batch", None)
+    embs = jnp.stack(
+        [embedding_lookup(params["tables"][f"t{i}"], sparse[:, i])
+         for i in range(len(cfg.table_sizes))], axis=1)   # (B, F, d)
+    embs = logical(embs, "batch", None, None)
+
+    if cfg.kind == "dlrm":
+        dense = batch["dense"]                  # (B, n_dense)
+        dv = _mlp_apply(params, "bot", dense)   # (B, d)
+        x = jnp.concatenate([dv[:, None, :], embs], axis=1)   # (B, F+1, d)
+        z = jnp.einsum("bfd,bgd->bfg", x, x)
+        f = x.shape[1]
+        iu, ju = jnp.triu_indices(f, k=1)
+        inter = z[:, iu, ju]                    # (B, F(F-1)/2)
+        top_in = jnp.concatenate([inter, dv], axis=-1)
+        logit = _mlp_apply(params, "top", top_in, final_act=False)[:, 0]
+    elif cfg.kind == "deepfm":
+        # FM 2nd order
+        s = jnp.sum(embs, axis=1)
+        fm2 = 0.5 * jnp.sum(s * s - jnp.sum(embs * embs, axis=1), axis=-1)
+        fm1 = sum(embedding_lookup(params["wide"][f"t{i}"], sparse[:, i])[:, 0]
+                  for i in range(len(cfg.table_sizes))) + params["wide_bias"][0]
+        deep = _mlp_apply(params, "deep", embs.reshape(B, -1))
+        deep = (deep @ params["deep_out_w"] + params["deep_out_b"])[:, 0]
+        logit = fm1 + fm2 + deep
+    elif cfg.kind == "wide_deep":
+        wide = sum(embedding_lookup(params["wide"][f"t{i}"], sparse[:, i])[:, 0]
+                   for i in range(len(cfg.table_sizes))) + params["wide_bias"][0]
+        deep = _mlp_apply(params, "deep", embs.reshape(B, -1))
+        deep = (deep @ params["deep_out_w"] + params["deep_out_b"])[:, 0]
+        logit = wide + deep
+    elif cfg.kind == "din":
+        logit = _din_forward(cfg, params, batch)
+    else:
+        raise ValueError(cfg.kind)
+    return logit
+
+
+def _din_forward(cfg, params, batch):
+    """tables: t0=item, t1=cate, t2..=user profile fields."""
+    d = cfg.embed_dim
+    hist_item = batch["hist_item"]              # (B, L)
+    hist_cate = batch["hist_cate"]              # (B, L)
+    hist_mask = batch["hist_mask"]              # (B, L)
+    B, L = hist_item.shape
+    e_hist = jnp.concatenate(
+        [embedding_lookup(params["tables"]["t0"], hist_item),
+         embedding_lookup(params["tables"]["t1"], hist_cate)], axis=-1)  # (B,L,2d)
+    tgt = batch["sparse"]                        # (B, n_sparse): item,cate,user...
+    e_tgt = jnp.concatenate(
+        [embedding_lookup(params["tables"]["t0"], tgt[:, 0]),
+         embedding_lookup(params["tables"]["t1"], tgt[:, 1])], axis=-1)  # (B,2d)
+    # local activation unit
+    t = jnp.broadcast_to(e_tgt[:, None, :], e_hist.shape)
+    af = jnp.concatenate([e_hist, t, e_hist - t, e_hist * t], axis=-1)
+    a = _mlp_apply(params, "attn", af, act=jax.nn.sigmoid)
+    a = (a @ params["attn_out_w"] + params["attn_out_b"])[..., 0]        # (B,L)
+    a = jnp.where(hist_mask > 0, a, -1e30)
+    w = jax.nn.softmax(a, axis=-1)
+    pooled = jnp.einsum("bl,bld->bd", w, e_hist)                         # (B,2d)
+    user = jnp.concatenate(
+        [embedding_lookup(params["tables"][f"t{i}"], tgt[:, i])
+         for i in range(2, len(cfg.table_sizes))], axis=-1)
+    x = jnp.concatenate([user, pooled, e_tgt], axis=-1)
+    deep = _mlp_apply(params, "deep", x)
+    return (deep @ params["deep_out_w"] + params["deep_out_b"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, train_cfg=None):
+    from repro.configs.base import TrainConfig
+    from repro.optim import adamw_update
+    tc = train_cfg or TrainConfig()
+
+    def loss_fn(params, batch):
+        logit = forward(cfg, params, batch)
+        y = batch["label"].astype(jnp.float32)
+        loss = jnp.mean(jnp.maximum(logit, 0) - logit * y
+                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+        return loss
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, stats = adamw_update(
+            grads, opt_state, params, lr=tc.lr, grad_clip=tc.grad_clip)
+        return params, opt_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def make_serve_step(cfg):
+    def serve(params, batch):
+        return jax.nn.sigmoid(forward(cfg, params, batch))
+    return serve
+
+
+# ---------------------------------------------------------------------------
+# retrieval (two-tower): 1 query vs n_candidates — CluSD's host surface
+# ---------------------------------------------------------------------------
+
+def user_tower(cfg, params, batch):
+    """(B, d) user/query vector."""
+    if cfg.kind == "dlrm":
+        return _mlp_apply(params, "bot", batch["dense"])
+    if cfg.kind == "din":
+        tgt = batch["sparse"]
+        user = sum(embedding_lookup(params["tables"][f"t{i}"], tgt[:, i])
+                   for i in range(2, len(cfg.table_sizes)))
+        hist = embedding_lookup(params["tables"]["t0"], batch["hist_item"])
+        pooled = jnp.mean(hist * batch["hist_mask"][..., None], axis=1)
+        return user + pooled
+    # deepfm / wide_deep: pooled user-field embeddings
+    sparse = batch["sparse"]
+    n_user = len(cfg.table_sizes) // 2
+    return sum(embedding_lookup(params["tables"][f"t{i}"], sparse[:, i])
+               for i in range(n_user))
+
+
+def candidate_tower(cfg, params, cand_sparse):
+    """cand_sparse: (n_cand, n_item_fields) -> (n_cand, d)."""
+    n_item = cand_sparse.shape[1]
+    v = sum(embedding_lookup(params["tables"][f"t{i}"], cand_sparse[:, i])
+            for i in range(n_item))
+    return logical(v, "candidates", None)
+
+
+def make_retrieval_step(cfg, k=100):
+    def retrieve(params, batch, cand_sparse):
+        u = user_tower(cfg, params, batch)                # (B, d)
+        v = candidate_tower(cfg, params, cand_sparse)     # (n_cand, d)
+        scores = jnp.einsum("bd,nd->bn", u, v)
+        scores = logical(scores, "batch", "candidates")
+        return jax.lax.top_k(scores, k)
+    return retrieve

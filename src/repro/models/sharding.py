@@ -1,0 +1,111 @@
+"""Logical-axis sharding: models annotate tensors with logical names; the
+launcher installs a rules table mapping logical names -> mesh axes.
+
+This keeps model code mesh-agnostic (MaxText-style) and makes sharding a
+config/hillclimb knob rather than a code change.
+"""
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+# Default rules for the production (data, model) mesh; the multi-pod mesh
+# prepends a pure-DP "pod" axis to every "batch"-like logical axis.
+BASE_RULES = {
+    # activations
+    "batch": ("data",),
+    "seq": None,
+    "seq_kv": None,           # decode KV-sequence axis (flash-decode shards it)
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": None,
+    "head_dim": None,
+    "ff_act": ("model",),
+    # weights
+    "vocab": ("model",),
+    "embed_w": ("data",),     # FSDP row shard
+    "ff_w": ("model",),
+    "heads_w": ("model",),
+    "experts": ("model",),
+    "layers": None,
+    # gnn / recsys
+    "edges": ("data", "model"),
+    "nodes": None,
+    "table_rows": ("data", "model"),
+    "candidates": ("model",),
+    # retrieval (CluSD)
+    "docs": ("model",),
+    "clusters": ("model",),
+    "queries": ("data",),
+}
+
+
+def install_rules(rules=None, mesh=None, pod_dp=False):
+    """Install rules (dict logical->mesh-axis tuple or None) + active mesh.
+
+    pod_dp extensions are applied BEFORE per-cell overrides so an override
+    like batch=None (unshardable batch-1 decode) always wins.
+    """
+    table = dict(BASE_RULES)
+    if pod_dp:
+        # pure-DP pod axis on batch-like axes; FSDP weight shards and
+        # embedding-table rows also span the pod axis so the 480B-param /
+        # 188M-row configs fit per-chip HBM.
+        for key in ("batch", "queries", "embed_w", "table_rows"):
+            cur = table.get(key) or ()
+            table[key] = ("pod",) + tuple(cur)
+    if rules:
+        table.update(rules)
+    _state.rules = table
+    _state.mesh = mesh
+    return table
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def rules_ctx(rules=None, mesh=None, pod_dp=False):
+    prev = (getattr(_state, "rules", None), getattr(_state, "mesh", None))
+    install_rules(rules, mesh, pod_dp)
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def spec(*names) -> P:
+    """PartitionSpec for a tuple of logical axis names (None = replicated)."""
+    rules = current_rules() or BASE_RULES
+    parts = []
+    for nm in names:
+        if nm is None:
+            parts.append(None)
+            continue
+        ax = rules.get(nm)
+        if ax is None:
+            parts.append(None)
+        elif isinstance(ax, (tuple, list)):
+            parts.append(tuple(ax) if len(ax) > 1 else ax[0])
+        else:
+            parts.append(ax)
+    return P(*parts)
+
+
+def logical(x, *names):
+    """with_sharding_constraint by logical names (no-op without a mesh)."""
+    mesh = getattr(_state, "mesh", None)
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec(*names)))
+
+
+def named_sharding(mesh, *names):
+    return jax.sharding.NamedSharding(mesh, spec(*names))

@@ -1,0 +1,385 @@
+"""Decoder-only transformer LM: GQA + RoPE (+ QKV bias, SWA, MoE with dense
+residual), `lax.scan` over stacked layer params, remat policy, chunked
+cross-entropy so full logits are never materialized.
+
+Covers arctic-480b / mixtral-8x7b / qwen2-1.5b / deepseek-67b / qwen2.5-32b.
+"""
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models.attention import attention, decode_attention
+from repro.models.layers import apply_rope, dense_init, rmsnorm, swiglu
+from repro.models.sharding import logical, spec, named_sharding
+
+
+@dataclasses.dataclass
+class Leaf:
+    """Parameter leaf spec: shape + dtype + logical sharding axes.
+
+    Not registered as a pytree node on purpose: tree ops treat it as a leaf.
+    """
+    shape: Tuple[int, ...]
+    dtype: Any
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | ones | zeros
+
+
+def _expert_parallel(cfg) -> bool:
+    # EP when the expert count can cover a 16-way model axis; else TP-in-expert.
+    return cfg.moe and cfg.n_experts % 16 == 0
+
+
+def param_template(cfg):
+    d, hd = cfg.d_model, cfg.hd
+    L, Hq, Hkv = cfg.n_layers, cfg.n_heads, cfg.n_kv_heads
+    pdt = cfg.param_dtype
+    t = {
+        # vocab-sharded over 'model'; rows replicated (row-FSDP on these two
+        # tables would force a 1GB lm_head all-gather per loss chunk)
+        "embed": Leaf((cfg.vocab_size, d), pdt, ("vocab", "embed")),
+        "lm_head": Leaf((d, cfg.vocab_size), pdt, ("embed", "vocab")),
+        "final_norm": Leaf((d,), pdt, ("embed",), init="ones"),
+    }
+    lay = {
+        "ln1": Leaf((L, d), pdt, ("layers", "embed"), init="ones"),
+        "ln2": Leaf((L, d), pdt, ("layers", "embed"), init="ones"),
+        "wq": Leaf((L, d, Hq * hd), pdt, ("layers", "embed_w", "heads_w")),
+        "wk": Leaf((L, d, Hkv * hd), pdt, ("layers", "embed_w", None)),
+        "wv": Leaf((L, d, Hkv * hd), pdt, ("layers", "embed_w", None)),
+        "wo": Leaf((L, Hq * hd, d), pdt, ("layers", "heads_w", "embed_w")),
+    }
+    if cfg.qkv_bias:
+        lay["bq"] = Leaf((L, Hq * hd), pdt, ("layers", "heads_w"), init="zeros")
+        lay["bk"] = Leaf((L, Hkv * hd), pdt, ("layers", None), init="zeros")
+        lay["bv"] = Leaf((L, Hkv * hd), pdt, ("layers", None), init="zeros")
+    if cfg.moe:
+        E, f = cfg.n_experts, cfg.moe_d_ff
+        ep = _expert_parallel(cfg)
+        eax = ("layers", "experts", "embed_w", None) if ep \
+            else ("layers", None, "embed_w", "ff_w")
+        dax = ("layers", "experts", None, "embed_w") if ep \
+            else ("layers", None, "ff_w", "embed_w")
+        lay["router"] = Leaf((L, d, E), pdt, ("layers", None, None))
+        lay["moe_wg"] = Leaf((L, E, d, f), pdt, eax)
+        lay["moe_wu"] = Leaf((L, E, d, f), pdt, eax)
+        lay["moe_wd"] = Leaf((L, E, f, d), pdt, dax)
+    if (not cfg.moe) or cfg.dense_residual:
+        lay["ffn_wg"] = Leaf((L, d, cfg.d_ff), pdt, ("layers", "embed_w", "ff_w"))
+        lay["ffn_wu"] = Leaf((L, d, cfg.d_ff), pdt, ("layers", "embed_w", "ff_w"))
+        lay["ffn_wd"] = Leaf((L, cfg.d_ff, d), pdt, ("layers", "ff_w", "embed_w"))
+    t["layers"] = lay
+    return t
+
+
+def _is_leaf(x):
+    return isinstance(x, Leaf)
+
+
+def init_params(cfg, rng):
+    template = param_template(cfg)
+    flat, treedef = jax.tree.flatten(template, is_leaf=_is_leaf)
+    rngs = jax.random.split(rng, len(flat))
+    leaves = []
+    for leaf, r in zip(flat, rngs):
+        if leaf.init == "ones":
+            init = jnp.ones(leaf.shape, leaf.dtype)
+        elif leaf.init == "zeros":
+            init = jnp.zeros(leaf.shape, leaf.dtype)
+        else:
+            fan_in = leaf.shape[-2] if len(leaf.shape) >= 2 else leaf.shape[-1]
+            init = dense_init(r, leaf.shape, leaf.dtype, scale=fan_in ** -0.5)
+        leaves.append(init)
+    return treedef.unflatten(leaves)
+
+
+def abstract_params(cfg):
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, jnp.dtype(l.dtype)),
+                        param_template(cfg), is_leaf=_is_leaf)
+
+
+def param_shardings(cfg, mesh):
+    return jax.tree.map(lambda l: named_sharding(mesh, *l.axes),
+                        param_template(cfg), is_leaf=_is_leaf)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _gather_weights(cfg, lp):
+    """FSDP: re-annotate layer weights as gathered over the data axis at the
+    point of use (storage keeps the ('data','model') 2-D shard). Without
+    this, GSPMD resolves the weight-row/batch axis conflict by all-gathering
+    the ACTIVATIONS to the full global batch — 25x more wire bytes."""
+    g = dict(lp)
+    ep = cfg.moe and _expert_parallel(cfg)
+    plans = {
+        "wq": ("embed", "heads_w"), "wk": ("embed", None),
+        "wv": ("embed", None), "wo": ("heads_w", "embed"),
+        "ffn_wg": ("embed", "ff_w"), "ffn_wu": ("embed", "ff_w"),
+        "ffn_wd": ("ff_w", "embed"),
+        "moe_wg": ("experts", "embed", None) if ep else (None, "embed", "ff_w"),
+        "moe_wu": ("experts", "embed", None) if ep else (None, "embed", "ff_w"),
+        "moe_wd": ("experts", None, "embed") if ep else (None, "ff_w", "embed"),
+    }
+    for k, axes in plans.items():
+        if k in g:
+            g[k] = logical(g[k], *axes)
+    return g
+
+
+def _moe_dispatch(cfg, flat, lp):
+    """Select the MoE dispatch implementation (the §Perf hillclimb knob)."""
+    from repro.models import sharding as sh
+    mesh = getattr(sh._state, "mesh", None)
+    if (cfg.moe_impl in ("ep_shard_map", "tp_shard_map")
+            and mesh is not None and "model" in mesh.shape):
+        rules = sh.current_rules() or {}
+        batch = rules.get("batch", ("data",))
+        batch_axes = tuple(batch) if batch else ()  # () = replicated batch
+        ep_ok = _expert_parallel(cfg) and cfg.moe_impl == "ep_shard_map"
+        fn = (moe_lib.moe_ffn_ep_shardmap if ep_ok
+              else moe_lib.moe_ffn_tp_shardmap)
+        return fn(flat, lp["router"], lp["moe_wg"], lp["moe_wu"],
+                  lp["moe_wd"], top_k=cfg.moe_top_k, mesh=mesh,
+                  batch_axes=batch_axes)
+    return moe_lib.moe_ffn(
+        flat, lp["router"], lp["moe_wg"], lp["moe_wu"], lp["moe_wd"],
+        top_k=cfg.moe_top_k, ep=_expert_parallel(cfg))
+
+
+def _layer(cfg, x, lp, positions):
+    """One transformer layer (train/prefill). x: (B, S, d)."""
+    B, S, d = x.shape
+    cd = x.dtype
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    lp = _gather_weights(cfg, lp)
+
+    h = rmsnorm(x, lp["ln1"])
+    q = jnp.einsum("bsd,dh->bsh", h, lp["wq"].astype(cd))
+    k = jnp.einsum("bsd,dh->bsh", h, lp["wk"].astype(cd))
+    v = jnp.einsum("bsd,dh->bsh", h, lp["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"].astype(cd), k + lp["bk"].astype(cd), v + lp["bv"].astype(cd)
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    q = logical(apply_rope(q, positions, cfg.rope_theta),
+                "batch", "seq", "heads", "head_dim")
+    k = apply_rope(k, positions, cfg.rope_theta)
+    attn = attention(q, k, v, causal=True, window=cfg.sliding_window)
+    attn = logical(attn, "batch", "seq", "heads", "head_dim")
+    x = x + logical(jnp.einsum("bsh,hd->bsd", attn.reshape(B, S, Hq * hd),
+                               lp["wo"].astype(cd)), "batch", "seq", "embed")
+
+    h2 = rmsnorm(x, lp["ln2"])
+    aux = jnp.zeros((), jnp.float32)
+    out = 0.
+    if cfg.moe:
+        flat = h2.reshape(B * S, d)
+        moe_out, aux = _moe_dispatch(cfg, flat, lp)
+        out = out + moe_out.reshape(B, S, d)
+    if (not cfg.moe) or cfg.dense_residual:
+        out = out + swiglu(h2, lp["ffn_wg"], lp["ffn_wu"], lp["ffn_wd"])
+    x = x + logical(out, "batch", "seq", "embed")
+    # SWA archs only ever serve from a window-sized cache: slice before the
+    # scan stacks per-layer KV (full-S stacking is O(L*B*S*kv) HBM).
+    if cfg.sliding_window and S > cfg.sliding_window:
+        k = k[:, -cfg.sliding_window:]
+        v = v[:, -cfg.sliding_window:]
+    k = logical(k, "batch", "seq_kv", "kv_heads", "head_dim")
+    v = logical(v, "batch", "seq_kv", "kv_heads", "head_dim")
+    return logical(x, "batch", "seq", "embed"), (k, v), aux
+
+
+def forward(cfg, params, tokens, *, return_kv=False):
+    """tokens: (B, S) -> hidden (B, S, d); optionally per-layer (k, v)."""
+    B, S = tokens.shape
+    cd = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = logical(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(carry, lp):
+        x = carry
+        x, (k, v), aux = _layer(cfg, x, lp, positions)
+        ys = ((k, v) if return_kv else None, aux)
+        return x, ys
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (kv, auxs) = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x, params["final_norm"])
+    return x, kv, jnp.mean(auxs)
+
+
+def lm_loss(cfg, hidden, lm_head, labels):
+    """Chunked softmax cross-entropy over the SEQUENCE axis: the batch axis
+    stays sharded, logits exist one (B, chunk, V/model) slab at a time, and
+    the chunk body is rematerialized so backward never stores logits."""
+    B, S, d = hidden.shape
+    chunk = cfg.logits_chunk or S
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+
+    def body(acc, xs):
+        hc, yc = xs                                   # (B, chunk, d), (B, chunk)
+        logits = jnp.einsum("bcd,dv->bcv", hc, lm_head.astype(hc.dtype))
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)       # (B, chunk)
+        ll = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - ll), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    hs = jnp.moveaxis(hidden.reshape(B, n, chunk, d), 1, 0)
+    ys = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    acc, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ys))
+    return acc / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, schedule=None, train_cfg=None):
+    from repro.optim import adamw_update
+    from repro.configs.base import TrainConfig
+    tc = train_cfg or TrainConfig()
+    sched = schedule or (lambda step: tc.lr)
+
+    def loss_fn(params, batch):
+        hidden, _, aux = forward(cfg, params, batch["tokens"])
+        loss = lm_loss(cfg, hidden, params["lm_head"], batch["labels"])
+        return loss + 0.01 * aux, (loss, aux)
+
+    def grads_fn(params, batch):
+        m = cfg.microbatch
+        if not m or batch["tokens"].shape[0] % m:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        # gradient accumulation: the per-layer activation stash only has to
+        # hold one microbatch (O(L*T*d / m) HBM), at the cost of m scan trips
+        B = batch["tokens"].shape[0]
+        mb = {k: v.reshape(m, B // m, *v.shape[1:]) for k, v in batch.items()}
+
+        def body(acc, mbatch):
+            (tot, (loss, aux)), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mbatch)
+            acc_g, acc_m = acc
+            acc_g = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc_g, g)
+            return (acc_g, (acc_m[0] + tot, (acc_m[1][0] + loss,
+                                             acc_m[1][1] + aux))), None
+
+        acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        zero_m = (jnp.zeros((), jnp.float32),
+                  (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)))
+        (g, (tot, (loss, aux))), _ = jax.lax.scan(body, (zero_g, zero_m), mb)
+        scale = 1.0 / m
+        g = jax.tree.map(lambda x: x * scale, g)
+        return (tot * scale, (loss * scale, aux * scale)), g
+
+    def train_step(params, opt_state, batch):
+        (tot, (loss, aux)), grads = grads_fn(params, batch)
+        lr = sched(opt_state["count"])
+        params, opt_state, stats = adamw_update(
+            grads, opt_state, params, lr=lr, b1=tc.b1, b2=tc.b2, eps=tc.eps,
+            weight_decay=tc.weight_decay, grad_clip=tc.grad_clip)
+        metrics = {"loss": loss, "aux_loss": aux, "lr": lr, **stats}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def cache_template(cfg, batch, seq_len):
+    """KV cache specs. SWA archs keep a ring buffer of `window` slots."""
+    W = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    shape = (cfg.n_layers, batch, W, cfg.n_kv_heads, cfg.hd)
+    axes = ("layers", "batch", "seq_kv", "kv_heads", "head_dim")
+    dt = jnp.dtype(cfg.dtype)
+    return {"k": Leaf(shape, dt, axes), "v": Leaf(shape, dt, axes)}
+
+
+def abstract_cache(cfg, batch, seq_len):
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype),
+                        cache_template(cfg, batch, seq_len), is_leaf=_is_leaf)
+
+
+def cache_shardings(cfg, mesh, batch, seq_len):
+    return jax.tree.map(lambda l: named_sharding(mesh, *l.axes),
+                        cache_template(cfg, batch, seq_len), is_leaf=_is_leaf)
+
+
+def make_prefill_step(cfg):
+    def prefill(params, tokens):
+        hidden, kv, _ = forward(cfg, params, tokens, return_kv=True)
+        k, v = kv  # already window-sliced per layer for SWA archs
+        last = hidden[:, -1]
+        logits = jnp.einsum("bd,dv->bv", last,
+                            params["lm_head"].astype(last.dtype))
+        return logits.astype(jnp.float32), {"k": k, "v": v}
+    return prefill
+
+
+def make_decode_step(cfg):
+    """One token for the whole batch; `pos` is the scalar write position
+    (cache holds `pos` valid entries)."""
+
+    def decode(params, cache, tokens, pos):
+        B = tokens.shape[0]
+        cd = jnp.dtype(cfg.dtype)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cd)  # (B,1,d)
+        x = logical(x, "batch", "seq", "embed")
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        W = cache["k"].shape[2]
+        slot = pos % W if cfg.sliding_window else jnp.minimum(pos, W - 1)
+
+        def body(carry, xs):
+            x = carry
+            lp, kc, vc = xs
+            lp = _gather_weights(cfg, lp)
+            B, S, d = x.shape
+            hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+            h = rmsnorm(x, lp["ln1"])
+            q = jnp.einsum("bsd,dh->bsh", h, lp["wq"].astype(cd))
+            k = jnp.einsum("bsd,dh->bsh", h, lp["wk"].astype(cd))
+            v = jnp.einsum("bsd,dh->bsh", h, lp["wv"].astype(cd))
+            if cfg.qkv_bias:
+                q, k, v = (q + lp["bq"].astype(cd), k + lp["bk"].astype(cd),
+                           v + lp["bv"].astype(cd))
+            q = apply_rope(q.reshape(B, 1, Hq, hd), positions, cfg.rope_theta)
+            k = apply_rope(k.reshape(B, 1, Hkv, hd), positions, cfg.rope_theta)
+            v = v.reshape(B, 1, Hkv, hd)
+            # one-hot masked update: dynamic_update_slice across the
+            # 'model'-sharded seq axis makes GSPMD gather the whole cache;
+            # the select keeps every shard local.
+            onehot = (jnp.arange(W) == slot)[None, :, None, None]
+            kc = jnp.where(onehot, k.astype(kc.dtype), kc)
+            vc = jnp.where(onehot, v.astype(vc.dtype), vc)
+            cache_len = jnp.minimum(pos + 1, W)
+            out = decode_attention(q, kc, vc, cache_len)
+            x = x + jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, Hq * hd),
+                               lp["wo"].astype(cd))
+            h2 = rmsnorm(x, lp["ln2"])
+            o = 0.
+            if cfg.moe:
+                mo, _ = _moe_dispatch(cfg, h2.reshape(B, d), lp)
+                o = o + mo.reshape(B, 1, d)
+            if (not cfg.moe) or cfg.dense_residual:
+                o = o + swiglu(h2, lp["ffn_wg"], lp["ffn_wu"], lp["ffn_wd"])
+            return x + o, (kc, vc)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        x = rmsnorm(x, params["final_norm"])
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cd))
+        return logits[:, 0].astype(jnp.float32), {"k": nk, "v": nv}
+
+    return decode

@@ -1,0 +1,2 @@
+from repro.optim.adam import adamw_init, adamw_update, sgd_init, sgd_update
+from repro.optim.schedules import make_schedule

@@ -1,0 +1,69 @@
+"""AdamW / SGD in pure JAX (pytree-structured state, dtype-policy aware).
+
+State layout mirrors the params pytree so optimizer state inherits the same
+sharding rules as the parameters (critical for the 480B-param configs).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import tree as tu
+
+
+def adamw_init(params, dtype=None):
+    def z(x):
+        dt = dtype or x.dtype
+        return jnp.zeros(x.shape, dt)
+    return {
+        "mu": jax.tree.map(z, params),
+        "nu": jax.tree.map(z, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0, grad_clip=0.0):
+    """Returns (new_params, new_state, stats). lr may be a scalar array."""
+    gnorm = tu.global_norm(grads)
+    if grad_clip:
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
+        grads = tu.tree_scale(grads, scale)
+    count = state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g32
+        nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        step = (mu32 / c1) / (jnp.sqrt(nu32 / c2) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step
+        return newp.astype(p.dtype), mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(g, mu, nu, p)
+           for g, mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}, {"grad_norm": gnorm}
+
+
+def sgd_init(params, **_):
+    return {"count": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(grads, state, params, *, lr, grad_clip=0.0, **_):
+    gnorm = tu.global_norm(grads)
+    if grad_clip:
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
+        grads = tu.tree_scale(grads, scale)
+    new_p = jax.tree.map(lambda p, g: (p.astype(jnp.float32)
+                                       - lr * g.astype(jnp.float32)).astype(p.dtype),
+                         params, grads)
+    return new_p, {"count": state["count"] + 1}, {"grad_norm": gnorm}

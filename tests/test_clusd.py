@@ -1,0 +1,184 @@
+"""CluSD system tests: stage-1 invariants (hypothesis property tests),
+LSTM training improves selection, end-to-end quality, fusion exactness."""
+
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.core import bins as bins_lib
+from repro.core import clusd as cl
+from repro.core import fusion as fusion_lib
+from repro.core import sparse as sparse_lib
+from repro.core import stage1 as stage1_lib
+from repro.core import train_lstm as tl
+from repro.data import mrr_at, recall_at, synth_corpus, synth_queries
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    cfg = get_config("clusd-msmarco", "smoke")
+    corpus = synth_corpus(0, cfg.n_docs, cfg.dim, cfg.vocab)
+    index = cl.build_index(cfg, jax.random.key(0), corpus.embeddings,
+                           corpus.doc_terms, corpus.doc_weights)
+    return cfg, corpus, index
+
+
+# ---------------------------------------------------------------------------
+# stage 1 properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_multikey_sort_is_lexicographic(seed):
+    rng = np.random.default_rng(seed)
+    N, v, n = 40, 4, 10
+    P = jnp.asarray(rng.integers(0, 4, (1, N, v)), jnp.float32)
+    sim = jnp.asarray(rng.random((1, N)), jnp.float32)
+    got = np.asarray(stage1_lib.sort_by_overlap(P, sim, n))[0]
+    keys = [tuple(-np.asarray(P[0, c])) + (-float(sim[0, c]),)
+            for c in range(N)]
+    want = sorted(range(N), key=lambda c: keys[c])[:n]
+    assert list(got) == list(want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_overlap_counts_match_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    D, N, k, v = 200, 16, 50, 4
+    bins = (5, 15, 30, 50)
+    doc_cluster = jnp.asarray(rng.integers(0, N, D), jnp.int32)
+    top = jnp.asarray(rng.choice(D, (2, k), replace=False), jnp.int32)
+    scores = jnp.asarray(rng.random((2, k)), jnp.float32)
+    bin_ids = bins_lib.rank_bin_ids(bins, k)
+    P, Q = bins_lib.overlap_features(top, scores, doc_cluster, N, bin_ids, v)
+    P, Q = np.asarray(P), np.asarray(Q)
+    dc = np.asarray(doc_cluster)
+    bi = np.asarray(bin_ids)
+    for b in range(2):
+        for c in range(N):
+            for j in range(v):
+                members = [i for i in range(k)
+                           if dc[top[b, i]] == c and bi[i] == j]
+                assert P[b, c, j] == len(members)
+                if members:
+                    np.testing.assert_allclose(
+                        Q[b, c, j],
+                        np.mean([scores[b, i] for i in members]), rtol=1e-5)
+
+
+def test_sparse_retrieval_exact_when_untruncated():
+    """With max_postings >= D the inverted-index score equals brute force."""
+    rng = np.random.default_rng(3)
+    D, V, T = 300, 64, 8
+    dt = rng.integers(0, V, (D, T)).astype(np.int32)
+    dw = rng.random((D, T)).astype(np.float32)
+    idx = sparse_lib.SparseIndex.build(dt, dw, V, max_postings=D)
+    qt = jnp.asarray(rng.integers(0, V, (4, 5)), jnp.int32)
+    qw = jnp.asarray(rng.random((4, 5)), jnp.float32)
+    _, _, scores = sparse_lib.sparse_retrieve(idx, qt, qw, 10)
+    # brute force: dense doc-term matrix
+    M = np.zeros((D, V), np.float32)
+    for d in range(D):
+        for t, w in zip(dt[d], dw[d]):
+            M[d, t] += w
+    Q = np.zeros((4, V), np.float32)
+    for b in range(4):
+        for t, w in zip(np.asarray(qt[b]), np.asarray(qw[b])):
+            Q[b, t] += w
+    np.testing.assert_allclose(np.asarray(scores), Q @ M.T, rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fusion
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_fusion_merge_equals_scatter(seed):
+    rng = np.random.default_rng(seed)
+    D, Ks, Kd, k = 500, 40, 60, 20
+    sid = jnp.asarray(rng.choice(D, (2, Ks), replace=False), jnp.int32)
+    ss = jnp.asarray(rng.random((2, Ks)), jnp.float32)
+    did = jnp.asarray(rng.choice(D, (2, Kd), replace=False), jnp.int32)
+    ds = jnp.asarray(rng.random((2, Kd)), jnp.float32)
+    dm = jnp.asarray(rng.random((2, Kd)) > 0.2)
+    a = 0.5
+    i1, s1 = fusion_lib.fuse_topk(sid, ss, did, jnp.where(dm, ds, 0.0), dm,
+                                  D, a, k)
+    i2, s2 = fusion_lib.fuse_topk_merge(sid, ss, did, jnp.where(dm, ds, 0.0),
+                                        dm, a, k, sentinel=D + 7)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_fused_equals_full_when_all_selected(small_index):
+    """If every cluster is selected, CluSD's dense side equals brute force."""
+    cfg, corpus, index = small_index
+    q = synth_queries(5, corpus, 8)
+    big = dataclasses.replace(cfg, theta=0.0,
+                              max_selected=cfg.n_candidates)
+    sel_ids = jnp.tile(jnp.arange(cfg.n_clusters, dtype=jnp.int32)[None],
+                       (8, 1))
+    sel_mask = jnp.ones_like(sel_ids, bool)
+    did, dscore, dmask = cl.score_selected(index, q.q_dense, sel_ids, sel_mask)
+    full = np.asarray(q.q_dense @ index.embeddings.T)
+    ds = np.asarray(jnp.where(dmask, dscore, -np.inf))
+    ids = np.asarray(did)
+    for b in range(8):
+        valid = np.isfinite(ds[b])
+        np.testing.assert_allclose(ds[b][valid], full[b][ids[b][valid]],
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# LSTM training + end-to-end
+# ---------------------------------------------------------------------------
+
+def test_lstm_training_improves_selection(small_index):
+    cfg, corpus, index = small_index
+    tq = synth_queries(1, corpus, 128)
+    cand, feats, labels = tl.make_labels(cfg, index, tq.q_dense, tq.q_terms,
+                                         tq.q_weights)
+    params, hist = tl.train_selector(cfg, jax.random.key(2),
+                                     np.asarray(feats), np.asarray(labels),
+                                     epochs=30, batch_size=32, lr=0.01)
+    assert hist[-1] < hist[0] * 0.9
+    from repro.core.lstm import lstm_apply
+    probs = lstm_apply(params, feats)
+    # theta=0.02 is the paper's permissive serving threshold (selects ~2/3 of
+    # candidates); separation is tested at the 0.5 operating point.
+    q = tl.selection_quality(probs, labels, 0.5)
+    assert float(q["precision"]) > float(labels.mean()) * 1.2
+    assert float(q["recall"]) > 0.2
+
+
+def test_end_to_end_beats_single_retrievers(small_index):
+    cfg, corpus, index = small_index
+    tq = synth_queries(1, corpus, 128)
+    _, feats, labels = tl.make_labels(cfg, index, tq.q_dense, tq.q_terms,
+                                      tq.q_weights)
+    index.lstm_params, _ = tl.train_selector(
+        cfg, jax.random.key(2), np.asarray(feats), np.asarray(labels),
+        epochs=30, batch_size=32, lr=0.01)
+    test_q = synth_queries(11, corpus, 64)
+    ids, _, diag = cl.retrieve(cfg, index, test_q.q_dense, test_q.q_terms,
+                               test_q.q_weights)
+    clusd_mrr = mrr_at(np.asarray(ids), test_q.rel_doc)
+    dense_ids, _ = cl.full_dense_topk(index.embeddings, test_q.q_dense, 64)
+    dense_mrr = mrr_at(np.asarray(dense_ids), test_q.rel_doc)
+    sid, _ = sparse_lib.sparse_retrieve_topk(
+        index.sparse_index, test_q.q_terms, test_q.q_weights, cfg.k_sparse)
+    sparse_mrr = mrr_at(np.asarray(sid), test_q.rel_doc)
+    assert clusd_mrr > max(dense_mrr, sparse_mrr) * 0.95
+    # partial retrieval: only a fraction of the corpus scanned
+    assert float(diag["frac_docs_scanned"].mean()) < 0.5
+    index.lstm_params = None

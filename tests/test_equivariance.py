@@ -1,0 +1,84 @@
+"""NequIP equivariance property tests: energies invariant under SO(3)
+rotations + translations; l=1 features rotate as vectors."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from scipy.spatial.transform import Rotation
+
+from repro.configs import get_config
+from repro.models import nequip as nq
+
+
+def _random_batch(seed, N=40, E=150, G=2):
+    rng = np.random.default_rng(seed)
+    return {
+        "positions": jnp.asarray(rng.standard_normal((N, 3)) * 2, jnp.float32),
+        "species": jnp.asarray(rng.integers(0, 8, N), jnp.int32),
+        "edge_src": jnp.asarray(rng.integers(0, N, E), jnp.int32),
+        "edge_dst": jnp.asarray(rng.integers(0, N, E), jnp.int32),
+        "edge_mask": jnp.ones(E, jnp.float32),
+        "graph_id": jnp.asarray(rng.integers(0, G, N), jnp.int32),
+        "energy_target": jnp.zeros(G, jnp.float32),
+    }
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_energy_rotation_translation_invariant(seed):
+    cfg = get_config("nequip", "smoke")
+    params = nq.init_params(cfg, jax.random.key(0))
+    batch = _random_batch(seed % 3)
+    R = jnp.asarray(Rotation.random(random_state=seed).as_matrix(),
+                    jnp.float32)
+    t = jnp.asarray(np.random.default_rng(seed).standard_normal(3),
+                    jnp.float32)
+    e0 = nq.forward(cfg, params, batch)
+    batch_rt = dict(batch, positions=batch["positions"] @ R.T + t)
+    e1 = nq.forward(cfg, params, batch_rt)
+    np.testing.assert_allclose(np.asarray(e0), np.asarray(e1),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_l2_basis_roundtrip():
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((7, 3, 3)), jnp.float32)
+    M = nq.symtr(A)
+    M2 = nq.from5(nq.to5(M))
+    np.testing.assert_allclose(np.asarray(M), np.asarray(M2), atol=1e-5)
+    # symtr output is symmetric and traceless
+    np.testing.assert_allclose(np.asarray(M), np.asarray(
+        jnp.swapaxes(M, -1, -2)), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(jnp.trace(M, axis1=-2, axis2=-1)),
+                               np.zeros(7), atol=1e-5)
+
+
+def test_tensor_product_paths_equivariant():
+    """Every TP path output transforms covariantly under rotation."""
+    rng = np.random.default_rng(4)
+    E, C = 16, 4
+    R = jnp.asarray(Rotation.random(random_state=1).as_matrix(), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((E, C)), jnp.float32)
+    h1 = jnp.asarray(rng.standard_normal((E, C, 3)), jnp.float32)
+    h2 = nq.symtr(jnp.asarray(rng.standard_normal((E, C, 3, 3)), jnp.float32))
+    y1 = jnp.asarray(rng.standard_normal((E, 3)), jnp.float32)
+    y1 = y1 / jnp.linalg.norm(y1, axis=-1, keepdims=True)
+    y2 = nq.symtr(jnp.einsum("ei,ej->eij", y1, y1))
+    w = jnp.asarray(rng.standard_normal((E, nq.N_PATHS, C)), jnp.float32)
+
+    m0, m1, m2 = nq.tensor_product(h0, h1, h2, jnp.ones(E), y1, y2, w)
+    # rotated inputs
+    h1r = jnp.einsum("ij,ecj->eci", R, h1)
+    h2r = jnp.einsum("ij,ecjk,lk->ecil", R, h2, R)
+    y1r = jnp.einsum("ij,ej->ei", R, y1)
+    y2r = jnp.einsum("ij,ejk,lk->eil", R, y2, R)
+    r0, r1, r2 = nq.tensor_product(h0, h1r, h2r, jnp.ones(E), y1r, y2r, w)
+    np.testing.assert_allclose(np.asarray(r0), np.asarray(m0), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(r1),
+                               np.asarray(jnp.einsum("ij,ecj->eci", R, m1)),
+                               atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(r2),
+        np.asarray(jnp.einsum("ij,ecjk,lk->ecil", R, m2, R)), atol=2e-4)

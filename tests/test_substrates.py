@@ -1,0 +1,185 @@
+"""Substrate tests: optimizer, schedules, checkpointing (incl. elastic
+restore), gradient compression, data pipeline, neighbor sampler, k-means,
+quantization, on-disk store."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.optim import adamw_init, adamw_update, make_schedule
+from repro.optim.compression import compress_roundtrip, ef_init
+
+
+def test_adamw_reduces_quadratic():
+    w = {"a": jnp.asarray([5.0, -3.0]), "b": jnp.asarray([[2.0]])}
+    opt = adamw_init(w)
+    loss = lambda p: jnp.sum(p["a"] ** 2) + jnp.sum(p["b"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(w)
+        w, opt, _ = adamw_update(g, opt, w, lr=0.05)
+    assert float(loss(w)) < 1e-2
+
+
+def test_schedules():
+    s = make_schedule("cosine", 1.0, warmup_steps=10, total_steps=100)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1.0, abs=1e-3)
+    assert float(s(100)) == pytest.approx(0.1, abs=1e-3)
+    lin = make_schedule("linear", 1.0, 10, 100)
+    assert float(lin(55)) == pytest.approx(0.55, abs=0.01)
+
+
+def test_checkpoint_roundtrip_and_gc():
+    tree = {"w": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.asarray([1, 2, 3], jnp.int32)}}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, async_save=True)
+        for step in [10, 20, 30]:
+            mgr.save(step, jax.tree.map(lambda x: x + step, tree),
+                     extra={"step": step})
+        mgr.wait()
+        assert latest_step(d) == 30
+        step, restored, extra = mgr.restore_latest(tree)
+        assert step == 30 and extra["step"] == 30
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(tree["w"]) + 30)
+        # keep=2 garbage collection
+        assert not os.path.exists(os.path.join(d, "step_10"))
+
+
+def test_restartable_training_recovers():
+    from repro.runtime.fault import FailureInjector, restartable_train
+    w0 = {"w": jnp.asarray([4.0])}
+
+    def step_fn(state, batch):
+        g = 2 * state["w"]
+        return {"w": state["w"] - 0.05 * g}, {"w": float(state["w"][0])}
+
+    def batches_fn(start):
+        def gen():
+            while True:
+                yield {}
+        return gen()
+
+    with tempfile.TemporaryDirectory() as d:
+        state, history, restarts = restartable_train(
+            init_state=w0, step_fn=step_fn, batches_fn=batches_fn,
+            total_steps=40, ckpt_dir=d, ckpt_every=10,
+            failure_injector=FailureInjector([17, 33]))
+        assert restarts == 2
+        assert float(state["w"][0]) < 0.1
+        steps = [h["step"] for h in history]
+        assert steps[-1] == 39  # completed despite two failures
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_compression_error_feedback_contracts(seed):
+    """Repeated compression of a CONSTANT gradient: accumulated output
+    converges to the true sum (error feedback re-injects residuals)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(64) * rng.random(), jnp.float32)
+    e = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for t in range(30):
+        deq, e = compress_roundtrip(g, e)
+        acc = acc + deq
+    np.testing.assert_allclose(np.asarray(acc) / 30, np.asarray(g),
+                               atol=2e-2 * float(jnp.max(jnp.abs(g)) + 1e-6))
+
+
+def test_neighbor_sampler_valid_edges():
+    from repro.data.sampler import CSRGraph, sample_fanout, padded_batch
+    rng = np.random.default_rng(0)
+    N, E = 500, 4000
+    src = rng.integers(0, N, E)
+    dst = rng.integers(0, N, E)
+    g = CSRGraph.from_edges(src, dst, N)
+    edge_set = set(zip(src.tolist(), dst.tolist()))
+    seeds = rng.choice(N, 32, replace=False)
+    nodes, esrc, edst = sample_fanout(g, seeds, (5, 3),
+                                      np.random.default_rng(1))
+    assert len(esrc) <= 32 * 5 + 32 * 5 * 3
+    for s, t in zip(esrc, edst):
+        # sampled message edge (neighbor -> center) reverses a graph edge
+        assert (int(nodes[t]), int(nodes[s])) in edge_set
+    feats = rng.standard_normal((N, 8)).astype(np.float32)
+    # same sampling seed -> identical subgraph in the padded batch
+    batch = padded_batch(g, feats, seeds, (5, 3), np.random.default_rng(1),
+                         max_nodes=1024, max_edges=1024,
+                         targets=rng.standard_normal(N).astype(np.float32))
+    assert batch["node_feat"].shape == (1024, 8)
+    assert batch["edge_mask"].sum() == len(esrc)
+
+
+def test_kmeans_and_balanced_table():
+    from repro.core import kmeans as km
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(np.concatenate([
+        rng.standard_normal((100, 8)) + 4,
+        rng.standard_normal((100, 8)) - 4]), jnp.float32)
+    c, a = km.kmeans(jax.random.key(0), X, 2, iters=10)
+    a = np.asarray(a)
+    # the two blobs must separate
+    assert len(set(a[:100])) == 1 and len(set(a[100:])) == 1
+    assert a[0] != a[150]
+    table, doc_cluster = km.build_cluster_table(a, 2, cap=128, X=X,
+                                                centroids=c)
+    t = np.asarray(table)
+    assert ((t >= 0).sum(axis=1) == 100).all()
+    # every doc appears exactly once
+    docs = t[t >= 0]
+    assert sorted(docs.tolist()) == list(range(200))
+
+
+def test_pq_quantization_quality():
+    from repro.core import quant as qt
+    rng = np.random.default_rng(2)
+    X = jnp.asarray(rng.standard_normal((1024, 32)), jnp.float32)
+    X = X / jnp.linalg.norm(X, axis=1, keepdims=True)
+    pq = qt.train_pq(jax.random.key(1), X, nsub=8, iters=8)
+    rec = qt.reconstruct(pq, jnp.arange(1024))
+    err = float(jnp.mean(jnp.sum((rec - X) ** 2, -1)))
+    assert err < 0.5  # << ||x||^2 = 1
+    # ADC score approximates exact dot
+    q = X[:4]
+    lut = qt.adc_tables(pq, q)
+    approx = qt.adc_score(pq, lut, jnp.tile(jnp.arange(100)[None], (4, 1)))
+    exact = q @ X[:100].T
+    corr = np.corrcoef(np.asarray(approx).ravel(),
+                       np.asarray(exact).ravel())[0, 1]
+    assert corr > 0.9
+
+
+def test_disk_store_block_semantics():
+    from repro.core import disk as dk
+    rng = np.random.default_rng(3)
+    emb = rng.standard_normal((256, 16)).astype(np.float32)
+    cd = np.arange(256, dtype=np.int32).reshape(32, 8)
+    with tempfile.TemporaryDirectory() as d:
+        store = dk.DiskClusterStore(os.path.join(d, "b.bin"), emb, cd)
+        stats = dk.IOStats()
+        out = store.fetch_clusters([3, 7], stats)
+        assert stats.n_ops == 2
+        assert stats.bytes == 2 * store.block_bytes
+        np.testing.assert_array_equal(np.asarray(out[0]), emb[cd[3]])
+        assert stats.model_ms() > 0
+
+
+def test_recsys_stream_learnable():
+    from repro.configs import get_config
+    from repro.data.recsys_stream import RecsysStream
+    cfg = get_config("deepfm", "smoke")
+    s = RecsysStream(cfg, seed=0)
+    b = s.batch(512)
+    assert b["sparse"].shape == (512, len(cfg.table_sizes))
+    assert 0.05 < b["label"].mean() < 0.95
+    for i, rows in enumerate(cfg.table_sizes):
+        assert b["sparse"][:, i].max() < rows
