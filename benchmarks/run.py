@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.table6_sparse_models",
     "benchmarks.table7_quant",
     "benchmarks.table8_ablation",
+    "benchmarks.serve_engine",
     "benchmarks.fig2_nclusters",
     "benchmarks.kernelbench",
     "benchmarks.roofline_report",

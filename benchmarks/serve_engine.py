@@ -1,0 +1,134 @@
+"""Serving-layer benchmark for the unified RetrievalEngine: latency
+percentiles + QPS through bucketed batching (in-memory backend), and I/O
+accounting for the on-disk backend (batch-dedup + LRU cache + Stage-I
+prefetch) vs the seed per-query read loop, which issued one block read per
+(query, selected cluster) pair.
+
+Writes BENCH_serve.json at the repo root so later PRs have a perf
+trajectory to beat. Standalone: PYTHONPATH=src python -m benchmarks.serve_engine
+"""
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import clusd as cl
+from repro.core import disk as dk
+from repro.core import train_lstm as tl
+from repro.data import mrr_at, synth_corpus, synth_queries
+from repro.engine import DiskStore, RetrievalEngine
+
+N_DOCS = 20_000          # acceptance corpus size (fixed, not BENCH_SCALE-d)
+N_QUERIES = 256
+MAX_BATCH = 32
+# ragged request sizes: exercises pad-to-power-of-two bucketing (32 and 16)
+BATCH_CYCLE = (32, 24, 12)
+
+
+def _serve(engine, qs, n, cycle):
+    i, sizes = 0, []
+    ids = []
+    t0 = time.perf_counter()
+    while i < n:
+        b = cycle[len(sizes) % len(cycle)]
+        b = min(b, n - i)
+        out, _ = engine.retrieve(qs.q_dense[i:i + b], qs.q_terms[i:i + b],
+                                 qs.q_weights[i:i + b])
+        ids.append(np.asarray(out))
+        sizes.append(b)
+        i += b
+    wall = time.perf_counter() - t0
+    return np.concatenate(ids), sizes, wall
+
+
+def run():
+    cfg = dataclasses.replace(C.bench_cfg(), n_docs=N_DOCS,
+                              train_queries=512, epochs=25)
+    corpus = synth_corpus(0, cfg.n_docs, cfg.dim, cfg.vocab, topic_noise=0.5)
+    index = cl.build_index(cfg, jax.random.key(0), corpus.embeddings,
+                           corpus.doc_terms, corpus.doc_weights)
+    tq = synth_queries(1, corpus, cfg.train_queries)
+    _, feats, labels = tl.make_labels(cfg, index, tq.q_dense, tq.q_terms,
+                                      tq.q_weights)
+    index.lstm_params, _ = tl.train_selector(cfg, jax.random.key(2),
+                                             np.asarray(feats),
+                                             np.asarray(labels))
+    qs = synth_queries(9, corpus, N_QUERIES, dense_noise=0.30,
+                       term_noise_frac=0.4)
+    rows = []
+
+    # ---- in-memory backend: bucketed batching --------------------------
+    engine = RetrievalEngine(cfg, index, max_batch=MAX_BATCH)
+    ids, sizes, wall = _serve(engine, qs, N_QUERIES, BATCH_CYCLE)
+    st = engine.stats()
+    mem_row = {
+        "backend": "in-memory",
+        "MRR@10": round(mrr_at(ids, qs.rel_doc), 4),
+        # p50/p99 are steady-state (jit-compile batches excluded)
+        "p50_batch_ms": st["p50_ms"], "p99_batch_ms": st["p99_ms"],
+        "qps_total": round(N_QUERIES / wall, 1),
+        "qps_steady": st["qps_steady"],
+        "compiled_buckets": st["compiled_buckets"],
+        "n_batches": st["n_batches"],
+    }
+    rows.append(mem_row)
+
+    # ---- seed-equivalent on-disk op count ------------------------------
+    # the pre-engine per-query loop read one block per (query, selected
+    # cluster); that count is sum(sel_mask) over the query set.
+    _, _, diag = cl.retrieve(cfg, index, qs.q_dense, qs.q_terms, qs.q_weights)
+    seed_ops = int(np.asarray(diag["sel_mask"]).sum())
+
+    # ---- on-disk backend: dedup + LRU cache + prefetch -----------------
+    tmp = tempfile.mkdtemp()
+    blocks = dk.DiskClusterStore(os.path.join(tmp, "blocks.bin"),
+                                 corpus.embeddings, index.cluster_docs)
+    with RetrievalEngine(cfg, index,
+                         store=DiskStore(blocks, index.cluster_docs),
+                         max_batch=MAX_BATCH,
+                         cache_capacity=cfg.n_clusters) as deng:
+        ids_d, _, wall_d = _serve(deng, qs, N_QUERIES, (MAX_BATCH,))
+    # stats after close(): prefetch worker drained, I/O counters final
+    ds = deng.stats()
+    io, cache = ds["io"], ds["cache"]
+    disk_row = {
+        "backend": "on-disk (engine)",
+        "MRR@10": round(mrr_at(ids_d, qs.rel_doc), 4),
+        "p50_batch_ms": ds["p50_ms"], "p99_batch_ms": ds["p99_ms"],
+        "qps_total": round(N_QUERIES / wall_d, 1),
+        "qps_steady": ds["qps_steady"],
+        "block_read_ops": io["n_ops"],
+        "seed_equiv_ops": seed_ops,
+        "io_op_reduction": round(seed_ops / max(io["n_ops"], 1), 2),
+        "bytes_read": io["bytes"],
+        "mb_read": round(io["bytes"] / 2**20, 2),
+        "io_model_ms": io["model_ms"],
+        "cache_hit_rate": cache["hit_rate"],
+        "prefetch_enqueued": ds["prefetch_enqueued"],
+    }
+    rows.append(disk_row)
+    assert io["n_ops"] < seed_ops, \
+        f"engine read {io['n_ops']} blocks, seed loop would read {seed_ops}"
+
+    result = {"table": "serve_engine", "n_docs": N_DOCS,
+              "n_queries": N_QUERIES, "rows": rows}
+    out = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "BENCH_serve.json"))
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {out}")
+    return result
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = run()
+    for r in res["rows"]:
+        print(json.dumps(r))

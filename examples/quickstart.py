@@ -40,10 +40,14 @@ def main():
         epochs=30, batch_size=32, lr=0.01)
     print(f"LSTM: BCE {hist[0]:.4f} -> {hist[-1]:.4f}")
 
-    # --- retrieve ---
+    # --- retrieve through the unified engine pipeline ---
+    # (cl.retrieve is a thin wrapper over the same call; the explicit store
+    #  shows the backend protocol — swap in DiskStore/PQStore unchanged)
+    from repro import engine as eng
     qs = synth_queries(9, corpus, 64)
-    ids, scores, diag = cl.retrieve(cfg, index, qs.q_dense, qs.q_terms,
-                                    qs.q_weights)
+    store = eng.InMemoryStore(index.embeddings, index.cluster_docs)
+    ids, scores, diag = eng.retrieve(cfg, index, store, qs.q_dense,
+                                     qs.q_terms, qs.q_weights)
     dense_ids, _ = cl.full_dense_topk(index.embeddings, qs.q_dense, 64)
     sparse_ids, _ = sparse_lib.sparse_retrieve_topk(
         index.sparse_index, qs.q_terms, qs.q_weights, cfg.k_sparse)

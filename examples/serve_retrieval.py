@@ -1,5 +1,7 @@
-"""CluSD serving demo: builds the index, trains the selector, serves batched
-queries with latency percentiles, and exercises the on-disk block-I/O path.
+"""CluSD serving demo on the unified RetrievalEngine: builds the index,
+trains the selector, serves batched queries through power-of-two request
+buckets, and exercises the on-disk backend (LRU block cache + async
+Stage-I prefetch), reporting latency percentiles, I/O ops, and hit rate.
 
   PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -13,7 +15,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main():
     from repro.launch import serve as serve_mod
     sys.argv = ["serve", "--docs", "12000", "--clusters", "192",
-                "--queries", "128", "--epochs", "30", "--ondisk"]
+                "--queries", "128", "--epochs", "30", "--ondisk",
+                "--cache-blocks", "256"]
     return serve_mod.main()
 
 

@@ -72,11 +72,13 @@ def full_dense_topk(embeddings, q_dense, k):
     return i.astype(jnp.int32), s
 
 
-def select_clusters(cfg, index, q_dense, sparse_ids, sparse_scores, *,
-                    selector="lstm", stage1="overlap", theta=None,
-                    use_kernel=False, selector_params=None):
-    """Steps 1-2. Returns dict with candidates, probs, selected ids + mask."""
-    theta = cfg.theta if theta is None else theta
+def stage1_candidates(cfg, index, q_dense, sparse_ids, sparse_scores, *,
+                      stage1="overlap"):
+    """Step 1: sparse-overlap features -> ordered candidate clusters.
+
+    Split out from stage 2 so a serving layer can kick off block prefetch
+    for the candidates while the LSTM selection runs (engine/server.py).
+    """
     qc_sim = q_dense @ index.centroids.T                     # (B, N)
     P, Q = bins_lib.overlap_features(
         sparse_ids, fusion_lib.minmax_norm(sparse_scores), index.doc_cluster,
@@ -85,10 +87,16 @@ def select_clusters(cfg, index, q_dense, sparse_ids, sparse_scores, *,
         cand = stage1_lib.sort_by_overlap(P, qc_sim, cfg.n_candidates)
     else:
         cand = stage1_lib.sort_by_dist(qc_sim, cfg.n_candidates)
-
     feats = feat_lib.candidate_features(
         cand, qc_sim, P, Q, index.neighbor_ids, index.neighbor_sims,
         cfg.u_bins)
+    return {"cand": cand, "feats": feats, "qc_sim": qc_sim, "P": P, "Q": Q}
+
+
+def stage2_select(cfg, index, cand, feats, *, selector="lstm", theta=None,
+                  use_kernel=False, selector_params=None):
+    """Step 2: selector probabilities -> thresholded, budgeted selection."""
+    theta = cfg.theta if theta is None else theta
     params = selector_params if selector_params is not None else index.lstm_params
     if params is None:
         # untrained fallback: stage-1 order only — take first max_selected
@@ -102,54 +110,53 @@ def select_clusters(cfg, index, q_dense, sparse_ids, sparse_scores, *,
             probs = apply(params, feats)
 
     picked = probs >= theta                                  # (B, n)
-    # static budget: top max_selected by prob among picked
-    masked = jnp.where(picked, probs, -1.0)
-    top_p, top_i = jax.lax.top_k(masked, min(cfg.max_selected, cand.shape[1]))
-    sel_mask = top_p >= 0.0
+    # static budget: top max_selected by prob among picked. Unpicked entries
+    # sort last via -inf; the mask is the picked bit carried through the
+    # permutation (NOT a sentinel comparison, which broke for theta <= 0 /
+    # selectors emitting scores outside [0, 1]).
+    masked = jnp.where(picked, probs, -jnp.inf)
+    _, top_i = jax.lax.top_k(masked, min(cfg.max_selected, cand.shape[1]))
+    sel_mask = jnp.take_along_axis(picked, top_i, axis=1)
     sel_ids = jnp.take_along_axis(cand, top_i, axis=1)
-    return {"cand": cand, "feats": feats, "probs": probs,
-            "sel_ids": sel_ids, "sel_mask": sel_mask, "qc_sim": qc_sim,
-            "P": P, "Q": Q}
+    return {"probs": probs, "sel_ids": sel_ids, "sel_mask": sel_mask}
+
+
+def select_clusters(cfg, index, q_dense, sparse_ids, sparse_scores, *,
+                    selector="lstm", stage1="overlap", theta=None,
+                    use_kernel=False, selector_params=None):
+    """Steps 1-2. Returns dict with candidates, probs, selected ids + mask."""
+    s1 = stage1_candidates(cfg, index, q_dense, sparse_ids, sparse_scores,
+                           stage1=stage1)
+    s2 = stage2_select(cfg, index, s1["cand"], s1["feats"], selector=selector,
+                       theta=theta, use_kernel=use_kernel,
+                       selector_params=selector_params)
+    return {**s1, **s2}
 
 
 def score_selected(index, q_dense, sel_ids, sel_mask, embeddings=None):
-    """Step 3 dense scoring. Returns (doc_ids (B, S*cap), scores, mask)."""
+    """Step 3 dense scoring. Returns (doc_ids (B, S*cap), scores, mask).
+
+    Thin wrapper over the engine pipeline with an in-memory backend (kept
+    for baselines/benches that score explicit selections).
+    """
+    from repro.engine import pipeline as pipe_lib
+    from repro.engine import stores as stores_lib
     emb = embeddings if embeddings is not None else index.embeddings
-    docs = jnp.take(index.cluster_docs, sel_ids, axis=0)     # (B, S, cap)
-    B, S, cap = docs.shape
-    valid = (docs >= 0) & sel_mask[:, :, None]
-    docs_flat = jnp.where(valid, docs, 0).reshape(B, S * cap)
-    vecs = jnp.take(emb, docs_flat, axis=0)                  # (B, S*cap, dim)
-    scores = jnp.einsum("bd,bkd->bk", q_dense, vecs)
-    scores = jnp.where(valid.reshape(B, S * cap), scores, -jnp.inf)
-    return docs_flat.astype(jnp.int32), scores, valid.reshape(B, S * cap)
+    store = stores_lib.InMemoryStore(emb, index.cluster_docs)
+    return pipe_lib.score_selected(store, q_dense, sel_ids, sel_mask)
 
 
 def retrieve(cfg, index, q_dense, q_terms, q_weights, *, selector="lstm",
              stage1="overlap", theta=None, use_kernel=False,
              selector_params=None, k=None):
-    """Full CluSD pipeline. Returns (ids, scores, diagnostics)."""
-    k = k or cfg.k_final
-    sparse_ids, sparse_scores = sparse_lib.sparse_retrieve_topk(
-        index.sparse_index, q_terms, q_weights, cfg.k_sparse)
-    sel = select_clusters(cfg, index, q_dense, sparse_ids, sparse_scores,
-                          selector=selector, stage1=stage1, theta=theta,
-                          use_kernel=use_kernel, selector_params=selector_params)
-    if index.quantizer is not None:
-        from repro.core import quant as quant_lib
-        did, dscore, dmask = quant_lib.score_selected_pq(
-            index, q_dense, sel["sel_ids"], sel["sel_mask"])
-    else:
-        did, dscore, dmask = score_selected(index, q_dense, sel["sel_ids"],
-                                            sel["sel_mask"])
-    ids, scores = fusion_lib.fuse_topk(
-        sparse_ids, sparse_scores, did, jnp.where(dmask, dscore, 0.0), dmask,
-        index.n_docs, cfg.alpha, k)
-    diag = {
-        "n_selected": jnp.sum(sel["sel_mask"], axis=1),
-        "frac_docs_scanned": jnp.mean(dmask.astype(jnp.float32), axis=1)
-        * dmask.shape[1] / index.n_docs,
-        "sparse_ids": sparse_ids, "sparse_scores": sparse_scores,
-        **{k_: sel[k_] for k_ in ("cand", "probs", "sel_ids", "sel_mask")},
-    }
-    return ids, scores, diag
+    """Full CluSD pipeline (in-memory or PQ backend, chosen from the index).
+
+    Thin wrapper over engine/pipeline.py — the select/score/fuse logic
+    lives there, parameterized by a ClusterStore. Jit-able end to end.
+    """
+    from repro.engine import pipeline as pipe_lib
+    from repro.engine import stores as stores_lib
+    return pipe_lib.retrieve(
+        cfg, index, stores_lib.store_for_index(index), q_dense, q_terms,
+        q_weights, selector=selector, stage1=stage1, theta=theta,
+        use_kernel=use_kernel, selector_params=selector_params, k=k)

@@ -86,39 +86,22 @@ class DiskDocStore:
 
 
 def ondisk_clusd_retrieve(cfg, index, store: DiskClusterStore, q_dense,
-                          q_terms, q_weights, *, k=None):
+                          q_terms, q_weights, *, k=None, cache=None):
     """CluSD with the embedding store on disk: stages 1-2 run on the
     (in-memory) centroids/postings; only *selected* cluster blocks are read.
-    Single-query path (serving); returns (ids, scores, IOStats)."""
-    import jax
-    from repro.core import clusd as clusd_lib
-    from repro.core import fusion as fusion_lib
-    from repro.core import sparse as sparse_lib
 
-    k = k or cfg.k_final
+    Thin wrapper over engine/pipeline.py with a DiskStore backend: selection
+    is batched over the whole query set, and block I/O is one deduplicated
+    fetch (optionally through an engine BlockCache) instead of the old
+    per-query read loop. Returns (ids, scores, IOStats)."""
+    from repro.engine import pipeline as pipe_lib
+    from repro.engine import stores as stores_lib
+
     stats = IOStats()
-    sparse_ids, sparse_scores = sparse_lib.sparse_retrieve_topk(
-        index.sparse_index, q_terms, q_weights, cfg.k_sparse)
-    sel = clusd_lib.select_clusters(cfg, index, q_dense, sparse_ids,
-                                    sparse_scores)
-    B = q_dense.shape[0]
-    all_ids, all_scores = [], []
-    for b in range(B):
-        mask = np.asarray(sel["sel_mask"][b])
-        cids = np.asarray(sel["sel_ids"][b])[mask]
-        blocks = store.fetch_clusters(cids, stats)           # (S, cap, dim)
-        docs = np.asarray(index.cluster_docs)[cids]          # (S, cap)
-        valid = docs >= 0
-        scores = jnp.einsum("d,scd->sc", q_dense[b], blocks)
-        scores = jnp.where(jnp.asarray(valid), scores, 0.0)
-        ids_b, sc_b = fusion_lib.fuse_topk(
-            sparse_ids[b:b + 1], sparse_scores[b:b + 1],
-            jnp.asarray(np.where(valid, docs, 0).reshape(1, -1)),
-            scores.reshape(1, -1), jnp.asarray(valid.reshape(1, -1)),
-            index.n_docs, cfg.alpha, k)
-        all_ids.append(ids_b[0])
-        all_scores.append(sc_b[0])
-    return jnp.stack(all_ids), jnp.stack(all_scores), stats
+    dstore = stores_lib.DiskStore(store, index.cluster_docs, stats=stats)
+    ids, scores, _ = pipe_lib.retrieve(cfg, index, dstore, q_dense, q_terms,
+                                       q_weights, k=k, cache=cache)
+    return ids, scores, stats
 
 
 def ondisk_rerank_retrieve(cfg, index, store: DiskDocStore, q_dense, q_terms,

@@ -87,13 +87,25 @@ def reconstruct(pq: PQ, doc_ids):
 
 
 def score_selected_pq(index, q_dense, sel_ids, sel_mask):
-    """Quantized Step-3 scoring (mirrors clusd.score_selected)."""
-    pq = index.quantizer
-    docs = jnp.take(index.cluster_docs, sel_ids, axis=0)
-    B, S, cap = docs.shape
-    valid = (docs >= 0) & sel_mask[:, :, None]
-    docs_flat = jnp.where(valid, docs, 0).reshape(B, S * cap)
-    lut = adc_tables(pq, q_dense)
-    scores = adc_score(pq, lut, docs_flat)
-    scores = jnp.where(valid.reshape(B, S * cap), scores, -jnp.inf)
-    return docs_flat.astype(jnp.int32), scores, valid.reshape(B, S * cap)
+    """Quantized Step-3 scoring — thin wrapper over the engine pipeline
+    with a PQStore backend (ADC scoring via `score_docs`)."""
+    from repro.engine import pipeline as pipe_lib
+    from repro.engine import stores as stores_lib
+    store = stores_lib.PQStore(index.quantizer, index.cluster_docs)
+    return pipe_lib.score_selected(store, q_dense, sel_ids, sel_mask)
+
+
+def identity_pq(embeddings, nsub=1):
+    """Exact (lossless) PQ for corpora with <= 256 docs: doc d's code in
+    every subspace is d, and codebook entries are the docs' own sub-vectors.
+    ADC then reproduces the exact dot product — used by backend-parity
+    tests and debugging, not by real indexes."""
+    X = jnp.asarray(embeddings)
+    D, dim = X.shape
+    assert D <= 256, f"identity PQ needs <= 256 docs, got {D}"
+    assert dim % nsub == 0, (dim, nsub)
+    dsub = dim // nsub
+    books = X.reshape(D, nsub, dsub).transpose(1, 0, 2)      # (nsub, D, dsub)
+    books = jnp.pad(books, ((0, 0), (0, 256 - D), (0, 0)))
+    codes = jnp.tile(jnp.arange(D, dtype=jnp.int32)[:, None], (1, nsub))
+    return PQ(books, codes, None, nsub)

@@ -1,0 +1,19 @@
+"""Unified retrieval serving layer: one select/score/fuse pipeline behind
+pluggable cluster-block storage backends, plus a serving front-end with
+bucketed batching, an LRU block cache, and async prefetch. See README.md
+in this directory for the backend protocol and knobs."""
+
+from repro.engine.cache import BlockCache
+from repro.engine.pipeline import (
+    fetch_unique_blocks, retrieve, score_and_fuse, score_selected,
+    score_selected_host)
+from repro.engine.server import RetrievalEngine, ServeStats, bucket_size
+from repro.engine.stores import (
+    ClusterStore, DiskStore, InMemoryStore, PQStore, store_for_index)
+
+__all__ = [
+    "BlockCache", "ClusterStore", "DiskStore", "InMemoryStore", "PQStore",
+    "RetrievalEngine", "ServeStats", "bucket_size", "fetch_unique_blocks",
+    "retrieve", "score_and_fuse", "score_selected", "score_selected_host",
+    "store_for_index",
+]

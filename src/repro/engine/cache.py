@@ -1,0 +1,112 @@
+"""Bounded LRU cache of hot cluster blocks, keyed by cluster id.
+
+Thread-safe: the serving thread and the background prefetcher share one
+instance. Tracks hit/miss/eviction counts so benchmarks can report cache
+effectiveness (BENCH_serve.json `cache_hit_rate`).
+"""
+
+import collections
+import threading
+
+
+class BlockCache:
+    def __init__(self, capacity):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._blocks = collections.OrderedDict()   # cid -> (cap, dim) array
+        self._lock = threading.Lock()
+        self._fetch_lock = threading.Lock()        # single-flight miss fills
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self):
+        with self._lock:
+            return len(self._blocks)
+
+    def __contains__(self, cid):
+        with self._lock:
+            return cid in self._blocks
+
+    def get(self, cid):
+        """Block for `cid` (refreshing recency) or None on miss."""
+        with self._lock:
+            blk = self._blocks.get(cid)
+            if blk is None:
+                self.misses += 1
+                return None
+            self._blocks.move_to_end(cid)
+            self.hits += 1
+            return blk
+
+    def _peek(self, cid):
+        """Like get() but without hit/miss accounting (internal re-checks
+        and prefetch probes must not skew serving-path stats)."""
+        with self._lock:
+            blk = self._blocks.get(cid)
+            if blk is not None:
+                self._blocks.move_to_end(cid)
+            return blk
+
+    def get_or_fetch_many(self, cids, fetch_fn, record=True):
+        """{cid: block} for every cid; misses are filled via
+        `fetch_fn(list_of_cids) -> (n, cap, dim) array` under a
+        single-flight lock, so a concurrent prefetcher and the serving
+        thread never read the same cold block twice. `record=False`
+        skips hit/miss accounting (prefetch path)."""
+        out, misses, pending = {}, [], set()
+        for c in cids:
+            c = int(c)
+            if c in out or c in pending:
+                continue
+            blk = self.get(c) if record else self._peek(c)
+            if blk is None:
+                misses.append(c)
+                pending.add(c)
+            else:
+                out[c] = blk
+        if misses:
+            with self._fetch_lock:
+                # another thread may have filled some while we waited
+                need = []
+                for c in misses:
+                    blk = self._peek(c)
+                    if blk is None:
+                        need.append(c)
+                    else:
+                        out[c] = blk
+                if need:
+                    vecs = fetch_fn(need)
+                    for i, c in enumerate(need):
+                        # copy: caching a view of the batch-fetch array
+                        # would pin the whole buffer past eviction
+                        out[c] = vecs[i].copy()
+                        self.put(c, out[c])
+        return out
+
+    def put(self, cid, block):
+        with self._lock:
+            self._blocks.pop(cid, None)      # re-insert at most-recent end
+            self._blocks[cid] = block
+            while len(self._blocks) > self.capacity:
+                self._blocks.popitem(last=False)
+                self.evictions += 1
+
+    def keys(self):
+        """Cluster ids, least- to most-recently used."""
+        with self._lock:
+            return list(self._blocks.keys())
+
+    def hit_rate(self):
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def stats(self):
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self),
+                "capacity": self.capacity, "hit_rate": round(self.hit_rate(), 4)}
+
+    def clear(self):
+        with self._lock:
+            self._blocks.clear()

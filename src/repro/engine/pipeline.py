@@ -1,0 +1,137 @@
+"""The single CluSD select/score/fuse pipeline, parameterized by a
+ClusterStore backend (engine/stores.py).
+
+Pre-engine, the repo had three copies of this logic — in-memory
+(core/clusd.py), on-disk with a per-query Python loop (core/disk.py), and
+PQ (core/quant.py). They now all route here:
+
+  retrieve(cfg, index, store, ...) =
+      sparse retrieval
+      -> Stage I/II cluster selection (core/clusd.py, batched over queries)
+      -> dense scoring of the selected cluster blocks via `store`
+      -> min-max fusion + global top-k
+
+Scoring has two shapes:
+  * device stores (InMemoryStore, PQStore): a jit-traceable gather/ADC over
+    (B, S) selected clusters — identical numerics to the pre-engine code.
+  * host stores (DiskStore): selection still runs batched on device; block
+    I/O is ONE deduplicated fetch for the whole query batch (optionally
+    through a BlockCache), replacing the old per-query read loop.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clusd as clusd_lib
+from repro.core import fusion as fusion_lib
+from repro.core import sparse as sparse_lib
+
+
+# ---------------------------------------------------------------------------
+# dense scoring of selected clusters
+# ---------------------------------------------------------------------------
+
+def score_selected(store, q_dense, sel_ids, sel_mask):
+    """Device-store scoring (jit-traceable).
+
+    q_dense (B, dim); sel_ids/sel_mask (B, S).
+    Returns (doc_ids (B, S*cap) int32, scores with -inf at invalid, valid).
+    """
+    docs = jnp.take(store.cluster_docs, sel_ids, axis=0)     # (B, S, cap)
+    B, S, cap = docs.shape
+    valid = (docs >= 0) & sel_mask[:, :, None]
+    docs_flat = jnp.where(valid, docs, 0).reshape(B, S * cap)
+    scorer = getattr(store, "score_docs", None)
+    if scorer is not None:
+        scores = scorer(q_dense, docs_flat)
+    else:
+        vecs, _, _ = store.fetch_blocks(sel_ids)             # (B, S, cap, dim)
+        scores = jnp.einsum("bd,bscd->bsc", q_dense, vecs).reshape(B, S * cap)
+    scores = jnp.where(valid.reshape(B, S * cap), scores, -jnp.inf)
+    return docs_flat.astype(jnp.int32), scores, valid.reshape(B, S * cap)
+
+
+def fetch_unique_blocks(store, uniq, cache=None):
+    """Fetch blocks for sorted unique cluster ids, through the LRU cache
+    when given. Only cache misses hit the store (and count as I/O ops).
+    Returns (U, cap, dim) float32."""
+    if cache is None:
+        vecs, _, _ = store.fetch_blocks(uniq)
+        return np.asarray(vecs)
+    got = cache.get_or_fetch_many(
+        uniq, lambda cids: np.asarray(store.fetch_blocks(np.asarray(cids))[0]))
+    return np.stack([got[int(c)] for c in uniq])
+
+
+def score_selected_host(store, q_dense, sel_ids, sel_mask, cache=None):
+    """Host-store scoring: dedup selected cluster ids across the whole query
+    batch, fetch each block at most once, then score on device. Mirrors
+    `score_selected`'s contract exactly."""
+    sel = np.asarray(sel_ids)
+    mask = np.asarray(sel_mask)
+    B, S = sel.shape
+    docs = store.cluster_docs_np[sel]                        # (B, S, cap)
+    cap = docs.shape[-1]
+    valid = (docs >= 0) & mask[:, :, None]
+    if mask.any():
+        uniq = np.unique(sel[mask])
+        blocks = fetch_unique_blocks(store, uniq, cache)     # (U, cap, dim)
+        pos = np.searchsorted(uniq, np.where(mask, sel, uniq[0]))
+        # ship only the U unique blocks to device; expand by gather there
+        vecs = jnp.take(jnp.asarray(blocks), jnp.asarray(pos), axis=0)
+        scores = jnp.einsum("bd,bscd->bsc", q_dense, vecs).reshape(B, S * cap)
+    else:
+        scores = jnp.zeros((B, S * cap), jnp.float32)
+    valid_flat = jnp.asarray(valid.reshape(B, S * cap))
+    scores = jnp.where(valid_flat, scores, -jnp.inf)
+    docs_flat = jnp.asarray(np.where(valid, docs, 0).reshape(B, S * cap))
+    return docs_flat.astype(jnp.int32), scores, valid_flat
+
+
+# ---------------------------------------------------------------------------
+# fusion + full pipeline
+# ---------------------------------------------------------------------------
+
+def score_and_fuse(cfg, index, store, q_dense, sparse_ids, sparse_scores,
+                   sel_ids, sel_mask, *, k=None, cache=None):
+    """Step 3: dense-score the selected clusters via `store`, fuse with the
+    sparse results. Returns (ids, scores, dmask)."""
+    k = k or cfg.k_final
+    if getattr(store, "is_host", False):
+        did, dscore, dmask = score_selected_host(store, q_dense, sel_ids,
+                                                 sel_mask, cache=cache)
+    else:
+        did, dscore, dmask = score_selected(store, q_dense, sel_ids, sel_mask)
+    ids, scores = fusion_lib.fuse_topk(
+        sparse_ids, sparse_scores, did, jnp.where(dmask, dscore, 0.0), dmask,
+        index.n_docs, cfg.alpha, k)
+    return ids, scores, dmask
+
+
+def retrieve(cfg, index, store, q_dense, q_terms, q_weights, *,
+             selector="lstm", stage1="overlap", theta=None, use_kernel=False,
+             selector_params=None, k=None, cache=None):
+    """Full CluSD pipeline against any backend. Returns (ids, scores, diag).
+
+    Jit-able end to end for device stores; for host stores selection runs
+    on device and block fetch/score runs eagerly (call outside jit).
+    """
+    k = k or cfg.k_final
+    sparse_ids, sparse_scores = sparse_lib.sparse_retrieve_topk(
+        index.sparse_index, q_terms, q_weights, cfg.k_sparse)
+    sel = clusd_lib.select_clusters(cfg, index, q_dense, sparse_ids,
+                                    sparse_scores, selector=selector,
+                                    stage1=stage1, theta=theta,
+                                    use_kernel=use_kernel,
+                                    selector_params=selector_params)
+    ids, scores, dmask = score_and_fuse(
+        cfg, index, store, q_dense, sparse_ids, sparse_scores,
+        sel["sel_ids"], sel["sel_mask"], k=k, cache=cache)
+    diag = {
+        "n_selected": jnp.sum(sel["sel_mask"], axis=1),
+        "frac_docs_scanned": jnp.mean(dmask.astype(jnp.float32), axis=1)
+        * dmask.shape[1] / index.n_docs,
+        "sparse_ids": sparse_ids, "sparse_scores": sparse_scores,
+        **{k_: sel[k_] for k_ in ("cand", "probs", "sel_ids", "sel_mask")},
+    }
+    return ids, scores, diag

@@ -1,0 +1,306 @@
+"""RetrievalEngine: the serving front-end over the unified pipeline.
+
+Three serving optimizations on top of engine/pipeline.py:
+
+  * bucketed batching — incoming query batches are padded to power-of-two
+    sizes (capped at `max_batch`), so `jax.jit` compiles once per bucket
+    instead of once per ragged tail size. Oversize batches are chunked.
+  * LRU block cache — for host (disk) stores, fetched cluster blocks land
+    in a bounded BlockCache keyed by cluster id; hot clusters are served
+    from memory.
+  * async prefetch — a background thread pulls Stage-I candidate cluster
+    blocks from disk into the cache while the Stage-II LSTM selection is
+    still running, so by the time the selection lands, most selected
+    blocks are already cache hits.
+
+Usage:
+    engine = RetrievalEngine(cfg, index)                  # in-memory / PQ
+    engine = RetrievalEngine(cfg, index, store=DiskStore(...))
+    ids, scores = engine.retrieve(q_dense, q_terms, q_weights)
+    engine.stats()   # latency percentiles, cache hit rate, I/O counters
+    engine.close()
+"""
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clusd as clusd_lib
+from repro.core import sparse as sparse_lib
+from repro.engine import pipeline as pipe_lib
+from repro.engine import stores as stores_lib
+from repro.engine.cache import BlockCache
+
+
+def bucket_size(n, max_batch):
+    """Smallest power of two >= n, capped at max_batch."""
+    if n < 1:
+        raise ValueError(f"batch size must be >= 1, got {n}")
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, max_batch)
+
+
+def _pad_rows(x, n_pad):
+    """Pad axis 0 by repeating the last row (keeps ids/terms in range)."""
+    if n_pad == 0:
+        return x
+    return np.concatenate([x, np.repeat(np.asarray(x)[-1:], n_pad, axis=0)])
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    size: int          # real queries in the batch (before padding)
+    bucket: int        # padded bucket it ran in
+    compiled: bool     # this batch triggered a jit compile for its bucket
+    ms: float
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_queries: int = 0
+    n_batches: int = 0
+    batches: List[BatchRecord] = dataclasses.field(default_factory=list)
+    prefetch_enqueued: int = 0
+    prefetch_errors: int = 0
+
+    def record(self, size, bucket, compiled, ms):
+        self.n_queries += size
+        self.n_batches += 1
+        self.batches.append(BatchRecord(size, bucket, compiled, ms))
+
+    @property
+    def batch_ms(self):
+        return [b.ms for b in self.batches]
+
+    @property
+    def compiled_buckets(self):
+        return sorted({b.bucket for b in self.batches if b.compiled})
+
+    def _steady(self):
+        return [b for b in self.batches if not b.compiled]
+
+    def per_query_ms(self):
+        """Per-query latencies, excluding jit-compile batches."""
+        return [b.ms / b.size for b in self._steady()]
+
+    def steady_qps(self):
+        s = self._steady()
+        t = sum(b.ms for b in s)
+        return sum(b.size for b in s) / (t / 1e3) if t else 0.0
+
+    def latency_percentiles(self):
+        """Steady-state (compile batches excluded) batch-latency summary."""
+        steady = [b.ms for b in self._steady()]
+        if not steady:
+            return {}
+        lat = np.asarray(steady)
+        return {"p50_ms": round(float(np.percentile(lat, 50)), 3),
+                "p99_ms": round(float(np.percentile(lat, 99)), 3),
+                "mean_ms": round(float(lat.mean()), 3)}
+
+
+class RetrievalEngine:
+    """Unified serving layer over a ClusterStore backend."""
+
+    _PF_CHUNK = 8            # blocks per prefetch fetch (lock granularity)
+
+    def __init__(self, cfg, index, store=None, *, max_batch=256,
+                 cache_capacity=512, prefetch=True, prefetch_depth=None,
+                 k=None):
+        self.cfg = cfg
+        self.index = index
+        self.store = store if store is not None \
+            else stores_lib.store_for_index(index)
+        self.is_host = bool(getattr(self.store, "is_host", False))
+        self.max_batch = max(1, max_batch)
+        self.k = k or cfg.k_final
+        self.serve_stats = ServeStats()
+        self.cache = BlockCache(cache_capacity) \
+            if (self.is_host and cache_capacity) else None
+        # prefetch candidates a bit past the selection budget: Stage-II
+        # mostly keeps high-ranked Stage-I candidates, so this covers the
+        # selection without reading the whole candidate list.
+        self.prefetch_depth = prefetch_depth if prefetch_depth is not None \
+            else min(cfg.n_candidates, cfg.max_selected + cfg.max_selected // 2)
+        self._fns: Dict[Any, Any] = {}          # (kind, bucket) -> jitted fn
+        self._pf_q = None
+        self._pf_thread = None
+        if prefetch and self.is_host and self.cache is not None:
+            self._pf_q = queue.Queue(maxsize=64)
+            self._pf_thread = threading.Thread(target=self._prefetch_worker,
+                                               daemon=True)
+            self._pf_thread.start()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self):
+        if self._pf_q is not None:
+            self._pf_q.put(None)
+            # unbounded join: the queue is bounded and fetches are chunked,
+            # so drain is finite — and stats() after close() must be final
+            self._pf_thread.join()
+            self._pf_q = None
+            self._pf_thread = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- prefetch -----------------------------------------------------------
+
+    def _prefetch_worker(self):
+        while True:
+            cids = self._pf_q.get()
+            if cids is None:
+                return
+            try:
+                # record=False: prefetch probes must not skew the serving
+                # hit-rate; single-flight inside keeps the serving thread
+                # from re-reading blocks this fetch is already pulling.
+                # Fetch in small chunks so the serving thread never waits
+                # behind the whole candidate set for its selected blocks.
+                for i in range(0, len(cids), self._PF_CHUNK):
+                    self.cache.get_or_fetch_many(
+                        cids[i:i + self._PF_CHUNK],
+                        lambda c: np.asarray(
+                            self.store.fetch_blocks(np.asarray(c))[0]),
+                        record=False)
+            except Exception:       # prefetch is best-effort; never kill serving
+                self.serve_stats.prefetch_errors += 1
+
+    def _enqueue_prefetch(self, cand):
+        """cand: (B, n_candidates) host array, stage-1 ordered."""
+        if self._pf_q is None:
+            return
+        cids = np.unique(np.asarray(cand)[:, :self.prefetch_depth])
+        cids = [int(c) for c in cids if int(c) not in self.cache]
+        if not cids:
+            return
+        try:
+            self._pf_q.put_nowait(cids)
+            self.serve_stats.prefetch_enqueued += len(cids)
+        except queue.Full:
+            pass
+
+    # -- compiled stages ----------------------------------------------------
+
+    def _fn(self, kind, bucket, builder):
+        key = (kind, bucket)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = builder()
+            self._fns[key] = fn
+        return fn
+
+    def _bucket_is_cold(self, bucket):
+        key = ("stage1" if self.is_host else "device", bucket)
+        return key not in self._fns
+
+    def _device_fn(self, bucket):
+        def build():
+            def run(qd, qt, qw):
+                ids, scores, diag = pipe_lib.retrieve(
+                    self.cfg, self.index, self.store, qd, qt, qw, k=self.k)
+                return ids, scores, diag["n_selected"]
+            return jax.jit(run)
+        return self._fn("device", bucket, build)
+
+    def _stage1_fn(self, bucket):
+        def build():
+            def run(qd, qt, qw):
+                sid, ss = sparse_lib.sparse_retrieve_topk(
+                    self.index.sparse_index, qt, qw, self.cfg.k_sparse)
+                s1 = clusd_lib.stage1_candidates(self.cfg, self.index, qd,
+                                                 sid, ss)
+                return sid, ss, s1["cand"], s1["feats"]
+            return jax.jit(run)
+        return self._fn("stage1", bucket, build)
+
+    def _stage2_fn(self, bucket):
+        def build():
+            def run(cand, feats):
+                s2 = clusd_lib.stage2_select(self.cfg, self.index, cand, feats)
+                return s2["sel_ids"], s2["sel_mask"]
+            return jax.jit(run)
+        return self._fn("stage2", bucket, build)
+
+    # -- serving ------------------------------------------------------------
+
+    def retrieve(self, q_dense, q_terms, q_weights, *, k=None):
+        """Serve a query batch of any size. Returns (ids, scores) with the
+        caller's batch dimension preserved."""
+        if k is not None and k != self.k:
+            raise ValueError("per-call k would defeat bucketed compilation; "
+                             "construct the engine with the serving k")
+        n = int(np.asarray(q_dense).shape[0])
+        if n < 1:
+            raise ValueError("empty query batch")
+        out_ids, out_scores = [], []
+        for lo in range(0, n, self.max_batch):
+            hi = min(lo + self.max_batch, n)
+            ids, scores = self._retrieve_chunk(
+                q_dense[lo:hi], q_terms[lo:hi], q_weights[lo:hi])
+            out_ids.append(ids)
+            out_scores.append(scores)
+        if len(out_ids) == 1:
+            return out_ids[0], out_scores[0]
+        return (jnp.concatenate(out_ids, axis=0),
+                jnp.concatenate(out_scores, axis=0))
+
+    def _retrieve_chunk(self, q_dense, q_terms, q_weights):
+        n = int(np.asarray(q_dense).shape[0])
+        bucket = bucket_size(n, self.max_batch)
+        compiled = self._bucket_is_cold(bucket)
+        pad = bucket - n
+        qd = jnp.asarray(_pad_rows(q_dense, pad))
+        qt = jnp.asarray(_pad_rows(q_terms, pad))
+        qw = jnp.asarray(_pad_rows(q_weights, pad))
+        t0 = time.perf_counter()
+        if self.is_host:
+            ids, scores = self._serve_host(bucket, qd, qt, qw)
+        else:
+            ids, scores, _ = self._device_fn(bucket)(qd, qt, qw)
+        ids.block_until_ready()
+        self.serve_stats.record(n, bucket, compiled,
+                                (time.perf_counter() - t0) * 1e3)
+        return ids[:n], scores[:n]
+
+    def _serve_host(self, bucket, qd, qt, qw):
+        sid, ss, cand, feats = self._stage1_fn(bucket)(qd, qt, qw)
+        # overlap: start pulling candidate blocks while Stage II runs
+        self._enqueue_prefetch(np.asarray(cand))
+        sel_ids, sel_mask = self._stage2_fn(bucket)(cand, feats)
+        ids, scores, _ = pipe_lib.score_and_fuse(
+            self.cfg, self.index, self.store, qd, sid, ss, sel_ids, sel_mask,
+            k=self.k, cache=self.cache)
+        return ids, scores
+
+    # -- introspection ------------------------------------------------------
+
+    def stats(self):
+        out = {"n_queries": self.serve_stats.n_queries,
+               "n_batches": self.serve_stats.n_batches,
+               "compiled_buckets": self.serve_stats.compiled_buckets,
+               "qps_steady": round(self.serve_stats.steady_qps(), 1),
+               "prefetch_enqueued": self.serve_stats.prefetch_enqueued,
+               "prefetch_errors": self.serve_stats.prefetch_errors,
+               **self.serve_stats.latency_percentiles()}
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
+        io = getattr(self.store, "stats", None)
+        if io is not None and hasattr(io, "n_ops"):
+            out["io"] = {"n_ops": io.n_ops, "bytes": io.bytes,
+                         "wall_ms": round(io.wall_ms, 2),
+                         "model_ms": round(io.model_ms(), 2)}
+        return out

@@ -1,0 +1,133 @@
+"""Pluggable cluster-block storage backends behind one protocol.
+
+Every backend answers the same question — "give me the embedding blocks for
+these clusters" — so the select/score/fuse pipeline (engine/pipeline.py) is
+written once and parameterized by the store:
+
+  fetch_blocks(cluster_ids) -> (vecs, docs, valid)
+    cluster_ids : int array; device stores accept any leading batch shape
+                  (jit-traceable), host stores take a 1-D host sequence.
+    vecs  : (..., cap, dim) float32 block embeddings
+    docs  : (..., cap)      int32 doc ids, -1 pad
+    valid : (..., cap)      bool  (docs >= 0)
+
+Backends additionally expose:
+  cluster_docs : (N, cap) doc-id table (device array)
+  is_host      : True when fetch_blocks does host I/O (not jit-traceable);
+                 the pipeline then batches selection on device and fetches
+                 deduplicated blocks on the host.
+  score_docs(q_dense, doc_ids) [optional] : backend-native scoring kernel
+                 (dense gather+dot, PQ ADC); the pipeline prefers it on the
+                 device path so numerics match the pre-engine code exactly.
+"""
+
+from typing import Protocol, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as quant_lib
+from repro.core.disk import DiskClusterStore, IOStats
+
+
+@runtime_checkable
+class ClusterStore(Protocol):
+    is_host: bool
+
+    def fetch_blocks(self, cluster_ids):
+        """-> (vecs, docs, valid); see module docstring."""
+        ...
+
+
+class InMemoryStore:
+    """Device-resident embeddings; fetch is a jit-friendly gather."""
+
+    is_host = False
+
+    def __init__(self, embeddings, cluster_docs):
+        self.embeddings = embeddings          # (D, dim)
+        self.cluster_docs = cluster_docs      # (N, cap)
+
+    def fetch_blocks(self, cluster_ids):
+        docs = jnp.take(self.cluster_docs, cluster_ids, axis=0)
+        valid = docs >= 0
+        vecs = jnp.take(self.embeddings, jnp.where(valid, docs, 0), axis=0)
+        vecs = jnp.where(valid[..., None], vecs, 0.0)
+        return vecs, docs, valid
+
+    def score_docs(self, q_dense, doc_ids):
+        """(B, dim) x (B, K) -> (B, K) exact dot scores."""
+        vecs = jnp.take(self.embeddings, doc_ids, axis=0)
+        return jnp.einsum("bd,bkd->bk", q_dense, vecs)
+
+
+class PQStore:
+    """Product-quantized embeddings; scoring via ADC lookup tables,
+    block fetch via codebook reconstruction (identical scores up to fp)."""
+
+    is_host = False
+
+    def __init__(self, pq, cluster_docs):
+        self.pq = pq
+        self.cluster_docs = cluster_docs
+
+    def fetch_blocks(self, cluster_ids):
+        docs = jnp.take(self.cluster_docs, cluster_ids, axis=0)
+        valid = docs >= 0
+        flat = jnp.where(valid, docs, 0).reshape(-1)
+        vecs = quant_lib.reconstruct(self.pq, flat)
+        vecs = vecs.reshape(docs.shape + (vecs.shape[-1],))
+        vecs = jnp.where(valid[..., None], vecs, 0.0)
+        return vecs, docs, valid
+
+    def score_docs(self, q_dense, doc_ids):
+        lut = quant_lib.adc_tables(self.pq, q_dense)
+        return quant_lib.adc_score(self.pq, lut, doc_ids)
+
+
+class DiskStore:
+    """On-disk cluster blocks (wraps core.disk.DiskClusterStore).
+
+    fetch_blocks takes a 1-D host sequence of cluster ids and reads one
+    block per id, counting I/O ops/bytes into `stats` (thread-safe, so a
+    background prefetcher can share the store with the serving thread).
+    """
+
+    is_host = True
+
+    def __init__(self, block_store: DiskClusterStore, cluster_docs,
+                 stats: IOStats = None):
+        import threading
+        self.blocks = block_store
+        self.cluster_docs = cluster_docs
+        self.cluster_docs_np = np.asarray(cluster_docs)
+        self.stats = stats if stats is not None else IOStats()
+        self._lock = threading.Lock()
+
+    @classmethod
+    def create(cls, path, embeddings, cluster_docs, **kw):
+        return cls(DiskClusterStore(path, embeddings, cluster_docs),
+                   cluster_docs, **kw)
+
+    @property
+    def block_bytes(self):
+        return self.blocks.block_bytes
+
+    def fetch_blocks(self, cluster_ids):
+        cluster_ids = np.asarray(cluster_ids, np.int64).reshape(-1)
+        docs = self.cluster_docs_np[cluster_ids]
+        if len(cluster_ids) == 0:
+            return (np.zeros((0, self.blocks.cap, self.blocks.dim), np.float32),
+                    docs, docs >= 0)
+        local = IOStats()
+        vecs = np.asarray(self.blocks.fetch_clusters(cluster_ids, local))
+        with self._lock:
+            self.stats.add(local.n_ops, local.bytes, local.wall_ms)
+        return vecs, docs, docs >= 0
+
+
+def store_for_index(index):
+    """Default device store for a CluSDIndex: PQ if quantized, else dense."""
+    if getattr(index, "quantizer", None) is not None:
+        return PQStore(index.quantizer, index.cluster_docs)
+    return InMemoryStore(index.embeddings, index.cluster_docs)

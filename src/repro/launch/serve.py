@@ -1,14 +1,24 @@
-"""CluSD retrieval serving driver: builds the index over a synthetic corpus,
-trains the Stage-II LSTM, then serves batched queries end-to-end (sparse ->
-Stage I/II -> partial dense -> fusion), reporting latency percentiles and
-quality vs the full-retrieval oracle.
+"""CluSD serving driver on the unified RetrievalEngine (repro.engine).
+
+Builds the index over a synthetic corpus, trains the Stage-II LSTM, then
+serves batched queries through `RetrievalEngine` — one select/score/fuse
+pipeline (engine/pipeline.py) behind a pluggable ClusterStore backend:
+
+  * default: in-memory backend; request batches are padded to power-of-two
+    buckets so jit compiles once per bucket, not once per ragged tail.
+  * --ondisk: DiskStore backend with a bounded LRU block cache and a
+    background thread prefetching Stage-I candidate blocks while Stage-II
+    LSTM selection runs; reports I/O ops/bytes and cache hit rate.
+
+Reports latency percentiles and quality vs the full-retrieval oracle.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --docs 20000 --queries 256 \
-      [--ondisk] [--distributed]
+      [--ondisk] [--cache-blocks 512] [--no-prefetch]
 """
 
 import argparse
+import dataclasses
 import os
 import tempfile
 import time
@@ -17,11 +27,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import baselines as bl
 from repro.core import clusd as cl
 from repro.core import disk as dk
 from repro.core import train_lstm as tl
 from repro.data import mrr_at, recall_at, synth_corpus, synth_queries
+from repro.engine import DiskStore, RetrievalEngine
 
 
 def main():
@@ -33,9 +43,10 @@ def main():
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--epochs", type=int, default=40)
     ap.add_argument("--ondisk", action="store_true")
+    ap.add_argument("--cache-blocks", type=int, default=512)
+    ap.add_argument("--no-prefetch", action="store_true")
     args = ap.parse_args()
 
-    import dataclasses
     cfg = dataclasses.replace(
         get_config("clusd-msmarco", "smoke"),
         n_docs=args.docs, dim=args.dim, n_clusters=args.clusters,
@@ -55,37 +66,52 @@ def main():
     print(f"LSTM trained: loss {hist[0]:.4f} -> {hist[-1]:.4f}", flush=True)
 
     test_q = synth_queries(9, corpus, args.queries)
-    fn = jax.jit(lambda qd, qt, qw: cl.retrieve(cfg, index, qd, qt, qw)[:2])
-    lat = []
+    engine = RetrievalEngine(cfg, index, max_batch=args.batch)
     all_ids = []
     for i in range(0, args.queries, args.batch):
-        qd = test_q.q_dense[i:i + args.batch]
-        qt = test_q.q_terms[i:i + args.batch]
-        qw = test_q.q_weights[i:i + args.batch]
-        t0 = time.perf_counter()
-        ids, scores = fn(qd, qt, qw)
-        ids.block_until_ready()
-        lat.append((time.perf_counter() - t0) * 1e3 / qd.shape[0])
+        ids, _ = engine.retrieve(test_q.q_dense[i:i + args.batch],
+                                 test_q.q_terms[i:i + args.batch],
+                                 test_q.q_weights[i:i + args.batch])
         all_ids.append(np.asarray(ids))
     ids = np.concatenate(all_ids)
-    lat = np.asarray(lat[1:])  # drop compile
+    st = engine.stats()
+    lat = np.asarray(engine.serve_stats.per_query_ms())
 
     oracle_ids, _ = cl.full_dense_topk(index.embeddings, test_q.q_dense, 64)
     print(f"CluSD   MRR@10={mrr_at(ids, test_q.rel_doc):.4f} "
           f"R@{cfg.k_final}={recall_at(ids, test_q.rel_doc, cfg.k_final):.4f}")
     print(f"oracle-dense MRR@10={mrr_at(np.asarray(oracle_ids), test_q.rel_doc):.4f}")
-    print(f"serve latency/query: mean={lat.mean():.2f}ms p99={np.percentile(lat, 99):.2f}ms")
+    if len(lat):
+        print(f"serve latency/query: mean={lat.mean():.2f}ms "
+              f"p99={np.percentile(lat, 99):.2f}ms "
+              f"(buckets compiled: {st['compiled_buckets']})")
 
     if args.ondisk:
         tmp = tempfile.mkdtemp()
-        store = dk.DiskClusterStore(os.path.join(tmp, "blocks.bin"),
-                                    corpus.embeddings, index.cluster_docs)
-        ids_d, _, stats = dk.ondisk_clusd_retrieve(
-            cfg, index, store, test_q.q_dense[:16], test_q.q_terms[:16],
-            test_q.q_weights[:16])
-        print(f"on-disk: {stats.n_ops} block reads, "
-              f"{stats.bytes/2**20:.1f} MiB, model {stats.model_ms():.1f} ms, "
-              f"MRR@10={mrr_at(np.asarray(ids_d), test_q.rel_doc[:16]):.4f}")
+        blocks = dk.DiskClusterStore(os.path.join(tmp, "blocks.bin"),
+                                     corpus.embeddings, index.cluster_docs)
+        nq = min(64, args.queries)
+        with RetrievalEngine(cfg, index,
+                             store=DiskStore(blocks, index.cluster_docs),
+                             max_batch=args.batch,
+                             cache_capacity=args.cache_blocks,
+                             prefetch=not args.no_prefetch) as deng:
+            t0 = time.perf_counter()
+            ids_d, _ = deng.retrieve(test_q.q_dense[:nq], test_q.q_terms[:nq],
+                                     test_q.q_weights[:nq])
+            wall = time.perf_counter() - t0
+        # stats after close(): the prefetch worker has drained, so I/O and
+        # cache numbers are final
+        ds = deng.stats()
+        io, cache = ds["io"], ds.get("cache", {})
+        qps = ds["qps_steady"]
+        qps_str = f"{qps:.1f} QPS steady" if qps else \
+            f"{nq / wall:.1f} QPS incl. compile"
+        print(f"on-disk engine: {io['n_ops']} block reads, "
+              f"{io['bytes'] / 2**20:.1f} MiB, model {io['model_ms']:.1f} ms, "
+              f"cache hit rate {cache.get('hit_rate', 0.0):.2f}, "
+              f"{qps_str}, "
+              f"MRR@10={mrr_at(np.asarray(ids_d), test_q.rel_doc[:nq]):.4f}")
     return 0
 
 

@@ -1,0 +1,51 @@
+"""Minimal stand-in for `hypothesis` so property tests still run (with a
+deterministic sample sweep) where the real package isn't installed.
+
+Only covers what this suite uses: `@settings(max_examples=..., deadline=...)`
+stacked on `@given(st.integers(lo, hi))`. Prefer the real hypothesis
+(requirements.txt) — this fallback trades shrinking/coverage for zero deps.
+"""
+
+import numpy as np
+
+DEFAULT_EXAMPLES = 10
+
+
+class _Integers:
+    def __init__(self, lo, hi):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def samples(self, n):
+        out = [self.lo, self.hi] if self.hi > self.lo else [self.lo]
+        rng = np.random.default_rng(0xC1D5D)
+        while len(out) < n:
+            out.append(int(rng.integers(self.lo, self.hi + 1)))
+        return out[:n]
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+
+def given(strategy):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", DEFAULT_EXAMPLES)
+            for value in strategy.samples(n):
+                fn(*args, value, **kwargs)
+        # no functools.wraps: pytest must see the zero-arg wrapper signature,
+        # not the inner function's strategy-filled parameter
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._max_examples = DEFAULT_EXAMPLES
+        return wrapper
+    return deco
+
+
+def settings(max_examples=DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
