@@ -1,0 +1,114 @@
+"""Index build/serve-split benchmark: offline build cost vs cold-open cost.
+
+Measures what the persistent index subsystem buys at serve time — the seed
+rebuilt clusters + packed blocks in memory on every process start; a built
+index opens in milliseconds (manifest + mmap) and answers its first query
+without ever materializing the embedding matrix.
+
+Writes BENCH_index.json at the repo root (stamped with git SHA + config so
+the trajectory is comparable across PRs):
+  build_wall_s                  offline pipeline + pack + checksum time
+  index_bytes / n_block_shards  on-disk footprint
+  cold_open_ms                  manifest validate + mmap + store construction
+  cold_open_to_first_query_ms   ... + engine + first batch (incl. jit)
+  steady_batch_ms               second batch on the warm engine
+  io                            block I/O ops/bytes for the serve phase
+
+Standalone: PYTHONPATH=src python -m benchmarks.build_index
+"""
+
+import dataclasses
+import json
+import math
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro import index as index_lib
+from repro.core import train_lstm as tl
+from repro.data import mrr_at, synth_corpus, synth_queries
+
+N_DOCS = 20_000          # matches BENCH_serve.json's corpus size
+N_SHARDS = 8
+N_QUERIES = 64
+BATCH = 32
+
+
+def run():
+    cfg = dataclasses.replace(C.bench_cfg(), n_docs=N_DOCS,
+                              train_queries=256, epochs=15)
+    corpus = synth_corpus(0, cfg.n_docs, cfg.dim, cfg.vocab, topic_noise=0.5)
+    emb = np.asarray(corpus.embeddings)
+    tmp = tempfile.mkdtemp()
+    out_dir = os.path.join(tmp, "index")
+
+    # ---- offline build -------------------------------------------------
+    t0 = time.perf_counter()
+    index = index_lib.build_index_offline(
+        cfg, jax.random.key(0), emb, corpus.doc_terms, corpus.doc_weights,
+        shard_docs=math.ceil(cfg.n_docs / N_SHARDS))
+    index.embeddings = corpus.embeddings        # offline-only: label gen
+    tq = synth_queries(1, corpus, cfg.train_queries)
+    _, feats, labels = tl.make_labels(cfg, index, tq.q_dense, tq.q_terms,
+                                      tq.q_weights)
+    index.lstm_params, _ = tl.train_selector(cfg, jax.random.key(2),
+                                             np.asarray(feats),
+                                             np.asarray(labels))
+    index.embeddings = None
+    manifest = index_lib.write_index(out_dir, cfg, index, emb,
+                                     n_shards=N_SHARDS)
+    build_wall_s = time.perf_counter() - t0
+
+    # ---- cold open -> first query --------------------------------------
+    qs = synth_queries(9, corpus, N_QUERIES, dense_noise=0.30,
+                       term_noise_frac=0.4)
+    t1 = time.perf_counter()
+    reader = index_lib.IndexReader.open(out_dir, verify="size")
+    lcfg, lindex = reader.load_index()
+    engine = reader.engine(cfg=lcfg, index=lindex, max_batch=BATCH,
+                           cache_capacity=cfg.n_clusters)
+    open_ms = (time.perf_counter() - t1) * 1e3
+    ids1, _ = engine.retrieve(qs.q_dense[:BATCH], qs.q_terms[:BATCH],
+                              qs.q_weights[:BATCH])
+    first_query_ms = (time.perf_counter() - t1) * 1e3
+    t2 = time.perf_counter()
+    ids2, _ = engine.retrieve(qs.q_dense[BATCH:2 * BATCH],
+                              qs.q_terms[BATCH:2 * BATCH],
+                              qs.q_weights[BATCH:2 * BATCH])
+    steady_batch_ms = (time.perf_counter() - t2) * 1e3
+    engine.close()
+    st = engine.stats()
+    ids = np.concatenate([np.asarray(ids1), np.asarray(ids2)])
+
+    result = {
+        "bench": "build_index", **C.bench_meta(cfg),
+        "n_shards": N_SHARDS,
+        "build_wall_s": round(build_wall_s, 2),
+        "index_bytes": manifest["total_bytes"],
+        "index_mb": round(manifest["total_bytes"] / 2**20, 2),
+        "n_block_shards": len(manifest["block_shards"]),
+        "cold_open_ms": round(open_ms, 1),
+        "cold_open_to_first_query_ms": round(first_query_ms, 1),
+        "steady_batch_ms": round(steady_batch_ms, 1),
+        "MRR@10": round(mrr_at(ids, qs.rel_doc[:2 * BATCH]), 4),
+        "io": st.get("io", {}),
+        "cluster_fill": manifest["stats"]["cluster_fill"],
+    }
+    out = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "BENCH_index.json"))
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {out}")
+    return result
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = run()
+    print(json.dumps({k: v for k, v in res.items() if k != "cluster_fill"},
+                     indent=1))

@@ -22,6 +22,28 @@ from repro.data import mrr_at, recall_at, synth_corpus, synth_queries
 SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
 
 
+def git_sha():
+    """Current commit (short), or "unknown" outside a git checkout."""
+    import subprocess
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return "unknown"
+
+
+def bench_meta(cfg):
+    """Stamp for BENCH_*.json files so the perf trajectory in ROADMAP stays
+    comparable across PRs: what commit and what index geometry produced
+    these numbers."""
+    return {"git_sha": git_sha(),
+            "config": {"n_docs": cfg.n_docs, "n_clusters": cfg.n_clusters,
+                       "dim": cfg.dim, "cluster_cap": cfg.cluster_cap,
+                       "dtype": cfg.dtype}}
+
+
 def bench_cfg(n_clusters=None, dim=None):
     return dataclasses.replace(
         get_config("clusd-msmarco", "smoke"),

@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.table7_quant",
     "benchmarks.table8_ablation",
     "benchmarks.serve_engine",
+    "benchmarks.build_index",
     "benchmarks.fig2_nclusters",
     "benchmarks.kernelbench",
     "benchmarks.roofline_report",

@@ -117,7 +117,7 @@ def run():
         f"engine read {io['n_ops']} blocks, seed loop would read {seed_ops}"
 
     result = {"table": "serve_engine", "n_docs": N_DOCS,
-              "n_queries": N_QUERIES, "rows": rows}
+              "n_queries": N_QUERIES, **C.bench_meta(cfg), "rows": rows}
     out = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "BENCH_serve.json"))
     with open(out, "w") as f:

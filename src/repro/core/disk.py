@@ -35,32 +35,90 @@ class IOStats:
         self.wall_ms += wall
 
 
-class DiskClusterStore:
-    """Embeddings laid out cluster-by-cluster (padded to cap) on disk."""
+def pack_blocks(embeddings, cluster_docs, dtype=np.float32):
+    """Materialize the (n, cap, dim) cluster-block tensor for a doc table.
 
-    def __init__(self, path, embeddings, cluster_docs, dtype=np.float32):
+    `embeddings` may be any row-indexable (D, dim) array (np.memmap is fine:
+    only member rows are read); `cluster_docs` is a (n, cap) padded table —
+    pass a slice of the full table to pack one shard at a time.
+    """
+    cd = np.asarray(cluster_docs)
+    dim = embeddings.shape[1]
+    blocks = np.zeros(cd.shape + (dim,), dtype)
+    mask = cd >= 0
+    blocks[mask] = np.asarray(embeddings[cd[mask]], dtype)
+    return blocks
+
+
+def read_blocks_coalesced(mm, ids, out=None, out_offset=0):
+    """Copy blocks `mm[ids]` into `out`, coalescing runs of adjacent ids
+    into single contiguous memmap reads. Returns (out, n_runs) — one I/O op
+    per run, not per block."""
+    ids = np.asarray(ids, np.int64)
+    n = len(ids)
+    if out is None:
+        out = np.empty((n,) + mm.shape[1:], mm.dtype)
+    if n == 0:
+        return out, 0
+    brk = np.flatnonzero(np.diff(ids) != 1) + 1
+    bounds = np.concatenate([[0], brk, [n]])
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        out[out_offset + lo:out_offset + hi] = mm[ids[lo]:ids[lo] + (hi - lo)]
+    return out, len(bounds) - 1
+
+
+class DiskClusterStore:
+    """Embeddings laid out cluster-by-cluster (padded to cap) on disk.
+
+    Pack-time and read-time are split: `pack()` (or constructing with an
+    `embeddings` matrix) writes the block file once, offline; `open()`
+    reopens an existing file strictly read-only — no embedding matrix in
+    RAM, no rewrite. Serving paths should use `open()`.
+    """
+
+    def __init__(self, path, embeddings=None, cluster_docs=None,
+                 dtype=np.float32, *, n_clusters=None, cap=None, dim=None):
         self.path = path
-        emb = np.asarray(embeddings, dtype)
-        cd = np.asarray(cluster_docs)
-        self.n_clusters, self.cap = cd.shape
-        self.dim = emb.shape[1]
-        self.dtype = dtype
-        blocks = np.zeros((self.n_clusters, self.cap, self.dim), dtype)
-        mask = cd >= 0
-        blocks[mask] = emb[cd[mask]]
-        blocks.tofile(path)
-        self.block_bytes = self.cap * self.dim * np.dtype(dtype).itemsize
-        self._mm = np.memmap(path, dtype=dtype, mode="r",
+        self.dtype = np.dtype(dtype)
+        if embeddings is not None:
+            cd = np.asarray(cluster_docs)
+            self.n_clusters, self.cap = cd.shape
+            self.dim = embeddings.shape[1]
+            pack_blocks(embeddings, cd, self.dtype).tofile(path)
+        else:
+            if n_clusters is None or cap is None or dim is None:
+                raise ValueError(
+                    "opening an existing store needs n_clusters/cap/dim")
+            self.n_clusters, self.cap, self.dim = n_clusters, cap, dim
+            expect = n_clusters * cap * dim * self.dtype.itemsize
+            actual = os.path.getsize(path)
+            if actual != expect:
+                raise ValueError(f"{path}: expected {expect} bytes for "
+                                 f"({n_clusters}, {cap}, {dim}) "
+                                 f"{self.dtype}, found {actual}")
+        self.block_bytes = self.cap * self.dim * self.dtype.itemsize
+        self._mm = np.memmap(path, dtype=self.dtype, mode="r",
                              shape=(self.n_clusters, self.cap, self.dim))
 
+    @classmethod
+    def pack(cls, path, embeddings, cluster_docs, dtype=np.float32):
+        """Write the block file from an embedding matrix (pack time)."""
+        return cls(path, embeddings, cluster_docs, dtype)
+
+    @classmethod
+    def open(cls, path, n_clusters, cap, dim, dtype=np.float32):
+        """Reopen an existing block file read-only (read time)."""
+        return cls(path, dtype=dtype, n_clusters=n_clusters, cap=cap, dim=dim)
+
     def fetch_clusters(self, cluster_ids, stats: IOStats = None):
-        """One block read per cluster. Returns (S, cap, dim)."""
+        """Read the given cluster blocks; runs of adjacent ids coalesce into
+        one contiguous read (one I/O op per run). Returns (S, cap, dim)."""
         t0 = time.perf_counter()
-        out = np.stack([np.array(self._mm[c]) for c in cluster_ids])
+        ids = np.asarray(cluster_ids, np.int64).reshape(-1)
+        out, n_runs = read_blocks_coalesced(self._mm, ids)
         wall = (time.perf_counter() - t0) * 1e3
         if stats is not None:
-            stats.add(len(cluster_ids), len(cluster_ids) * self.block_bytes,
-                      wall)
+            stats.add(n_runs, len(ids) * self.block_bytes, wall)
         return jnp.asarray(out)
 
 

@@ -45,6 +45,58 @@ def kmeans(rng, X, n_clusters, iters=15):
     return centroids, assign
 
 
+def _gather_rows(shards, offsets, idx):
+    """Gather global row indices from a list of (D_i, dim) shards."""
+    first = np.asarray(shards[0][:1])
+    out = np.empty((len(idx), first.shape[1]), first.dtype)
+    sid = np.searchsorted(offsets, idx, side="right") - 1
+    for i, (s, g) in enumerate(zip(sid, idx)):
+        out[i] = shards[s][g - offsets[s]]
+    return out
+
+
+def kmeans_shards(rng, shards, n_clusters, iters=15):
+    """Streaming Lloyd's over embedding shards — the offline analogue of
+    `kmeans` for corpora that never fit in device memory at once. `shards`
+    is a sequence of (D_i, dim) host arrays (slices of an np.memmap are
+    fine); one shard is device-resident at a time, and per-cluster sums /
+    counts accumulate on the host. Empty clusters are reseeded from random
+    corpus rows each iteration, like `kmeans`.
+
+    Returns (centroids (N, dim) device array, assignments (D,) int32).
+    """
+    sizes = [int(s.shape[0]) for s in shards]
+    D = sum(sizes)
+    offsets = np.cumsum([0] + sizes)
+    dim = int(shards[0].shape[1])
+    init = np.sort(np.asarray(
+        jax.random.choice(rng, D, (n_clusters,), replace=False)))
+    centroids = jnp.asarray(_gather_rows(shards, offsets, init))
+    for _ in range(iters):
+        sums = np.zeros((n_clusters, dim), np.float32)
+        counts = np.zeros((n_clusters,), np.float32)
+        for s in shards:
+            Xs = jnp.asarray(np.asarray(s))
+            a = _assign(Xs, centroids, n_clusters)
+            sums += np.asarray(jax.ops.segment_sum(
+                Xs, a, num_segments=n_clusters))
+            counts += np.asarray(jax.ops.segment_sum(
+                jnp.ones((Xs.shape[0],), Xs.dtype), a,
+                num_segments=n_clusters))
+        new_c = sums / np.maximum(counts, 1.0)[:, None]
+        rng, sub = jax.random.split(rng)      # unconditional: keep the
+        empty = counts < 0.5                  # key stream deterministic
+        if empty.any():
+            reseed_idx = np.asarray(jax.random.choice(sub, D, (n_clusters,)))
+            reseed = _gather_rows(shards, offsets, reseed_idx)
+            new_c = np.where(empty[:, None], reseed, new_c)
+        centroids = jnp.asarray(new_c.astype(np.float32))
+    assign = np.concatenate([
+        np.asarray(_assign(jnp.asarray(np.asarray(s)), centroids, n_clusters))
+        for s in shards])
+    return centroids, jnp.asarray(assign, dtype=jnp.int32)
+
+
 def build_cluster_table(assign, n_clusters, cap, X=None, centroids=None):
     """Padded (N, cap) doc-id table; overflow docs are reassigned to their
     next-nearest cluster with free space (host-side greedy, like balanced IVF).

@@ -1,0 +1,18 @@
+"""Persistent sharded index subsystem: offline build pipeline, versioned
+on-disk format, and an mmap loader that feeds the engine stores. See
+README.md in this directory for the manifest schema and shard layout."""
+
+from repro.index.builder import (
+    build_index_offline, embedding_shards, shard_ranges, write_index)
+from repro.index.format import (
+    FORMAT_VERSION, IndexChecksumError, IndexFormatError, file_sha256,
+    load_manifest, verify_files)
+from repro.index.reader import IndexReader
+from repro.index.sharded import ShardedDiskStore
+
+__all__ = [
+    "FORMAT_VERSION", "IndexChecksumError", "IndexFormatError",
+    "IndexReader", "ShardedDiskStore", "build_index_offline",
+    "embedding_shards", "file_sha256", "load_manifest", "shard_ranges",
+    "verify_files", "write_index",
+]

@@ -1,0 +1,198 @@
+"""Offline IndexBuilder pipeline: build once, serve many times.
+
+Two layers:
+
+  * `build_index_offline(cfg, rng, embeddings, ...)` — the expensive part of
+    `core.clusd.build_index`, restructured to stream: sharded Lloyd's k-means
+    (`core.kmeans.kmeans_shards`, one embedding shard device-resident at a
+    time), capacity-balanced cluster table, neighbor graph, sparse inverted
+    index, Stage-I bin table. Returns a `CluSDIndex` with `embeddings=None` —
+    the matrix itself never needs to be a device array, an np.memmap works.
+
+  * `write_index(out_dir, cfg, index, embeddings, ...)` — serialize any built
+    `CluSDIndex` (from this module or `core.clusd.build_index`) into the
+    versioned layout of `index/format.py`: per-index arrays as .npy, cluster
+    blocks packed shard-by-shard into raw per-shard .bin files, optional LSTM
+    selector weights via `repro.checkpoint`, optional PQ artifacts, and a
+    manifest with sha256 checksums over every file. The directory is staged
+    under `<out_dir>.tmp` and committed with an atomic rename.
+
+Read side: `index/reader.py`.
+"""
+
+import dataclasses
+import os
+import shutil
+import time
+
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.core import bins as bins_lib
+from repro.core import disk as disk_lib
+from repro.core import kmeans as km
+from repro.core import sparse as sparse_lib
+from repro.core.clusd import CluSDIndex
+from repro.index import format as fmt
+
+_ARRAY_DTYPES = {
+    "centroids": np.float32,
+    "cluster_docs": np.int32,
+    "doc_cluster": np.int32,
+    "neighbor_ids": np.int32,
+    "neighbor_sims": np.float32,
+    "bin_ids": np.int32,
+    "sparse_postings_docs": np.int32,
+    "sparse_postings_weights": np.float32,
+}
+
+
+def shard_ranges(n_clusters, n_shards):
+    """Even [lo, hi) cluster ranges; first shards absorb the remainder."""
+    n_shards = max(1, min(n_shards, n_clusters))
+    base, rem = divmod(n_clusters, n_shards)
+    ranges, lo = [], 0
+    for s in range(n_shards):
+        hi = lo + base + (1 if s < rem else 0)
+        ranges.append((lo, hi))
+        lo = hi
+    return ranges
+
+
+def embedding_shards(embeddings, shard_docs):
+    """Row-range views over the (memmap-able) embedding matrix."""
+    D = embeddings.shape[0]
+    shard_docs = max(1, int(shard_docs))
+    return [embeddings[lo:min(lo + shard_docs, D)]
+            for lo in range(0, D, shard_docs)]
+
+
+def build_index_offline(cfg, rng, embeddings, doc_terms, doc_weights, *,
+                        shard_docs=None, kmeans_iters=15):
+    """Sharded/minibatch offline build. `embeddings`: (D, dim) host array or
+    np.memmap — clustered shard-by-shard, never moved to device whole.
+    Returns a CluSDIndex with `embeddings=None` (blocks live on disk after
+    `write_index`)."""
+    D = int(embeddings.shape[0])
+    shard_docs = shard_docs or min(D, 1 << 16)
+    shards = embedding_shards(embeddings, shard_docs)
+    centroids, assign = km.kmeans_shards(rng, shards, cfg.n_clusters,
+                                         iters=kmeans_iters)
+    cluster_docs, doc_cluster = km.build_cluster_table(
+        assign, cfg.n_clusters, cfg.cluster_cap, embeddings, centroids)
+    m = min(cfg.n_neighbors, cfg.n_clusters - 1)
+    nb_ids, nb_sims = km.neighbor_graph(centroids, m)
+    sp = sparse_lib.SparseIndex.build(doc_terms, doc_weights, cfg.vocab,
+                                      cfg.max_postings)
+    return CluSDIndex(
+        centroids=centroids, cluster_docs=cluster_docs,
+        doc_cluster=doc_cluster, neighbor_ids=nb_ids, neighbor_sims=nb_sims,
+        embeddings=None, sparse_index=sp,
+        bin_ids=bins_lib.rank_bin_ids(cfg.bins, cfg.k_sparse))
+
+
+def _cluster_fill_stats(cluster_docs):
+    fill = (np.asarray(cluster_docs) >= 0).sum(axis=1)
+    return {"min": int(fill.min()), "max": int(fill.max()),
+            "mean": round(float(fill.mean()), 2),
+            "empty": int((fill == 0).sum())}
+
+
+def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
+                block_dtype=np.float32, extra=None):
+    """Serialize `index` + packed cluster blocks under `out_dir` (atomic:
+    staged in `<out_dir>.tmp`, committed by rename). Returns the manifest."""
+    t0 = time.perf_counter()
+    block_dtype = np.dtype(block_dtype)
+    cd = np.asarray(index.cluster_docs)
+    n_clusters, cap = cd.shape
+    dim = int(embeddings.shape[1])
+    out_dir = os.path.abspath(out_dir)
+    tmp = out_dir + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(os.path.join(tmp, "blocks"))
+
+    arrays = {
+        "centroids": index.centroids,
+        "cluster_docs": index.cluster_docs,
+        "doc_cluster": index.doc_cluster,
+        "neighbor_ids": index.neighbor_ids,
+        "neighbor_sims": index.neighbor_sims,
+        "bin_ids": index.bin_ids,
+        "sparse_postings_docs": index.sparse_index.postings_docs,
+        "sparse_postings_weights": index.sparse_index.postings_weights,
+    }
+    array_paths = {}
+    for name, arr in arrays.items():
+        rel = f"{name}.npy"
+        np.save(os.path.join(tmp, rel),
+                np.asarray(arr, _ARRAY_DTYPES[name]))
+        array_paths[name] = rel
+
+    # cluster blocks, packed one output shard at a time (bounded memory)
+    ranges = shard_ranges(n_clusters, n_shards)
+    block_shards = []
+    for s, (lo, hi) in enumerate(ranges):
+        rel = os.path.join("blocks", f"shard_{s:05d}.bin")
+        disk_lib.pack_blocks(embeddings, cd[lo:hi], block_dtype).tofile(
+            os.path.join(tmp, rel))
+        block_shards.append({"file": rel, "cluster_lo": lo, "cluster_hi": hi})
+
+    lstm_meta = None
+    if index.lstm_params is not None:
+        params = {k: np.asarray(v) for k, v in index.lstm_params.items()}
+        lstm_meta = {"dir": "lstm", "step": 0, "selector": "lstm",
+                     "feat_dim": int(params["wx"].shape[0]),
+                     "hidden": int(params["wh"].shape[0])}
+        save_checkpoint(os.path.join(tmp, "lstm"), 0, params,
+                        extra={k: lstm_meta[k]
+                               for k in ("selector", "feat_dim", "hidden")})
+
+    pq_meta = None
+    if index.quantizer is not None:
+        pq = index.quantizer
+        os.makedirs(os.path.join(tmp, "pq"))
+        pq_arrays = {"codebooks": pq.codebooks, "codes": pq.codes}
+        if pq.rotation is not None:
+            pq_arrays["rotation"] = pq.rotation
+        pq_paths = {}
+        for name, arr in pq_arrays.items():
+            rel = os.path.join("pq", f"{name}.npy")
+            np.save(os.path.join(tmp, rel), np.asarray(arr))
+            pq_paths[name] = rel
+        pq_meta = {"nsub": int(pq.nsub), "arrays": pq_paths}
+
+    files = fmt.scan_files(tmp)
+    manifest = {
+        "format_version": fmt.FORMAT_VERSION,
+        "kind": "clusd-index",
+        "config": dataclasses.asdict(cfg),
+        "geometry": {"n_docs": index.n_docs, "dim": dim,
+                     "n_clusters": n_clusters, "cap": cap,
+                     "block_dtype": block_dtype.name},
+        "arrays": array_paths,
+        "block_shards": block_shards,
+        "lstm": lstm_meta,
+        "pq": pq_meta,
+        "stats": {
+            "cluster_fill": _cluster_fill_stats(cd),
+            "truncated_postings": int(getattr(index.sparse_index,
+                                              "truncated_postings", 0)),
+            "pack_wall_s": round(time.perf_counter() - t0, 3),
+        },
+        "extra": extra or {},
+        "files": files,
+        "total_bytes": sum(e["bytes"] for e in files.values()),
+    }
+    fmt.write_manifest(tmp, manifest)
+    # commit: move any previous index aside first, so a crash in the window
+    # never leaves out_dir without a readable index
+    old = out_dir + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(out_dir):
+        os.rename(out_dir, old)
+    os.rename(tmp, out_dir)
+    shutil.rmtree(old, ignore_errors=True)
+    return manifest

@@ -1,0 +1,127 @@
+"""Versioned on-disk index layout: manifest schema + integrity checks.
+
+A built index is one directory:
+
+  <index_dir>/
+    manifest.json                   # schema below — single source of truth
+    centroids.npy ...               # small per-index arrays (np.load mmap-able)
+    blocks/shard_00000.bin ...      # packed cluster blocks, raw fixed-shape
+    lstm/step_0/...                 # optional selector weights (repro.checkpoint)
+    pq/codebooks.npy ...            # optional PQ artifacts
+
+Manifest schema (format_version 1):
+
+  format_version : int — readers hard-reject other versions
+  kind           : "clusd-index"
+  config         : dataclasses.asdict(CluSDConfig) used at build time
+  geometry       : {n_docs, dim, n_clusters, cap, block_dtype}
+  arrays         : {logical name -> relpath of .npy}
+  block_shards   : [{file, cluster_lo, cluster_hi}] — shard s owns clusters
+                   [cluster_lo, cluster_hi), blocks contiguous in cluster order
+  lstm           : {dir, step, selector, feat_dim, hidden} | null
+  pq             : {nsub, arrays: {...}} | null
+  stats          : build-time stats (cluster fill, truncated postings, ...)
+  extra          : caller metadata (e.g. synthetic-corpus recipe)
+  files          : {relpath -> {bytes, sha256}} for EVERY artifact file
+  total_bytes    : sum of artifact sizes
+
+Integrity levels (IndexReader.open(verify=...)):
+  "none" — trust the manifest
+  "size" — every listed file exists with the exact byte size (cheap; default)
+  "full" — additionally sha256 every file (reads everything once)
+"""
+
+import hashlib
+import json
+import os
+
+FORMAT_VERSION = 1
+MANIFEST_NAME = "manifest.json"
+VERIFY_LEVELS = ("none", "size", "full")
+
+
+class IndexFormatError(ValueError):
+    """Manifest missing/unreadable, wrong version, or malformed layout."""
+
+
+class IndexChecksumError(IndexFormatError):
+    """An artifact file is missing, truncated, or fails its checksum."""
+
+
+def file_sha256(path, chunk_bytes=1 << 20):
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(chunk_bytes)
+            if not chunk:
+                break
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def scan_files(root):
+    """{relpath: {bytes, sha256}} over every file under `root` except the
+    manifest itself. Called at pack time, after all artifacts are written."""
+    out = {}
+    for dirpath, _, names in os.walk(root):
+        for name in sorted(names):
+            full = os.path.join(dirpath, name)
+            rel = os.path.relpath(full, root)
+            if rel == MANIFEST_NAME:
+                continue
+            out[rel] = {"bytes": os.path.getsize(full),
+                        "sha256": file_sha256(full)}
+    return out
+
+
+def write_manifest(index_dir, manifest):
+    with open(os.path.join(index_dir, MANIFEST_NAME), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+
+
+def load_manifest(index_dir):
+    path = os.path.join(index_dir, MANIFEST_NAME)
+    if not os.path.isfile(path):
+        raise IndexFormatError(f"no {MANIFEST_NAME} in {index_dir}")
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise IndexFormatError(f"unreadable manifest in {index_dir}: {e}")
+    version = manifest.get("format_version")
+    if version != FORMAT_VERSION:
+        raise IndexFormatError(
+            f"index format version {version!r} unsupported "
+            f"(reader speaks {FORMAT_VERSION})")
+    if manifest.get("kind") != "clusd-index":
+        raise IndexFormatError(f"not a clusd-index: kind={manifest.get('kind')!r}")
+    return manifest
+
+
+def verify_files(index_dir, manifest, level="size"):
+    """Check every artifact listed in manifest['files'] at the given level.
+    Raises IndexChecksumError naming the first bad file."""
+    if level not in VERIFY_LEVELS:
+        raise ValueError(f"verify level {level!r} not in {VERIFY_LEVELS}")
+    if level == "none":
+        return
+    files = manifest.get("files") or {}
+    if not files:
+        raise IndexFormatError("manifest lists no artifact checksums "
+                               "('files' missing/empty) — cannot verify")
+    # every referenced artifact must be covered by the checksum map
+    referenced = list(manifest.get("arrays", {}).values()) + \
+        [s["file"] for s in manifest.get("block_shards", [])]
+    for rel in referenced:
+        if rel.replace("/", os.sep) not in files and rel not in files:
+            raise IndexFormatError(f"artifact {rel} has no checksum entry")
+    for rel, entry in files.items():
+        full = os.path.join(index_dir, rel)
+        if not os.path.isfile(full):
+            raise IndexChecksumError(f"missing artifact: {rel}")
+        size = os.path.getsize(full)
+        if size != entry["bytes"]:
+            raise IndexChecksumError(
+                f"{rel}: size {size} != manifest {entry['bytes']} (truncated?)")
+        if level == "full" and file_sha256(full) != entry["sha256"]:
+            raise IndexChecksumError(f"{rel}: sha256 mismatch (corrupted)")

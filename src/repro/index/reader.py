@@ -1,0 +1,122 @@
+"""IndexReader: open a built index directory and serve from it.
+
+Opening is cheap: the manifest is validated (format version always; file
+sizes by default; sha256 with verify="full"), per-index arrays are
+np.load-ed with mmap_mode="r", and cluster blocks stay in their per-shard
+files behind a `ShardedDiskStore`. The document embedding matrix is never
+materialized — `load_index()` returns a CluSDIndex with `embeddings=None`,
+and Step-3 dense scoring reads only selected cluster blocks.
+
+    reader = IndexReader.open("/path/to/index", verify="full")
+    cfg, index = reader.load_index()
+    engine = reader.engine(max_batch=32)        # RetrievalEngine, sharded I/O
+    ids, scores = engine.retrieve(q_dense, q_terms, q_weights)
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint
+from repro.configs.base import CluSDConfig
+from repro.core.clusd import CluSDIndex
+from repro.core.disk import IOStats
+from repro.core.lstm import lstm_init
+from repro.core.sparse import SparseIndex
+from repro.index import format as fmt
+from repro.index.sharded import ShardedDiskStore
+
+
+class IndexReader:
+    def __init__(self, index_dir, manifest):
+        self.index_dir = os.path.abspath(index_dir)
+        self.manifest = manifest
+        self.geometry = manifest["geometry"]
+
+    @classmethod
+    def open(cls, index_dir, verify="size"):
+        """Validate and open. verify: "none" | "size" (default) | "full"."""
+        manifest = fmt.load_manifest(index_dir)
+        fmt.verify_files(index_dir, manifest, level=verify)
+        return cls(index_dir, manifest)
+
+    # -- raw artifacts ------------------------------------------------------
+
+    def array(self, name):
+        """Mmap a per-index array by logical name (no copy)."""
+        rel = self.manifest["arrays"][name]
+        return np.load(os.path.join(self.index_dir, rel), mmap_mode="r")
+
+    def config(self) -> CluSDConfig:
+        d = dict(self.manifest["config"])
+        d["bins"] = tuple(d["bins"])
+        return CluSDConfig(**d)
+
+    def lstm_params(self):
+        meta = self.manifest["lstm"]
+        if meta is None:
+            return None
+        target = lstm_init(jax.random.key(0), meta["feat_dim"],
+                           meta["hidden"])
+        params, _ = restore_checkpoint(
+            os.path.join(self.index_dir, meta["dir"]), meta["step"], target)
+        return params
+
+    def quantizer(self):
+        meta = self.manifest["pq"]
+        if meta is None:
+            return None
+        from repro.core.quant import PQ
+        load = lambda rel: jnp.asarray(
+            np.load(os.path.join(self.index_dir, rel)))
+        rot = meta["arrays"].get("rotation")
+        return PQ(codebooks=load(meta["arrays"]["codebooks"]),
+                  codes=load(meta["arrays"]["codes"]),
+                  rotation=load(rot) if rot else None,
+                  nsub=meta["nsub"])
+
+    # -- engine-level objects ----------------------------------------------
+
+    def load_index(self):
+        """(cfg, CluSDIndex) with embeddings=None; small arrays go to device,
+        blocks stay on disk (serve via `open_store()` / `engine()`)."""
+        cfg = self.config()
+        sp = SparseIndex(
+            postings_docs=jnp.asarray(self.array("sparse_postings_docs")),
+            postings_weights=jnp.asarray(
+                self.array("sparse_postings_weights")),
+            n_docs=self.geometry["n_docs"])
+        index = CluSDIndex(
+            centroids=jnp.asarray(self.array("centroids")),
+            cluster_docs=jnp.asarray(self.array("cluster_docs")),
+            doc_cluster=jnp.asarray(self.array("doc_cluster")),
+            neighbor_ids=jnp.asarray(self.array("neighbor_ids")),
+            neighbor_sims=jnp.asarray(self.array("neighbor_sims")),
+            embeddings=None, sparse_index=sp,
+            lstm_params=self.lstm_params(), quantizer=self.quantizer(),
+            bin_ids=jnp.asarray(self.array("bin_ids")))
+        return cfg, index
+
+    def open_store(self, cluster_docs=None, stats: IOStats = None):
+        """ShardedDiskStore over the block shard files (mmap, read-only)."""
+        g = self.geometry
+        shards = self.manifest["block_shards"]
+        if cluster_docs is None:
+            cluster_docs = self.array("cluster_docs")
+        return ShardedDiskStore(
+            [os.path.join(self.index_dir, s["file"]) for s in shards],
+            [(s["cluster_lo"], s["cluster_hi"]) for s in shards],
+            g["cap"], g["dim"], cluster_docs,
+            dtype=np.dtype(g["block_dtype"]), stats=stats)
+
+    def engine(self, cfg=None, index=None, **engine_kw):
+        """RetrievalEngine serving this index through the sharded store."""
+        from repro.engine.server import RetrievalEngine
+        if index is None:
+            loaded_cfg, index = self.load_index()
+            cfg = cfg or loaded_cfg
+        cfg = cfg if cfg is not None else self.config()
+        store = self.open_store(cluster_docs=index.cluster_docs)
+        return RetrievalEngine(cfg, index, store=store, **engine_kw)

@@ -1,0 +1,93 @@
+"""ShardedDiskStore: engine ClusterStore backend over a built index's
+per-shard block files.
+
+Shard s memmaps `blocks/shard_s.bin`, owning clusters [lo_s, hi_s).
+`fetch_blocks` routes each requested cluster to its shard and coalesces
+runs of adjacent cluster ids *within* a shard into single contiguous
+memmap reads — `IOStats.n_ops` counts runs, not blocks, matching the
+coalesced `DiskClusterStore.fetch_clusters`. Thread-safe stats so the
+engine's background prefetcher can share the store with serving.
+
+Plugs into `repro.engine` exactly like `DiskStore` (is_host backend):
+selection runs batched on device; the pipeline fetches deduplicated,
+sorted unique cluster ids — which is what makes run coalescing pay off.
+"""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.disk import IOStats, read_blocks_coalesced
+
+
+class ShardedDiskStore:
+    is_host = True
+
+    def __init__(self, shard_paths, shard_ranges, cap, dim, cluster_docs,
+                 dtype=np.float32, stats: IOStats = None):
+        """shard_paths[i] holds clusters [shard_ranges[i][0], shard_ranges[i][1])
+        as a raw (hi-lo, cap, dim) block tensor."""
+        if len(shard_paths) != len(shard_ranges) or not shard_paths:
+            raise ValueError("need one path per shard range")
+        self.dtype = np.dtype(dtype)
+        self.cap, self.dim = int(cap), int(dim)
+        self._lo = np.asarray([lo for lo, _ in shard_ranges], np.int64)
+        self._hi = np.asarray([hi for _, hi in shard_ranges], np.int64)
+        if (self._lo[0] != 0 or np.any(self._lo[1:] != self._hi[:-1])):
+            raise ValueError(f"shard ranges must tile [0, N): "
+                             f"{list(zip(self._lo, self._hi))}")
+        self.n_clusters = int(self._hi[-1])
+        self._mms = [
+            np.memmap(p, dtype=self.dtype, mode="r",
+                      shape=(int(hi - lo), self.cap, self.dim))
+            for p, (lo, hi) in zip(shard_paths, shard_ranges)]
+        self.cluster_docs = jnp.asarray(cluster_docs)
+        self.cluster_docs_np = np.asarray(cluster_docs)
+        self.block_bytes = self.cap * self.dim * self.dtype.itemsize
+        self.stats = stats if stats is not None else IOStats()
+        self._lock = threading.Lock()
+
+    @property
+    def n_shards(self):
+        return len(self._mms)
+
+    def fetch_blocks(self, cluster_ids):
+        """1-D host sequence of cluster ids -> (vecs, docs, valid)."""
+        ids = np.asarray(cluster_ids, np.int64).reshape(-1)
+        docs = self.cluster_docs_np[ids]
+        valid = docs >= 0
+        n = len(ids)
+        if n == 0:
+            return (np.zeros((0, self.cap, self.dim), self.dtype),
+                    docs, valid)
+        t0 = time.perf_counter()
+        out = np.empty((n, self.cap, self.dim), self.dtype)
+        sid = np.searchsorted(self._hi, ids, side="right")
+        # split at shard changes OR non-adjacent ids; coalesce inside a run
+        brk = np.flatnonzero((np.diff(ids) != 1) | (np.diff(sid) != 0)) + 1
+        bounds = np.concatenate([[0], brk, [n]])
+        n_ops = 0
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            s = int(sid[lo])
+            local = ids[lo:hi] - self._lo[s]
+            _, runs = read_blocks_coalesced(self._mms[s], local, out,
+                                            out_offset=int(lo))
+            n_ops += runs
+        wall = (time.perf_counter() - t0) * 1e3
+        with self._lock:
+            self.stats.add(n_ops, n * self.block_bytes, wall)
+        return out, docs, valid
+
+    def fetch_clusters(self, cluster_ids, stats: IOStats = None):
+        """DiskClusterStore-compatible view: blocks only, optional extra
+        stats sink (the store's own IOStats always accumulates)."""
+        t0 = time.perf_counter()
+        before = (self.stats.n_ops, self.stats.bytes)
+        vecs, _, _ = self.fetch_blocks(cluster_ids)
+        if stats is not None:
+            stats.add(self.stats.n_ops - before[0],
+                      self.stats.bytes - before[1],
+                      (time.perf_counter() - t0) * 1e3)
+        return jnp.asarray(vecs)

@@ -1,0 +1,110 @@
+"""Offline index build CLI: cluster, pack, and serialize once — then serve
+from the built directory (`repro.launch.serve --index-dir`) without ever
+rebuilding or materializing the embedding matrix at load time.
+
+  PYTHONPATH=src python -m repro.launch.build_index --out /tmp/idx \
+      --docs 20000 --clusters 256 --shards 8 --train-queries 512
+
+Pipeline (repro/index/builder.py): sharded Lloyd's k-means over embedding
+shards -> capacity-balanced cluster table -> neighbor graph -> sparse
+inverted index -> optional LSTM selector training (labels need the full
+embeddings; that is fine offline) -> optional PQ codebooks -> per-shard
+cluster-block files + versioned manifest with checksums.
+"""
+
+import argparse
+import dataclasses
+import math
+import time
+
+import jax
+import numpy as np
+
+from repro import index as index_lib
+from repro.configs import get_config
+from repro.core import train_lstm as tl
+from repro.data import synth_corpus, synth_queries
+
+
+def build_cfg(args):
+    k_sparse = max(32, min(512, args.docs // 4))
+    bins = tuple(b for b in (10, 25, 50, 100, 200) if b < k_sparse) + (k_sparse,)
+    return dataclasses.replace(
+        get_config("clusd-msmarco", "smoke"),
+        n_docs=args.docs, dim=args.dim, n_clusters=args.clusters,
+        vocab=args.vocab, k_sparse=k_sparse, bins=bins,
+        n_candidates=min(32, args.clusters), max_selected=16,
+        k_final=min(256, args.docs),
+        train_queries=args.train_queries, epochs=args.epochs)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True, help="index output directory")
+    ap.add_argument("--docs", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--clusters", type=int, default=256)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--shards", type=int, default=4,
+                    help="block shard files (and k-means embedding shards)")
+    ap.add_argument("--train-queries", type=int, default=512,
+                    help="0 skips LSTM selector training")
+    ap.add_argument("--epochs", type=int, default=40)
+    ap.add_argument("--pq-nsub", type=int, default=0,
+                    help="also train PQ codebooks with this many subspaces")
+    ap.add_argument("--kmeans-iters", type=int, default=15)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = build_cfg(args)
+    t0 = time.perf_counter()
+    print(f"corpus: {cfg.n_docs} docs x {cfg.dim} dim ...", flush=True)
+    corpus = synth_corpus(args.seed, cfg.n_docs, cfg.dim, cfg.vocab)
+    emb = np.asarray(corpus.embeddings)
+
+    shard_docs = math.ceil(cfg.n_docs / max(1, args.shards))
+    print(f"clustering: {cfg.n_clusters} clusters over "
+          f"{args.shards} embedding shard(s) ...", flush=True)
+    index = index_lib.build_index_offline(
+        cfg, jax.random.key(args.seed), emb, corpus.doc_terms,
+        corpus.doc_weights, shard_docs=shard_docs,
+        kmeans_iters=args.kmeans_iters)
+
+    if args.train_queries > 0:
+        print(f"training LSTM selector on {args.train_queries} queries ...",
+              flush=True)
+        # labels need full dense retrieval — offline-only embedding use
+        index.embeddings = corpus.embeddings
+        tq = synth_queries(args.seed + 1, corpus, args.train_queries)
+        _, feats, labels = tl.make_labels(cfg, index, tq.q_dense, tq.q_terms,
+                                          tq.q_weights)
+        index.lstm_params, hist = tl.train_selector(
+            cfg, jax.random.key(args.seed + 2), np.asarray(feats),
+            np.asarray(labels))
+        print(f"  loss {hist[0]:.4f} -> {hist[-1]:.4f}", flush=True)
+        index.embeddings = None
+
+    if args.pq_nsub > 0:
+        from repro.core import quant as quant_lib
+        print(f"training PQ codebooks (nsub={args.pq_nsub}) ...", flush=True)
+        index.quantizer = quant_lib.train_pq(
+            jax.random.key(args.seed + 3), corpus.embeddings, args.pq_nsub)
+
+    manifest = index_lib.write_index(
+        args.out, cfg, index, emb, n_shards=args.shards,
+        extra={"corpus": {"kind": "synthetic", "seed": args.seed,
+                          "n_docs": cfg.n_docs, "dim": cfg.dim,
+                          "vocab": cfg.vocab}})
+    wall = time.perf_counter() - t0
+    g = manifest["geometry"]
+    print(f"wrote {args.out}: {manifest['total_bytes'] / 2**20:.1f} MiB, "
+          f"{len(manifest['block_shards'])} block shard(s), "
+          f"N={g['n_clusters']} cap={g['cap']} dim={g['dim']}, "
+          f"lstm={'yes' if manifest['lstm'] else 'no'}, "
+          f"pq={'yes' if manifest['pq'] else 'no'}, "
+          f"build {wall:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

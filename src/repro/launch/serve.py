@@ -12,9 +12,18 @@ pipeline (engine/pipeline.py) behind a pluggable ClusterStore backend:
 
 Reports latency percentiles and quality vs the full-retrieval oracle.
 
+With --index-dir, the build step is skipped entirely: the engine serves a
+persistent index built by `python -m repro.launch.build_index` — the
+manifest is validated, arrays are mmapped, and cluster blocks are read
+from the per-shard files through a `ShardedDiskStore` (the embedding
+matrix is never materialized). --check-parity additionally replays the
+queries through the in-memory pipeline and exits non-zero on mismatch.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --docs 20000 --queries 256 \
       [--ondisk] [--cache-blocks 512] [--no-prefetch]
+  PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/idx \
+      --queries 64 [--verify full] [--check-parity]
 """
 
 import argparse
@@ -34,6 +43,66 @@ from repro.data import mrr_at, recall_at, synth_corpus, synth_queries
 from repro.engine import DiskStore, RetrievalEngine
 
 
+def serve_from_index(args):
+    """Serve a persistent index built by repro.launch.build_index."""
+    from repro import index as index_lib
+    from repro.engine import InMemoryStore, pipeline as pipe_lib
+
+    t0 = time.perf_counter()
+    reader = index_lib.IndexReader.open(args.index_dir, verify=args.verify)
+    cfg, index = reader.load_index()
+    open_ms = (time.perf_counter() - t0) * 1e3
+    meta = reader.manifest.get("extra", {}).get("corpus")
+    if meta is None or meta.get("kind") != "synthetic":
+        raise SystemExit("index lacks synthetic-corpus metadata; cannot "
+                         "regenerate queries for quality evaluation")
+    corpus = synth_corpus(meta["seed"], meta["n_docs"], meta["dim"],
+                          meta["vocab"])
+    test_q = synth_queries(9, corpus, args.queries)
+
+    with reader.engine(cfg=cfg, index=index, max_batch=args.batch,
+                       cache_capacity=args.cache_blocks,
+                       prefetch=not args.no_prefetch) as engine:
+        t1 = time.perf_counter()
+        first_ids, _ = engine.retrieve(
+            test_q.q_dense[:args.batch], test_q.q_terms[:args.batch],
+            test_q.q_weights[:args.batch])
+        first_ms = (time.perf_counter() - t1) * 1e3
+        all_ids = [np.asarray(first_ids)]
+        for i in range(args.batch, args.queries, args.batch):
+            ids, _ = engine.retrieve(test_q.q_dense[i:i + args.batch],
+                                     test_q.q_terms[i:i + args.batch],
+                                     test_q.q_weights[i:i + args.batch])
+            all_ids.append(np.asarray(ids))
+    ids = np.concatenate(all_ids)
+    st = engine.stats()
+    io, cache = st.get("io", {}), st.get("cache", {})
+    print(f"index: {reader.index_dir} "
+          f"({reader.manifest['total_bytes'] / 2**20:.1f} MiB, "
+          f"{len(reader.manifest['block_shards'])} shard(s), verify={args.verify})")
+    print(f"cold open {open_ms:.0f} ms, first batch {first_ms:.0f} ms "
+          f"(incl. compile)")
+    print(f"served {args.queries} queries: "
+          f"MRR@10={mrr_at(ids, test_q.rel_doc):.4f}, "
+          f"{io.get('n_ops', 0)} I/O ops, "
+          f"{io.get('bytes', 0) / 2**20:.1f} MiB read, "
+          f"cache hit rate {cache.get('hit_rate', 0.0):.2f}")
+
+    if args.check_parity:
+        mem = InMemoryStore(corpus.embeddings, index.cluster_docs)
+        ref_ids, _, _ = pipe_lib.retrieve(
+            cfg, index, mem, test_q.q_dense[:args.queries],
+            test_q.q_terms[:args.queries], test_q.q_weights[:args.queries])
+        if not np.array_equal(ids, np.asarray(ref_ids)):
+            bad = int((ids != np.asarray(ref_ids)).any(axis=1).sum())
+            print(f"PARITY FAIL: {bad}/{args.queries} queries differ from "
+                  f"the in-memory pipeline")
+            return 1
+        print("parity OK: sharded on-disk serving matches the in-memory "
+              "pipeline exactly")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=20000)
@@ -45,7 +114,19 @@ def main():
     ap.add_argument("--ondisk", action="store_true")
     ap.add_argument("--cache-blocks", type=int, default=512)
     ap.add_argument("--no-prefetch", action="store_true")
+    ap.add_argument("--index-dir", default=None,
+                    help="serve a built index (repro.launch.build_index) "
+                         "instead of rebuilding in memory")
+    ap.add_argument("--verify", default="size",
+                    choices=("none", "size", "full"),
+                    help="built-index integrity check level at open")
+    ap.add_argument("--check-parity", action="store_true",
+                    help="with --index-dir: compare against the in-memory "
+                         "pipeline, exit non-zero on mismatch")
     args = ap.parse_args()
+
+    if args.index_dir:
+        return serve_from_index(args)
 
     cfg = dataclasses.replace(
         get_config("clusd-msmarco", "smoke"),
@@ -88,8 +169,9 @@ def main():
 
     if args.ondisk:
         tmp = tempfile.mkdtemp()
-        blocks = dk.DiskClusterStore(os.path.join(tmp, "blocks.bin"),
-                                     corpus.embeddings, index.cluster_docs)
+        blocks = dk.DiskClusterStore.pack(os.path.join(tmp, "blocks.bin"),
+                                          corpus.embeddings,
+                                          index.cluster_docs)
         nq = min(64, args.queries)
         with RetrievalEngine(cfg, index,
                              store=DiskStore(blocks, index.cluster_docs),

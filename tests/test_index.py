@@ -1,0 +1,270 @@
+"""Persistent index subsystem tests: build -> write -> reopen round trip,
+manifest/checksum rejection of corruption, mmap loading without embedding
+materialization, ShardedDiskStore routing + run coalescing, the
+DiskClusterStore pack/open split, and the offline sharded build pipeline."""
+
+import dataclasses
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import index as index_lib
+from repro.configs import get_config
+from repro.core import clusd as cl
+from repro.core import disk as dk
+from repro.core import train_lstm as tl
+from repro.data import synth_corpus, synth_queries
+from repro.engine import InMemoryStore, RetrievalEngine, pipeline
+
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        get_config("clusd-msmarco", "smoke"),
+        n_docs=512, dim=16, n_clusters=32, vocab=256, max_postings=128,
+        k_sparse=64, bins=(5, 15, 30, 64), n_candidates=8, max_selected=4,
+        n_neighbors=8, u_bins=4, k_final=32, train_queries=24, epochs=2)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """In-memory index (trained selector) + its serialized on-disk form."""
+    cfg = _tiny_cfg()
+    corpus = synth_corpus(0, cfg.n_docs, cfg.dim, cfg.vocab)
+    index = cl.build_index(cfg, jax.random.key(0), corpus.embeddings,
+                           corpus.doc_terms, corpus.doc_weights)
+    tq = synth_queries(1, corpus, cfg.train_queries)
+    _, feats, labels = tl.make_labels(cfg, index, tq.q_dense, tq.q_terms,
+                                      tq.q_weights)
+    index.lstm_params, _ = tl.train_selector(cfg, jax.random.key(2),
+                                             np.asarray(feats),
+                                             np.asarray(labels))
+    out = str(tmp_path_factory.mktemp("idx") / "index")
+    manifest = index_lib.write_index(out, cfg, index,
+                                     np.asarray(corpus.embeddings),
+                                     n_shards=3)
+    qs = synth_queries(7, corpus, 10)
+    return cfg, corpus, index, out, manifest, qs
+
+
+# ---------------------------------------------------------------------------
+# round trip
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_arrays_config_and_lstm(built):
+    cfg, _, index, out, manifest, _ = built
+    reader = index_lib.IndexReader.open(out, verify="full")
+    lcfg, lindex = reader.load_index()
+    assert lcfg == cfg
+    assert lindex.embeddings is None
+    for name, ref in (("centroids", index.centroids),
+                      ("cluster_docs", index.cluster_docs),
+                      ("doc_cluster", index.doc_cluster),
+                      ("neighbor_ids", index.neighbor_ids),
+                      ("bin_ids", index.bin_ids)):
+        np.testing.assert_array_equal(np.asarray(getattr(lindex, name)),
+                                      np.asarray(ref), err_msg=name)
+    np.testing.assert_allclose(
+        np.asarray(lindex.sparse_index.postings_weights),
+        np.asarray(index.sparse_index.postings_weights))
+    for k, v in index.lstm_params.items():
+        np.testing.assert_array_equal(np.asarray(lindex.lstm_params[k]),
+                                      np.asarray(v), err_msg=k)
+    # manifest accounting covers every artifact
+    assert manifest["total_bytes"] == sum(
+        e["bytes"] for e in manifest["files"].values())
+    assert len(manifest["block_shards"]) == 3
+
+
+def test_mmap_loading_no_copy(built):
+    _, _, _, out, _, _ = built
+    reader = index_lib.IndexReader.open(out)
+    arr = reader.array("centroids")
+    assert isinstance(arr, np.memmap)
+    store = reader.open_store()
+    assert all(isinstance(mm, np.memmap) for mm in store._mms)
+    assert store.n_shards == 3
+
+
+def test_built_index_serving_parity(built):
+    """Acceptance: built index -> IndexReader -> ShardedDiskStore returns the
+    same fused top-k as the in-memory pipeline, direct and via the engine."""
+    cfg, corpus, _, out, _, qs = built
+    reader = index_lib.IndexReader.open(out, verify="full")
+    lcfg, lindex = reader.load_index()
+    mem = InMemoryStore(corpus.embeddings, lindex.cluster_docs)
+    ref_ids, ref_scores, _ = pipeline.retrieve(
+        lcfg, lindex, mem, qs.q_dense, qs.q_terms, qs.q_weights)
+
+    store = reader.open_store(cluster_docs=lindex.cluster_docs)
+    ids, scores, _ = pipeline.retrieve(lcfg, lindex, store, qs.q_dense,
+                                       qs.q_terms, qs.q_weights)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ref_ids))
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(ref_scores),
+                               rtol=1e-5, atol=1e-5)
+    assert store.stats.n_ops > 0
+    assert store.stats.bytes % store.block_bytes == 0
+    # coalescing: ops count runs, never more than blocks read
+    assert store.stats.n_ops <= store.stats.bytes // store.block_bytes
+
+    with reader.engine(cfg=lcfg, index=lindex, max_batch=8) as eng:
+        eids, _ = eng.retrieve(qs.q_dense, qs.q_terms, qs.q_weights)
+    np.testing.assert_array_equal(np.asarray(eids), np.asarray(ref_ids))
+    assert eng.stats()["io"]["n_ops"] > 0
+
+
+# ---------------------------------------------------------------------------
+# format validation
+# ---------------------------------------------------------------------------
+
+def _copy_index(out, tmp_path, name):
+    dst = str(tmp_path / name)
+    shutil.copytree(out, dst)
+    return dst
+
+
+def test_wrong_format_version_rejected(built, tmp_path):
+    _, _, _, out, _, _ = built
+    bad = _copy_index(out, tmp_path, "badver")
+    mpath = os.path.join(bad, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["format_version"] = index_lib.FORMAT_VERSION + 1
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(index_lib.IndexFormatError, match="version"):
+        index_lib.IndexReader.open(bad)
+
+
+def test_stripped_checksum_map_fails_closed(built, tmp_path):
+    """verify != "none" must refuse a manifest without checksums rather
+    than silently verifying nothing."""
+    _, _, _, out, _, _ = built
+    bad = _copy_index(out, tmp_path, "nofiles")
+    mpath = os.path.join(bad, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["files"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(index_lib.IndexFormatError, match="checksum"):
+        index_lib.IndexReader.open(bad, verify="full")
+    index_lib.IndexReader.open(bad, verify="none")      # explicit opt-out
+
+
+def test_overwrite_in_place_keeps_index_readable(built, tmp_path):
+    cfg, corpus, index, _, _, _ = built
+    out = str(tmp_path / "index")
+    for _ in range(2):      # second write exercises the move-aside commit
+        index_lib.write_index(out, cfg, index,
+                              np.asarray(corpus.embeddings), n_shards=2)
+        index_lib.IndexReader.open(out, verify="full")
+    assert not os.path.exists(out + ".old")
+    assert not os.path.exists(out + ".tmp")
+
+
+def test_corrupted_shard_rejected(built, tmp_path):
+    _, _, _, out, _, _ = built
+    bad = _copy_index(out, tmp_path, "corrupt")
+    shard = os.path.join(bad, "blocks", "shard_00001.bin")
+    with open(shard, "r+b") as f:
+        f.seek(128)
+        f.write(b"\xff" * 64)
+    # size-level check passes (same byte count) ...
+    index_lib.IndexReader.open(bad, verify="size")
+    # ... full checksum catches the flip
+    with pytest.raises(index_lib.IndexChecksumError, match="shard_00001"):
+        index_lib.IndexReader.open(bad, verify="full")
+
+
+def test_truncated_shard_rejected_at_size_level(built, tmp_path):
+    _, _, _, out, _, _ = built
+    bad = _copy_index(out, tmp_path, "trunc")
+    shard = os.path.join(bad, "blocks", "shard_00000.bin")
+    with open(shard, "r+b") as f:
+        f.truncate(os.path.getsize(shard) - 8)
+    with pytest.raises(index_lib.IndexChecksumError, match="truncated"):
+        index_lib.IndexReader.open(bad, verify="size")
+    missing = _copy_index(out, tmp_path, "missing")
+    os.remove(os.path.join(missing, "centroids.npy"))
+    with pytest.raises(index_lib.IndexChecksumError, match="missing"):
+        index_lib.IndexReader.open(missing, verify="size")
+
+
+# ---------------------------------------------------------------------------
+# sharded store routing + coalescing
+# ---------------------------------------------------------------------------
+
+def test_sharded_store_routes_and_coalesces(built):
+    cfg, corpus, index, out, manifest, _ = built
+    reader = index_lib.IndexReader.open(out)
+    store = reader.open_store()
+    mem = InMemoryStore(corpus.embeddings, index.cluster_docs)
+    lo1 = manifest["block_shards"][1]["cluster_lo"]
+    # adjacent run inside shard 0, a run crossing into shard 1, a singleton
+    cids = np.asarray([2, 3, 4, lo1 - 1, lo1, 31])
+    vecs, docs, valid = store.fetch_blocks(cids)
+    vref, dref, varef = map(np.asarray, mem.fetch_blocks(jnp.asarray(cids)))
+    np.testing.assert_allclose(np.asarray(vecs), vref, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(docs, dref)
+    np.testing.assert_array_equal(valid, varef)
+    # runs: [2,3,4], [lo1-1], [lo1], [31] -> 4 ops for 6 blocks
+    assert store.stats.n_ops == 4
+    assert store.stats.bytes == 6 * store.block_bytes
+
+
+def test_disk_cluster_store_pack_open_split(built, tmp_path):
+    _, corpus, index, _, _, _ = built
+    path = str(tmp_path / "blocks.bin")
+    packed = dk.DiskClusterStore.pack(path, corpus.embeddings,
+                                      index.cluster_docs)
+    stamp = (os.path.getmtime(path), os.path.getsize(path))
+    reopened = dk.DiskClusterStore.open(path, packed.n_clusters, packed.cap,
+                                        packed.dim)
+    stats = dk.IOStats()
+    got = np.asarray(reopened.fetch_clusters([5, 6, 7, 20], stats))
+    np.testing.assert_array_equal(got,
+                                  np.asarray(packed.fetch_clusters([5, 6, 7, 20])))
+    # reopening + reading never rewrites the block file
+    assert (os.path.getmtime(path), os.path.getsize(path)) == stamp
+    # [5,6,7] coalesce into one read; [20] is a second
+    assert stats.n_ops == 2 and stats.bytes == 4 * reopened.block_bytes
+    with pytest.raises(ValueError, match="expected"):
+        dk.DiskClusterStore.open(path, packed.n_clusters + 1, packed.cap,
+                                 packed.dim)
+    with pytest.raises(ValueError, match="n_clusters"):
+        dk.DiskClusterStore(path)
+
+
+# ---------------------------------------------------------------------------
+# offline sharded build
+# ---------------------------------------------------------------------------
+
+def test_offline_sharded_build_deterministic_and_valid():
+    cfg = _tiny_cfg()
+    corpus = synth_corpus(3, cfg.n_docs, cfg.dim, cfg.vocab)
+    emb = np.asarray(corpus.embeddings)
+
+    def build():
+        return index_lib.build_index_offline(
+            cfg, jax.random.key(5), emb, corpus.doc_terms,
+            corpus.doc_weights, shard_docs=200, kmeans_iters=5)
+
+    a, b = build(), build()
+    assert a.embeddings is None
+    np.testing.assert_array_equal(np.asarray(a.cluster_docs),
+                                  np.asarray(b.cluster_docs))
+    np.testing.assert_allclose(np.asarray(a.centroids),
+                               np.asarray(b.centroids))
+    # valid partition: every doc exactly once, consistent doc_cluster
+    cd = np.asarray(a.cluster_docs)
+    members = cd[cd >= 0]
+    assert sorted(members.tolist()) == list(range(cfg.n_docs))
+    dc = np.asarray(a.doc_cluster)
+    for c in range(cfg.n_clusters):
+        for d in cd[c][cd[c] >= 0]:
+            assert dc[d] == c

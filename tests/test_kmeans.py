@@ -1,0 +1,113 @@
+"""Coverage for core/kmeans.py: capacity-balanced cluster-table overflow
+reassignment (nearest-with-space and round-robin paths), empty-cluster
+reseeding in Lloyd's, determinism under a fixed seed, and the streaming
+sharded k-means used by the offline index builder."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kmeans as km
+
+
+def _check_partition(table, doc_cluster, n_docs, cap):
+    """Every doc placed exactly once, no cluster over cap, table/doc_cluster
+    consistent."""
+    table = np.asarray(table)
+    dc = np.asarray(doc_cluster)
+    members = table[table >= 0]
+    assert sorted(members.tolist()) == list(range(n_docs)), \
+        "docs must appear exactly once"
+    assert ((table >= 0).sum(axis=1) <= cap).all()
+    for c in range(table.shape[0]):
+        for d in table[c][table[c] >= 0]:
+            assert dc[d] == c
+
+
+def test_build_cluster_table_no_overflow():
+    assign = jnp.asarray([0, 0, 1, 1, 2, 2], jnp.int32)
+    table, dc = km.build_cluster_table(assign, 3, cap=4)
+    _check_partition(table, dc, 6, 4)
+    np.testing.assert_array_equal(np.asarray(dc), np.asarray(assign))
+
+
+def test_build_cluster_table_overflow_nearest_with_space():
+    """Overflow docs go to their next-nearest centroid that has room."""
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((12, 4)).astype(np.float32)
+    centroids = np.stack([X[:8].mean(0), X[8:].mean(0),
+                          10.0 + rng.standard_normal(4).astype(np.float32)])
+    assign = jnp.asarray([0] * 10 + [1] * 2, jnp.int32)   # cluster 0 over cap
+    table, dc = km.build_cluster_table(assign, 3, cap=6, X=X,
+                                       centroids=centroids)
+    _check_partition(table, dc, 12, 6)
+    dc = np.asarray(dc)
+    # first 6 stayed in 0; the 4 overflow docs were re-homed
+    assert (dc[:6] == 0).all()
+    moved = dc[6:10]
+    assert (moved != 0).all()
+    # the far-away centroid 2 only receives docs when 1 has no room; with
+    # cap 6 cluster 1 had 4 free slots for 4 overflow docs
+    assert (moved == 1).all()
+
+
+def test_build_cluster_table_overflow_round_robin_without_geometry():
+    assign = jnp.asarray([0] * 7 + [1], jnp.int32)
+    table, dc = km.build_cluster_table(assign, 4, cap=3)
+    _check_partition(table, dc, 8, 3)
+
+
+def test_build_cluster_table_deterministic():
+    rng = np.random.default_rng(1)
+    X = rng.standard_normal((64, 8)).astype(np.float32)
+    cent, assign = km.kmeans(jax.random.key(3), jnp.asarray(X), 8, iters=4)
+    t1, d1 = km.build_cluster_table(assign, 8, cap=16, X=X, centroids=cent)
+    t2, d2 = km.build_cluster_table(assign, 8, cap=16, X=X, centroids=cent)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    _check_partition(t1, d1, 64, 16)
+
+
+def test_build_cluster_table_total_capacity_exceeded():
+    assign = jnp.zeros((10,), jnp.int32)
+    X = np.random.default_rng(2).standard_normal((10, 4)).astype(np.float32)
+    C = np.zeros((2, 4), np.float32)
+    with pytest.raises(RuntimeError, match="capacity"):
+        km.build_cluster_table(assign, 2, cap=4, X=X, centroids=C)
+
+
+def test_kmeans_reseeds_empty_clusters():
+    """More clusters than distinct points: empties get reseeded from data,
+    centroids stay finite, assignments stay in range, runs are
+    deterministic under a fixed key."""
+    base = np.random.default_rng(4).standard_normal((4, 8)).astype(np.float32)
+    X = jnp.asarray(np.repeat(base, 8, axis=0))     # 32 docs, 4 distinct
+    c1, a1 = km.kmeans(jax.random.key(11), X, 16, iters=6)
+    c2, a2 = km.kmeans(jax.random.key(11), X, 16, iters=6)
+    assert np.isfinite(np.asarray(c1)).all()
+    a1 = np.asarray(a1)
+    assert ((a1 >= 0) & (a1 < 16)).all()
+    np.testing.assert_array_equal(a1, np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2))
+
+
+def test_kmeans_shards_matches_partition_quality():
+    """Streaming sharded Lloyd's produces a valid, deterministic clustering
+    whose objective is in the same ballpark as single-shot kmeans."""
+    rng = np.random.default_rng(5)
+    X = rng.standard_normal((256, 8)).astype(np.float32)
+    shards = [X[:100], X[100:180], X[180:]]
+    c1, a1 = km.kmeans_shards(jax.random.key(6), shards, 8, iters=6)
+    c2, a2 = km.kmeans_shards(jax.random.key(6), shards, 8, iters=6)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2))
+    a1 = np.asarray(a1)
+    assert a1.shape == (256,) and ((a1 >= 0) & (a1 < 8)).all()
+
+    def objective(C, a):
+        C = np.asarray(C)
+        return float(((X - C[np.asarray(a)]) ** 2).sum())
+
+    cf, af = km.kmeans(jax.random.key(6), jnp.asarray(X), 8, iters=6)
+    assert objective(c1, a1) <= 2.0 * objective(cf, af)
