@@ -1,18 +1,26 @@
-"""Index build/serve-split benchmark: offline build cost vs cold-open cost.
+"""Index build/serve-split benchmark: offline build cost vs cold-open cost,
+for both on-disk formats.
 
 Measures what the persistent index subsystem buys at serve time — the seed
 rebuilt clusters + packed blocks in memory on every process start; a built
 index opens in milliseconds (manifest + mmap) and answers its first query
-without ever materializing the embedding matrix.
+without ever materializing the embedding matrix. The v2 (PQ code shard)
+build additionally runs off an np.memmap staging of the corpus — the
+corpus>RAM path — and its size/quality are compared against v1.
 
 Writes BENCH_index.json at the repo root (stamped with git SHA + config so
 the trajectory is comparable across PRs):
-  build_wall_s                  offline pipeline + pack + checksum time
-  index_bytes / n_block_shards  on-disk footprint
+  build_wall_s                  offline pipeline + pack + checksum time (v1)
+  index_bytes / n_block_shards  v1 on-disk footprint
   cold_open_ms                  manifest validate + mmap + store construction
   cold_open_to_first_query_ms   ... + engine + first batch (incl. jit)
   steady_batch_ms               second batch on the warm engine
   io                            block I/O ops/bytes for the serve phase
+  max_format_version            newest format this repo writes (regression
+                                gate: size growth needs a version bump)
+  pq                            the v2 build: index_bytes, size_ratio_vs_v1
+                                (acceptance: >= 4x), MRR@10 + delta vs the
+                                float32 serve, code-byte I/O
 
 Standalone: PYTHONPATH=src python -m benchmarks.build_index
 """
@@ -36,6 +44,8 @@ N_DOCS = 20_000          # matches BENCH_serve.json's corpus size
 N_SHARDS = 8
 N_QUERIES = 64
 BATCH = 32
+PQ_NSUB = 12             # 48-dim corpus -> 4-dim subspaces, 16x block shrink
+PQ_ROTATE = True         # OPQ-lite rotation: measured MRR delta ~0.004
 
 
 def run():
@@ -83,6 +93,38 @@ def run():
     engine.close()
     st = engine.stats()
     ids = np.concatenate([np.asarray(ids1), np.asarray(ids2)])
+    mrr_v1 = round(mrr_at(ids, qs.rel_doc[:2 * BATCH]), 4)
+
+    # ---- v2 PQ build from an np.memmap source (corpus > RAM path) ------
+    staged = os.path.join(tmp, "embeddings.bin")
+    emb.astype(np.float32).tofile(staged)
+    emb_mm = np.memmap(staged, dtype=np.float32, mode="r", shape=emb.shape)
+    t3 = time.perf_counter()
+    from repro.core import quant as quant_lib
+    index.quantizer = quant_lib.train_pq_stream(
+        jax.random.key(3), emb_mm, PQ_NSUB, rotate=PQ_ROTATE,
+        chunk_docs=4096)
+    pq_dir = os.path.join(tmp, "index_pq")
+    manifest_pq = index_lib.write_index(
+        pq_dir, cfg, index, emb_mm, n_shards=N_SHARDS,
+        format_version=index_lib.FORMAT_VERSION_PQ, chunk_docs=4096)
+    pq_build_s = time.perf_counter() - t3
+    reader_pq = index_lib.IndexReader.open(pq_dir, verify="size")
+    with reader_pq.engine(max_batch=BATCH,
+                          cache_capacity=cfg.n_clusters) as eng_pq:
+        ids_pq = []
+        for lo in range(0, 2 * BATCH, BATCH):
+            out_pq, _ = eng_pq.retrieve(qs.q_dense[lo:lo + BATCH],
+                                        qs.q_terms[lo:lo + BATCH],
+                                        qs.q_weights[lo:lo + BATCH])
+            ids_pq.append(np.asarray(out_pq))
+    st_pq = eng_pq.stats()
+    mrr_pq = round(mrr_at(np.concatenate(ids_pq), qs.rel_doc[:2 * BATCH]), 4)
+    size_ratio = manifest["total_bytes"] / manifest_pq["total_bytes"]
+    assert size_ratio >= 4.0, \
+        f"v2 PQ index only {size_ratio:.1f}x smaller than v1 (need >= 4x)"
+    assert abs(mrr_pq - mrr_v1) <= 0.02, \
+        f"v2 MRR@10 {mrr_pq} vs v1 {mrr_v1}: outside 0.02 tolerance"
 
     result = {
         "bench": "build_index", **C.bench_meta(cfg),
@@ -94,9 +136,22 @@ def run():
         "cold_open_ms": round(open_ms, 1),
         "cold_open_to_first_query_ms": round(first_query_ms, 1),
         "steady_batch_ms": round(steady_batch_ms, 1),
-        "MRR@10": round(mrr_at(ids, qs.rel_doc[:2 * BATCH]), 4),
+        "MRR@10": mrr_v1,
         "io": st.get("io", {}),
         "cluster_fill": manifest["stats"]["cluster_fill"],
+        "max_format_version": index_lib.FORMAT_VERSION_PQ,
+        "pq": {
+            "format_version": manifest_pq["format_version"],
+            "nsub": PQ_NSUB,
+            "build_wall_s": round(pq_build_s, 2),
+            "index_bytes": manifest_pq["total_bytes"],
+            "index_mb": round(manifest_pq["total_bytes"] / 2**20, 2),
+            "size_ratio_vs_v1": round(size_ratio, 2),
+            "MRR@10": mrr_pq,
+            "mrr_delta_vs_float32": round(abs(mrr_pq - mrr_v1), 4),
+            "memmap_source": True,
+            "io": st_pq.get("io", {}),
+        },
     }
     out = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "BENCH_index.json"))

@@ -1,0 +1,155 @@
+"""Benchmark regression guard: compare freshly generated BENCH_serve.json /
+BENCH_index.json against the committed baseline and fail on
+
+  * >20% serving latency regression (p50 batch ms, per backend row) or
+    >20% steady-QPS drop,
+  * index-size growth of >20% without a format-version bump
+    (`max_format_version` in BENCH_index.json is the bump signal),
+  * MRR@10 drift beyond 0.02 on any matched serve row (quality is part of
+    the contract, not just speed).
+
+Intended CI wiring (see .github/workflows/ci.yml) — the baseline comes
+from the PR's MERGE BASE, not HEAD, so a PR that restamps its own BENCH
+files cannot launder a regression past the gate:
+
+  BASE=$(git merge-base HEAD origin/main)   # or the PR base SHA
+  git show $BASE:BENCH_serve.json > /tmp/base_serve.json
+  git show $BASE:BENCH_index.json > /tmp/base_index.json
+  PYTHONPATH=src python -m benchmarks.serve_engine
+  PYTHONPATH=src python -m benchmarks.build_index
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --baseline-serve /tmp/base_serve.json \
+      --baseline-index /tmp/base_index.json
+
+Exit code 0 = within budget; 1 = regression (each violation printed).
+New rows/backends in the fresh files are informational only — the gate
+covers rows present in BOTH files, so adding a backend never fails the
+guard; geometry changes skip the latency/size gates (stamped config must
+match); a host stamp mismatch (baseline measured on different hardware)
+skips the latency gate but keeps the hardware-independent MRR and size
+gates active.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _rows_by_backend(serve):
+    return {r["backend"]: r for r in serve.get("rows", [])}
+
+
+def check(baseline_serve, fresh_serve, baseline_index, fresh_index,
+          tol=0.20, mrr_tol=0.02, size_tol=0.20):
+    """Returns a list of violation strings (empty = pass)."""
+    bad = []
+
+    def geometry(d):
+        return d.get("config", {})
+
+    def host(d):
+        return d.get("host")
+
+    if geometry(baseline_serve) != geometry(fresh_serve):
+        # different corpus/geometry: latency numbers aren't comparable;
+        # report nothing but say so loudly
+        print("note: serve geometry changed "
+              f"({geometry(baseline_serve)} -> {geometry(fresh_serve)}); "
+              "latency gate skipped")
+    elif host(baseline_serve) is not None and \
+            host(baseline_serve) != host(fresh_serve):
+        # absolute latencies measured on different hardware aren't
+        # comparable (dev laptop vs CI runner); quality gates below still
+        # apply because MRR is hardware-independent
+        print(f"note: serve host changed ({host(baseline_serve)} -> "
+              f"{host(fresh_serve)}); latency gate skipped, "
+              "MRR gate still active")
+        base_rows = _rows_by_backend(baseline_serve)
+        fresh_rows = _rows_by_backend(fresh_serve)
+        for name in sorted(set(base_rows) & set(fresh_rows)):
+            bm = base_rows[name].get("MRR@10")
+            fm = fresh_rows[name].get("MRR@10")
+            if bm is not None and fm is not None and fm < bm - mrr_tol:
+                bad.append(f"[serve:{name}] MRR@10 {fm:.4f} < "
+                           f"{bm:.4f} - {mrr_tol}")
+    else:
+        base_rows = _rows_by_backend(baseline_serve)
+        fresh_rows = _rows_by_backend(fresh_serve)
+        for name in sorted(set(base_rows) & set(fresh_rows)):
+            b, f = base_rows[name], fresh_rows[name]
+            bp50, fp50 = b.get("p50_batch_ms"), f.get("p50_batch_ms")
+            if bp50 and fp50 and fp50 > bp50 * (1 + tol):
+                bad.append(f"[serve:{name}] p50 {fp50:.2f}ms > "
+                           f"{bp50:.2f}ms * {1 + tol:.2f}")
+            bq, fq = b.get("qps_steady"), f.get("qps_steady")
+            if bq and fq and fq < bq / (1 + tol):
+                bad.append(f"[serve:{name}] steady QPS {fq:.1f} < "
+                           f"{bq:.1f} / {1 + tol:.2f}")
+            bm, fm = b.get("MRR@10"), f.get("MRR@10")
+            if bm is not None and fm is not None and fm < bm - mrr_tol:
+                bad.append(f"[serve:{name}] MRR@10 {fm:.4f} < "
+                           f"{bm:.4f} - {mrr_tol}")
+
+    if geometry(baseline_index) != geometry(fresh_index):
+        print("note: index geometry changed; size gate skipped")
+    else:
+        bver = baseline_index.get("max_format_version", 1)
+        fver = fresh_index.get("max_format_version", 1)
+        for key, label in (("index_bytes", "v1 index"),):
+            bb, fb = baseline_index.get(key), fresh_index.get(key)
+            if bb and fb and fb > bb * (1 + size_tol) and fver <= bver:
+                bad.append(f"[index] {label} grew {bb} -> {fb} bytes "
+                           f"(> {1 + size_tol:.2f}x) without a "
+                           f"format-version bump ({bver} -> {fver})")
+        bpq = (baseline_index.get("pq") or {}).get("index_bytes")
+        fpq = (fresh_index.get("pq") or {}).get("index_bytes")
+        if bpq and fpq and fpq > bpq * (1 + size_tol) and fver <= bver:
+            bad.append(f"[index] pq index grew {bpq} -> {fpq} bytes "
+                       f"without a format-version bump")
+        fratio = (fresh_index.get("pq") or {}).get("size_ratio_vs_v1")
+        if fratio is not None and fratio < 4.0:
+            bad.append(f"[index] pq size_ratio_vs_v1 {fratio} < 4.0 "
+                       f"(acceptance floor)")
+    return bad
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-serve", required=True)
+    ap.add_argument("--baseline-index", required=True)
+    ap.add_argument("--fresh-serve",
+                    default=os.path.join(REPO_ROOT, "BENCH_serve.json"))
+    ap.add_argument("--fresh-index",
+                    default=os.path.join(REPO_ROOT, "BENCH_index.json"))
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("BENCH_REGRESSION_TOL",
+                                                 "0.20")),
+                    help="fractional latency budget (default 20%%)")
+    ap.add_argument("--size-tol", type=float, default=0.20,
+                    help="index-size growth budget; NOT loosened by "
+                         "BENCH_REGRESSION_TOL (size is deterministic)")
+    ap.add_argument("--mrr-tol", type=float, default=0.02)
+    args = ap.parse_args(argv)
+
+    bad = check(_load(args.baseline_serve), _load(args.fresh_serve),
+                _load(args.baseline_index), _load(args.fresh_index),
+                tol=args.tol, mrr_tol=args.mrr_tol, size_tol=args.size_tol)
+    if bad:
+        print("BENCH REGRESSION:")
+        for line in bad:
+            print("  " + line)
+        return 1
+    print(f"bench regression check OK (tol {args.tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -34,11 +34,20 @@ def git_sha():
         return "unknown"
 
 
+def bench_host():
+    """Hardware stamp: absolute latencies are only comparable between runs
+    on matching hosts (check_regression skips the latency gate otherwise;
+    size and quality gates are hardware-independent and always apply)."""
+    import platform
+    return {"machine": platform.machine(), "system": platform.system(),
+            "cpus": os.cpu_count()}
+
+
 def bench_meta(cfg):
     """Stamp for BENCH_*.json files so the perf trajectory in ROADMAP stays
-    comparable across PRs: what commit and what index geometry produced
+    comparable across PRs: what commit, host, and index geometry produced
     these numbers."""
-    return {"git_sha": git_sha(),
+    return {"git_sha": git_sha(), "host": bench_host(),
             "config": {"n_docs": cfg.n_docs, "n_clusters": cfg.n_clusters,
                        "dim": cfg.dim, "cluster_cap": cfg.cluster_cap,
                        "dtype": cfg.dtype}}

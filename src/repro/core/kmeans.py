@@ -97,9 +97,25 @@ def kmeans_shards(rng, shards, n_clusters, iters=15):
     return centroids, jnp.asarray(assign, dtype=jnp.int32)
 
 
-def build_cluster_table(assign, n_clusters, cap, X=None, centroids=None):
+def gather_rows_chunked(X, idx, chunk_rows=8192):
+    """Gather X[idx] in bounded fancy-index reads — X only needs row
+    indexing (np.memmap or any capped/lazy source works; the full matrix is
+    never materialized and no single read exceeds chunk_rows rows)."""
+    idx = np.asarray(idx, np.int64)
+    out = np.empty((len(idx), int(X.shape[1])), np.float32)
+    for lo in range(0, len(idx), chunk_rows):
+        sel = idx[lo:lo + chunk_rows]
+        out[lo:lo + len(sel)] = np.asarray(X[sel], np.float32)
+    return out
+
+
+def build_cluster_table(assign, n_clusters, cap, X=None, centroids=None,
+                        chunk_rows=8192):
     """Padded (N, cap) doc-id table; overflow docs are reassigned to their
     next-nearest cluster with free space (host-side greedy, like balanced IVF).
+
+    `X` is only touched for overflow rows, gathered in `chunk_rows`-bounded
+    reads, so a corpus-sized np.memmap never materializes.
 
     Returns (cluster_docs int32 (N, cap) padded with -1, doc_cluster (D,)).
     """
@@ -125,7 +141,7 @@ def build_cluster_table(assign, n_clusters, cap, X=None, centroids=None):
                 members[free[fi]].append(d)
                 assign[d] = free[fi]
         else:
-            Xo = np.asarray(X)[overflow]
+            Xo = gather_rows_chunked(X, overflow, chunk_rows)
             C = np.asarray(centroids)
             d2 = (Xo * Xo).sum(1)[:, None] + (C * C).sum(1)[None] - 2 * Xo @ C.T
             pref = np.argsort(d2, axis=1)

@@ -54,6 +54,64 @@ def train_pq(rng, X, nsub, n_codes=256, iters=10, rotate=False):
               R, nsub)
 
 
+def pq_encode(codebooks, X, rotation=None):
+    """Assign each row of X (C, dim) to its nearest codebook entry per
+    subspace: (C, nsub) int32 codes. Chunk-friendly: call per bounded row
+    chunk — nothing here depends on seeing the whole corpus."""
+    X = jnp.asarray(X, jnp.float32)
+    if rotation is not None:
+        X = X @ rotation
+    nsub, n_codes, dsub = codebooks.shape
+    Xs = X.reshape(X.shape[0], nsub, dsub)
+    # argmin_k ||x_s - c_sk||^2 = argmin_k ||c_sk||^2 - 2 x_s . c_sk
+    c2 = jnp.sum(codebooks * codebooks, axis=-1)             # (nsub, K)
+    dots = jnp.einsum("csd,skd->csk", Xs, codebooks)         # (C, nsub, K)
+    return jnp.argmin(c2[None] - 2.0 * dots, axis=-1).astype(jnp.int32)
+
+
+def train_pq_stream(rng, embeddings, nsub, *, n_codes=256, iters=10,
+                    rotate=False, sample_docs=1 << 16, chunk_docs=1 << 14):
+    """PQ for corpora larger than RAM: codebooks are trained on a bounded
+    random sample gathered in `chunk_docs`-row reads, then every document is
+    encoded chunk-by-chunk. `embeddings` only needs row indexing (np.memmap
+    is fine); no read ever touches more than max(chunk_docs, sample rows
+    per chunk) rows, and the full float matrix is never materialized.
+
+    Returns a PQ whose `codes` covers all D docs.
+    """
+    D = int(embeddings.shape[0])
+    n_sample = min(D, sample_docs)
+    rng, sub = jax.random.split(rng)
+    idx = np.sort(np.asarray(
+        jax.random.choice(sub, D, (n_sample,), replace=False)))
+    sample = np.empty((n_sample, int(embeddings.shape[1])), np.float32)
+    for lo in range(0, n_sample, chunk_docs):
+        sel = idx[lo:lo + chunk_docs]
+        sample[lo:lo + len(sel)] = np.asarray(embeddings[sel], np.float32)
+    pq = train_pq(rng, jnp.asarray(sample), nsub, n_codes=n_codes,
+                  iters=iters, rotate=rotate)
+    codes = np.empty((D, nsub), np.int32)
+    for lo in range(0, D, chunk_docs):
+        chunk = np.asarray(embeddings[lo:lo + chunk_docs], np.float32)
+        codes[lo:lo + len(chunk)] = np.asarray(
+            pq_encode(pq.codebooks, chunk, pq.rotation))
+    return PQ(pq.codebooks, jnp.asarray(codes), pq.rotation, nsub)
+
+
+def decode_code_blocks(codebooks, codes, rotation=None):
+    """Host-side ADC reconstruction of packed code blocks: codes
+    (..., nsub) uint8/int -> float32 (..., dim). Used by the sharded PQ
+    store; dot(q, decode(codes)) equals the ADC LUT score exactly (same
+    per-subspace terms, summed in the same order)."""
+    books = np.asarray(codebooks, np.float32)        # (nsub, K, dsub)
+    nsub = books.shape[0]
+    vecs = books[np.arange(nsub), np.asarray(codes, np.int64)]
+    flat = vecs.reshape(codes.shape[:-1] + (-1,))
+    if rotation is not None:
+        flat = flat @ np.asarray(rotation, np.float32).T
+    return flat
+
+
 def adc_tables(pq: PQ, q):
     """q: (B, dim) -> LUT (B, nsub, 256)."""
     if pq.rotation is not None:

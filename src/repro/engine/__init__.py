@@ -9,11 +9,12 @@ from repro.engine.pipeline import (
     score_selected_host)
 from repro.engine.server import RetrievalEngine, ServeStats, bucket_size
 from repro.engine.stores import (
-    ClusterStore, DiskStore, InMemoryStore, PQStore, store_for_index)
+    ClusterStore, DiskStore, InMemoryStore, PQStore, ShardedDiskStore,
+    ShardedPQStore, store_for_index)
 
 __all__ = [
     "BlockCache", "ClusterStore", "DiskStore", "InMemoryStore", "PQStore",
-    "RetrievalEngine", "ServeStats", "bucket_size", "fetch_unique_blocks",
-    "retrieve", "score_and_fuse", "score_selected", "score_selected_host",
-    "store_for_index",
+    "RetrievalEngine", "ServeStats", "ShardedDiskStore", "ShardedPQStore",
+    "bucket_size", "fetch_unique_blocks", "retrieve", "score_and_fuse",
+    "score_selected", "score_selected_host", "store_for_index",
 ]

@@ -63,10 +63,16 @@ def fetch_unique_blocks(store, uniq, cache=None):
     return np.stack([got[int(c)] for c in uniq])
 
 
-def score_selected_host(store, q_dense, sel_ids, sel_mask, cache=None):
+def score_selected_host(store, q_dense, sel_ids, sel_mask, cache=None,
+                        use_kernel=False):
     """Host-store scoring: dedup selected cluster ids across the whole query
     batch, fetch each block at most once, then score on device. Mirrors
-    `score_selected`'s contract exactly."""
+    `score_selected`'s contract exactly.
+
+    use_kernel routes the block dot products through the cluster_score
+    Pallas kernel over the (U, cap, dim) unique-block tensor — the per-slot
+    block gather happens in the kernel's DMA index_map instead of a
+    materialized (B, S, cap, dim) jnp.take."""
     sel = np.asarray(sel_ids)
     mask = np.asarray(sel_mask)
     B, S = sel.shape
@@ -77,9 +83,16 @@ def score_selected_host(store, q_dense, sel_ids, sel_mask, cache=None):
         uniq = np.unique(sel[mask])
         blocks = fetch_unique_blocks(store, uniq, cache)     # (U, cap, dim)
         pos = np.searchsorted(uniq, np.where(mask, sel, uniq[0]))
-        # ship only the U unique blocks to device; expand by gather there
-        vecs = jnp.take(jnp.asarray(blocks), jnp.asarray(pos), axis=0)
-        scores = jnp.einsum("bd,bscd->bsc", q_dense, vecs).reshape(B, S * cap)
+        if use_kernel:
+            from repro.kernels.cluster_score import cluster_score
+            scores = cluster_score(
+                jnp.asarray(q_dense), jnp.asarray(blocks),
+                jnp.asarray(pos, jnp.int32)).reshape(B, S * cap)
+        else:
+            # ship only the U unique blocks to device; expand by gather there
+            vecs = jnp.take(jnp.asarray(blocks), jnp.asarray(pos), axis=0)
+            scores = jnp.einsum("bd,bscd->bsc", q_dense,
+                                vecs).reshape(B, S * cap)
     else:
         scores = jnp.zeros((B, S * cap), jnp.float32)
     valid_flat = jnp.asarray(valid.reshape(B, S * cap))
@@ -93,13 +106,15 @@ def score_selected_host(store, q_dense, sel_ids, sel_mask, cache=None):
 # ---------------------------------------------------------------------------
 
 def score_and_fuse(cfg, index, store, q_dense, sparse_ids, sparse_scores,
-                   sel_ids, sel_mask, *, k=None, cache=None):
+                   sel_ids, sel_mask, *, k=None, cache=None,
+                   use_kernel=False):
     """Step 3: dense-score the selected clusters via `store`, fuse with the
     sparse results. Returns (ids, scores, dmask)."""
     k = k or cfg.k_final
     if getattr(store, "is_host", False):
         did, dscore, dmask = score_selected_host(store, q_dense, sel_ids,
-                                                 sel_mask, cache=cache)
+                                                 sel_mask, cache=cache,
+                                                 use_kernel=use_kernel)
     else:
         did, dscore, dmask = score_selected(store, q_dense, sel_ids, sel_mask)
     ids, scores = fusion_lib.fuse_topk(
@@ -126,7 +141,8 @@ def retrieve(cfg, index, store, q_dense, q_terms, q_weights, *,
                                     selector_params=selector_params)
     ids, scores, dmask = score_and_fuse(
         cfg, index, store, q_dense, sparse_ids, sparse_scores,
-        sel["sel_ids"], sel["sel_mask"], k=k, cache=cache)
+        sel["sel_ids"], sel["sel_mask"], k=k, cache=cache,
+        use_kernel=use_kernel)
     diag = {
         "n_selected": jnp.sum(sel["sel_mask"], axis=1),
         "frac_docs_scanned": jnp.mean(dmask.astype(jnp.float32), axis=1)

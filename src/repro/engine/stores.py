@@ -19,6 +19,11 @@ Backends additionally expose:
   score_docs(q_dense, doc_ids) [optional] : backend-native scoring kernel
                  (dense gather+dot, PQ ADC); the pipeline prefers it on the
                  device path so numerics match the pre-engine code exactly.
+
+Five backends speak the protocol: InMemoryStore and PQStore (device),
+DiskStore, and — re-exported from repro.index.sharded — ShardedDiskStore
+(format-v1 float block shards) and ShardedPQStore (format-v2 PQ code
+shards, decode-on-fetch ADC).
 """
 
 from typing import Protocol, runtime_checkable
@@ -28,6 +33,7 @@ import numpy as np
 
 from repro.core import quant as quant_lib
 from repro.core.disk import DiskClusterStore, IOStats
+from repro.index.sharded import ShardedDiskStore, ShardedPQStore  # noqa: F401
 
 
 @runtime_checkable

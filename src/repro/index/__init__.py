@@ -1,18 +1,22 @@
 """Persistent sharded index subsystem: offline build pipeline, versioned
-on-disk format, and an mmap loader that feeds the engine stores. See
-README.md in this directory for the manifest schema and shard layout."""
+on-disk format (v1 float blocks, v2 PQ code shards), and an mmap loader
+that feeds the engine stores. See README.md in this directory for the
+manifest schema and shard layout."""
 
 from repro.index.builder import (
-    build_index_offline, embedding_shards, shard_ranges, write_index)
+    RowSlice, build_index_offline, embedding_shards, shard_ranges,
+    write_index)
 from repro.index.format import (
-    FORMAT_VERSION, IndexChecksumError, IndexFormatError, file_sha256,
-    load_manifest, verify_files)
+    FORMAT_VERSION, FORMAT_VERSION_PQ, SUPPORTED_VERSIONS,
+    IndexChecksumError, IndexFormatError, file_sha256, load_manifest,
+    verify_files)
 from repro.index.reader import IndexReader
-from repro.index.sharded import ShardedDiskStore
+from repro.index.sharded import ShardedDiskStore, ShardedPQStore
 
 __all__ = [
-    "FORMAT_VERSION", "IndexChecksumError", "IndexFormatError",
-    "IndexReader", "ShardedDiskStore", "build_index_offline",
+    "FORMAT_VERSION", "FORMAT_VERSION_PQ", "IndexChecksumError",
+    "IndexFormatError", "IndexReader", "RowSlice", "SUPPORTED_VERSIONS",
+    "ShardedDiskStore", "ShardedPQStore", "build_index_offline",
     "embedding_shards", "file_sha256", "load_manifest", "shard_ranges",
     "verify_files", "write_index",
 ]

@@ -7,15 +7,24 @@ Two layers:
     (`core.kmeans.kmeans_shards`, one embedding shard device-resident at a
     time), capacity-balanced cluster table, neighbor graph, sparse inverted
     index, Stage-I bin table. Returns a `CluSDIndex` with `embeddings=None` —
-    the matrix itself never needs to be a device array, an np.memmap works.
+    the matrix itself never needs to be a device array. Corpora larger than
+    RAM work: pass an `np.memmap` — shards are lazy row-range views
+    (`RowSlice`), overflow reassignment gathers in bounded chunks, and no
+    step ever materializes the full embedding matrix.
 
   * `write_index(out_dir, cfg, index, embeddings, ...)` — serialize any built
     `CluSDIndex` (from this module or `core.clusd.build_index`) into the
-    versioned layout of `index/format.py`: per-index arrays as .npy, cluster
-    blocks packed shard-by-shard into raw per-shard .bin files, optional LSTM
-    selector weights via `repro.checkpoint`, optional PQ artifacts, and a
-    manifest with sha256 checksums over every file. The directory is staged
-    under `<out_dir>.tmp` and committed with an atomic rename.
+    versioned layout of `index/format.py`. Two on-disk formats:
+
+      format_version=1 — float blocks: per-shard raw (hi-lo, cap, dim)
+        cluster-block tensors, packed `chunk_docs` rows at a time.
+      format_version=2 — PQ code shards: per-shard raw (hi-lo, cap, nsub)
+        uint8 code tensors plus the (nsub, 256, dsub) codebooks, and sparse
+        postings compacted to CSR (lossless; readers re-pad at load). The
+        embedding store shrinks by ~4 x itemsize * dim / nsub.
+
+    Both stage under `<out_dir>.tmp` and commit with an atomic rename, with
+    sha256 checksums over every artifact in the manifest.
 
 Read side: `index/reader.py`.
 """
@@ -25,12 +34,14 @@ import os
 import shutil
 import time
 
+import jax
 import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.core import bins as bins_lib
 from repro.core import disk as disk_lib
 from repro.core import kmeans as km
+from repro.core import quant as quant_lib
 from repro.core import sparse as sparse_lib
 from repro.core.clusd import CluSDIndex
 from repro.index import format as fmt
@@ -44,7 +55,42 @@ _ARRAY_DTYPES = {
     "bin_ids": np.int32,
     "sparse_postings_docs": np.int32,
     "sparse_postings_weights": np.float32,
+    # v2 compact (CSR) postings
+    "sparse_postings_data": np.int32,
+    "sparse_postings_wdata": np.float32,
+    "sparse_postings_indptr": np.int64,
 }
+
+DEFAULT_CHUNK_DOCS = 1 << 16
+
+
+class RowSlice:
+    """Lazy row-range view over any row-indexable (D, dim) matrix.
+
+    Nothing is read until the view is indexed or converted; converting reads
+    exactly the view's rows. This is what lets `embedding_shards` hand
+    `kmeans_shards` a full shard list over a corpus-sized np.memmap while
+    only ever holding one shard's rows resident.
+    """
+
+    def __init__(self, source, lo, hi):
+        self.source, self.lo, self.hi = source, int(lo), int(hi)
+        self.shape = (self.hi - self.lo, int(source.shape[1]))
+        self.dtype = np.dtype(getattr(source, "dtype", np.float32))
+
+    def __len__(self):
+        return self.shape[0]
+
+    def __getitem__(self, key):
+        if isinstance(key, slice):
+            start, stop, step = key.indices(self.shape[0])
+            return self.source[self.lo + start:self.lo + stop:step]
+        key = np.asarray(key)
+        return self.source[self.lo + key]
+
+    def __array__(self, dtype=None, copy=None):
+        out = np.asarray(self.source[self.lo:self.hi])
+        return out if dtype is None else out.astype(dtype, copy=False)
 
 
 def shard_ranges(n_clusters, n_shards):
@@ -60,17 +106,19 @@ def shard_ranges(n_clusters, n_shards):
 
 
 def embedding_shards(embeddings, shard_docs):
-    """Row-range views over the (memmap-able) embedding matrix."""
-    D = embeddings.shape[0]
+    """Lazy row-range views over the (memmap-able) embedding matrix — rows
+    are read only when a shard is actually consumed."""
+    D = int(embeddings.shape[0])
     shard_docs = max(1, int(shard_docs))
-    return [embeddings[lo:min(lo + shard_docs, D)]
+    return [RowSlice(embeddings, lo, min(lo + shard_docs, D))
             for lo in range(0, D, shard_docs)]
 
 
 def build_index_offline(cfg, rng, embeddings, doc_terms, doc_weights, *,
                         shard_docs=None, kmeans_iters=15):
     """Sharded/minibatch offline build. `embeddings`: (D, dim) host array or
-    np.memmap — clustered shard-by-shard, never moved to device whole.
+    np.memmap — clustered shard-by-shard, never moved to device whole; peak
+    resident embedding rows are bounded by `shard_docs`.
     Returns a CluSDIndex with `embeddings=None` (blocks live on disk after
     `write_index`)."""
     D = int(embeddings.shape[0])
@@ -79,7 +127,8 @@ def build_index_offline(cfg, rng, embeddings, doc_terms, doc_weights, *,
     centroids, assign = km.kmeans_shards(rng, shards, cfg.n_clusters,
                                          iters=kmeans_iters)
     cluster_docs, doc_cluster = km.build_cluster_table(
-        assign, cfg.n_clusters, cfg.cluster_cap, embeddings, centroids)
+        assign, cfg.n_clusters, cfg.cluster_cap, embeddings, centroids,
+        chunk_rows=shard_docs)
     m = min(cfg.n_neighbors, cfg.n_clusters - 1)
     nb_ids, nb_sims = km.neighbor_graph(centroids, m)
     sp = sparse_lib.SparseIndex.build(doc_terms, doc_weights, cfg.vocab,
@@ -98,10 +147,82 @@ def _cluster_fill_stats(cluster_docs):
             "empty": int((fill == 0).sum())}
 
 
+def _write_float_blocks(path, embeddings, cd, block_dtype, chunk_docs):
+    """Stream one shard's (n, cap, dim) float blocks to `path`, reading at
+    most ~chunk_docs embedding rows per fancy-index gather."""
+    cap = cd.shape[1]
+    group = max(1, int(chunk_docs) // max(1, cap))
+    with open(path, "wb") as f:
+        for lo in range(0, cd.shape[0], group):
+            disk_lib.pack_blocks(embeddings, cd[lo:lo + group],
+                                 block_dtype).tofile(f)
+
+
+def _write_code_blocks(path, codes, cd):
+    """One shard's (n, cap, nsub) uint8 code blocks; padded slots code 0
+    (masked by cluster_docs at read time)."""
+    nsub = codes.shape[1]
+    block = np.zeros(cd.shape + (nsub,), np.uint8)
+    mask = cd >= 0
+    block[mask] = codes[cd[mask]]
+    block.tofile(path)
+
+
+def _postings_csr(sp):
+    """Compact the padded (V, P) posting arrays to CSR (lossless: padding
+    never affects retrieval — scores are scatter-adds over valid entries)."""
+    pd = np.asarray(sp.postings_docs)
+    pw = np.asarray(sp.postings_weights)
+    valid = pd >= 0
+    counts = valid.sum(axis=1)
+    indptr = np.zeros(pd.shape[0] + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return pd[valid].astype(np.int32), pw[valid].astype(np.float32), indptr
+
+
+def _write_pq_arrays(tmp, pq_arrays, nsub, dtype=None):
+    """Serialize PQ artifacts under pq/ and return their manifest entry."""
+    os.makedirs(os.path.join(tmp, "pq"))
+    pq_paths = {}
+    for name, arr in pq_arrays.items():
+        rel = os.path.join("pq", f"{name}.npy")
+        arr = np.asarray(arr) if dtype is None else np.asarray(arr, dtype)
+        np.save(os.path.join(tmp, rel), arr)
+        pq_paths[name] = rel
+    return {"nsub": int(nsub), "arrays": pq_paths}
+
+
+def _index_pq(index, embeddings, pq, pq_nsub, chunk_docs):
+    """Resolve the PQ used for a v2 write: explicit arg > index.quantizer >
+    train now (bounded-memory, deterministic key)."""
+    pq = pq if pq is not None else index.quantizer
+    if pq is None:
+        pq = quant_lib.train_pq_stream(jax.random.key(0), embeddings,
+                                       pq_nsub, chunk_docs=chunk_docs)
+    codes = np.asarray(pq.codes)
+    if codes.shape[0] != index.n_docs:
+        raise ValueError(f"PQ codes cover {codes.shape[0]} docs, "
+                         f"index has {index.n_docs}")
+    if codes.min() < 0 or codes.max() > 255:
+        raise ValueError("PQ codes out of uint8 range")
+    return pq, codes.astype(np.uint8)
+
+
 def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
-                block_dtype=np.float32, extra=None):
+                block_dtype=np.float32, extra=None,
+                format_version=fmt.FORMAT_VERSION, pq=None, pq_nsub=8,
+                chunk_docs=DEFAULT_CHUNK_DOCS):
     """Serialize `index` + packed cluster blocks under `out_dir` (atomic:
-    staged in `<out_dir>.tmp`, committed by rename). Returns the manifest."""
+    staged in `<out_dir>.tmp`, committed by rename). Returns the manifest.
+
+    format_version=1 writes float blocks; format_version=2 writes PQ code
+    shards (using `pq`, else `index.quantizer`, else codebooks trained here)
+    plus CSR-compacted postings. `embeddings` may be an np.memmap: all reads
+    are bounded by `chunk_docs` rows.
+    """
+    if format_version not in fmt.SUPPORTED_VERSIONS:
+        raise ValueError(f"format_version {format_version} not in "
+                         f"{fmt.SUPPORTED_VERSIONS}")
     t0 = time.perf_counter()
     block_dtype = np.dtype(block_dtype)
     cd = np.asarray(index.cluster_docs)
@@ -113,6 +234,7 @@ def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
         shutil.rmtree(tmp)
     os.makedirs(os.path.join(tmp, "blocks"))
 
+    v2 = format_version == fmt.FORMAT_VERSION_PQ
     arrays = {
         "centroids": index.centroids,
         "cluster_docs": index.cluster_docs,
@@ -120,9 +242,15 @@ def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
         "neighbor_ids": index.neighbor_ids,
         "neighbor_sims": index.neighbor_sims,
         "bin_ids": index.bin_ids,
-        "sparse_postings_docs": index.sparse_index.postings_docs,
-        "sparse_postings_weights": index.sparse_index.postings_weights,
     }
+    if v2:
+        data, wdata, indptr = _postings_csr(index.sparse_index)
+        arrays.update(sparse_postings_data=data, sparse_postings_wdata=wdata,
+                      sparse_postings_indptr=indptr)
+    else:
+        arrays.update(
+            sparse_postings_docs=index.sparse_index.postings_docs,
+            sparse_postings_weights=index.sparse_index.postings_weights)
     array_paths = {}
     for name, arr in arrays.items():
         rel = f"{name}.npy"
@@ -130,14 +258,41 @@ def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
                 np.asarray(arr, _ARRAY_DTYPES[name]))
         array_paths[name] = rel
 
-    # cluster blocks, packed one output shard at a time (bounded memory)
+    pq_meta = None
+    geometry = {"n_docs": index.n_docs, "dim": dim,
+                "n_clusters": n_clusters, "cap": cap,
+                "block_dtype": block_dtype.name}
     ranges = shard_ranges(n_clusters, n_shards)
     block_shards = []
-    for s, (lo, hi) in enumerate(ranges):
-        rel = os.path.join("blocks", f"shard_{s:05d}.bin")
-        disk_lib.pack_blocks(embeddings, cd[lo:hi], block_dtype).tofile(
-            os.path.join(tmp, rel))
-        block_shards.append({"file": rel, "cluster_lo": lo, "cluster_hi": hi})
+    if v2:
+        the_pq, codes = _index_pq(index, embeddings, pq, pq_nsub, chunk_docs)
+        geometry["nsub"] = int(the_pq.nsub)
+        geometry["code_dtype"] = "uint8"
+        pq_arrays = {"codebooks": the_pq.codebooks}
+        if the_pq.rotation is not None:
+            pq_arrays["rotation"] = the_pq.rotation
+        pq_meta = _write_pq_arrays(tmp, pq_arrays, the_pq.nsub,
+                                   dtype=np.float32)
+        for s, (lo, hi) in enumerate(ranges):
+            rel = os.path.join("blocks", f"shard_{s:05d}.codes.bin")
+            _write_code_blocks(os.path.join(tmp, rel), codes, cd[lo:hi])
+            block_shards.append({"file": rel, "cluster_lo": lo,
+                                 "cluster_hi": hi})
+    else:
+        for s, (lo, hi) in enumerate(ranges):
+            rel = os.path.join("blocks", f"shard_{s:05d}.bin")
+            _write_float_blocks(os.path.join(tmp, rel), embeddings,
+                                cd[lo:hi], block_dtype, chunk_docs)
+            block_shards.append({"file": rel, "cluster_lo": lo,
+                                 "cluster_hi": hi})
+        # v1 keeps the PR-2 layout byte-for-byte, including optional full
+        # PQ artifacts (codebooks + per-doc codes) for device-side ADC
+        if index.quantizer is not None:
+            q = index.quantizer
+            pq_arrays = {"codebooks": q.codebooks, "codes": q.codes}
+            if q.rotation is not None:
+                pq_arrays["rotation"] = q.rotation
+            pq_meta = _write_pq_arrays(tmp, pq_arrays, q.nsub)
 
     lstm_meta = None
     if index.lstm_params is not None:
@@ -149,28 +304,12 @@ def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
                         extra={k: lstm_meta[k]
                                for k in ("selector", "feat_dim", "hidden")})
 
-    pq_meta = None
-    if index.quantizer is not None:
-        pq = index.quantizer
-        os.makedirs(os.path.join(tmp, "pq"))
-        pq_arrays = {"codebooks": pq.codebooks, "codes": pq.codes}
-        if pq.rotation is not None:
-            pq_arrays["rotation"] = pq.rotation
-        pq_paths = {}
-        for name, arr in pq_arrays.items():
-            rel = os.path.join("pq", f"{name}.npy")
-            np.save(os.path.join(tmp, rel), np.asarray(arr))
-            pq_paths[name] = rel
-        pq_meta = {"nsub": int(pq.nsub), "arrays": pq_paths}
-
     files = fmt.scan_files(tmp)
     manifest = {
-        "format_version": fmt.FORMAT_VERSION,
+        "format_version": format_version,
         "kind": "clusd-index",
         "config": dataclasses.asdict(cfg),
-        "geometry": {"n_docs": index.n_docs, "dim": dim,
-                     "n_clusters": n_clusters, "cap": cap,
-                     "block_dtype": block_dtype.name},
+        "geometry": geometry,
         "arrays": array_paths,
         "block_shards": block_shards,
         "lstm": lstm_meta,

@@ -11,7 +11,7 @@ A built index is one directory:
 
 Manifest schema (format_version 1):
 
-  format_version : int — readers hard-reject other versions
+  format_version : int — readers hard-reject versions they don't speak
   kind           : "clusd-index"
   config         : dataclasses.asdict(CluSDConfig) used at build time
   geometry       : {n_docs, dim, n_clusters, cap, block_dtype}
@@ -25,6 +25,25 @@ Manifest schema (format_version 1):
   files          : {relpath -> {bytes, sha256}} for EVERY artifact file
   total_bytes    : sum of artifact sizes
 
+format_version 2 (PQ-coded block shards) differs only in the embedding
+store and the sparse-postings encoding:
+
+  geometry       : gains {nsub, code_dtype: "uint8"}; block_dtype names the
+                   DECODE dtype (what fetch_clusters returns)
+  block_shards   : shard s holds a raw (hi-lo, cap, nsub) uint8 CODE tensor
+                   (blocks/shard_*.codes.bin) instead of float blocks
+  pq             : REQUIRED: {nsub, arrays: {codebooks[, rotation]}} — the
+                   (nsub, 256, dsub) codebooks that decode the shards; the
+                   per-doc codes live in the shards, not in a pq/codes.npy
+  arrays         : sparse postings are stored compacted (CSR): logical names
+                   sparse_postings_data/sparse_postings_wdata/
+                   sparse_postings_indptr replace the padded
+                   sparse_postings_docs/weights pair; readers re-pad at load
+                   (lossless — padding never affects retrieval)
+
+v1 readers (format PR 2) reject v2 manifests up front via the
+format_version check; pass supported=(1,) to load_manifest to emulate one.
+
 Integrity levels (IndexReader.open(verify=...)):
   "none" — trust the manifest
   "size" — every listed file exists with the exact byte size (cheap; default)
@@ -35,7 +54,9 @@ import hashlib
 import json
 import os
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 1            # float32 block shards (PR 2 layout)
+FORMAT_VERSION_PQ = 2         # PQ code shards + CSR postings
+SUPPORTED_VERSIONS = (FORMAT_VERSION, FORMAT_VERSION_PQ)
 MANIFEST_NAME = "manifest.json"
 VERIFY_LEVELS = ("none", "size", "full")
 
@@ -79,7 +100,11 @@ def write_manifest(index_dir, manifest):
         json.dump(manifest, f, indent=1, sort_keys=True)
 
 
-def load_manifest(index_dir):
+def load_manifest(index_dir, supported=SUPPORTED_VERSIONS):
+    """Parse + version-check the manifest. `supported` restricts which
+    format versions this reader speaks — a PR-2 (v1-only) reader is
+    `supported=(1,)` and must reject v2 indexes cleanly, which is exactly
+    what this check does."""
     path = os.path.join(index_dir, MANIFEST_NAME)
     if not os.path.isfile(path):
         raise IndexFormatError(f"no {MANIFEST_NAME} in {index_dir}")
@@ -89,10 +114,11 @@ def load_manifest(index_dir):
     except (OSError, json.JSONDecodeError) as e:
         raise IndexFormatError(f"unreadable manifest in {index_dir}: {e}")
     version = manifest.get("format_version")
-    if version != FORMAT_VERSION:
+    if version not in supported:
         raise IndexFormatError(
             f"index format version {version!r} unsupported "
-            f"(reader speaks {FORMAT_VERSION})")
+            f"(reader speaks {tuple(supported)}); rebuild the index or "
+            f"upgrade the reader")
     if manifest.get("kind") != "clusd-index":
         raise IndexFormatError(f"not a clusd-index: kind={manifest.get('kind')!r}")
     return manifest

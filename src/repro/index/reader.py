@@ -3,9 +3,16 @@
 Opening is cheap: the manifest is validated (format version always; file
 sizes by default; sha256 with verify="full"), per-index arrays are
 np.load-ed with mmap_mode="r", and cluster blocks stay in their per-shard
-files behind a `ShardedDiskStore`. The document embedding matrix is never
+files behind a sharded store. The document embedding matrix is never
 materialized — `load_index()` returns a CluSDIndex with `embeddings=None`,
 and Step-3 dense scoring reads only selected cluster blocks.
+
+Both on-disk formats are served through the same API:
+
+  format_version 1 — float block shards -> ShardedDiskStore
+  format_version 2 — PQ code shards -> ShardedPQStore (codes decoded
+    through the manifest's codebooks at fetch time; asymmetric-distance
+    scoring), CSR postings re-padded at load (lossless)
 
     reader = IndexReader.open("/path/to/index", verify="full")
     cfg, index = reader.load_index()
@@ -26,7 +33,7 @@ from repro.core.disk import IOStats
 from repro.core.lstm import lstm_init
 from repro.core.sparse import SparseIndex
 from repro.index import format as fmt
-from repro.index.sharded import ShardedDiskStore
+from repro.index.sharded import ShardedDiskStore, ShardedPQStore
 
 
 class IndexReader:
@@ -36,11 +43,22 @@ class IndexReader:
         self.geometry = manifest["geometry"]
 
     @classmethod
-    def open(cls, index_dir, verify="size"):
-        """Validate and open. verify: "none" | "size" (default) | "full"."""
-        manifest = fmt.load_manifest(index_dir)
+    def open(cls, index_dir, verify="size",
+             supported=fmt.SUPPORTED_VERSIONS):
+        """Validate and open. verify: "none" | "size" (default) | "full".
+        `supported` narrows the format versions this reader accepts — a
+        PR-2-era (v1-only) reader is `supported=(1,)`."""
+        manifest = fmt.load_manifest(index_dir, supported=supported)
         fmt.verify_files(index_dir, manifest, level=verify)
         return cls(index_dir, manifest)
+
+    @property
+    def format_version(self):
+        return self.manifest["format_version"]
+
+    @property
+    def is_pq(self):
+        return self.format_version == fmt.FORMAT_VERSION_PQ
 
     # -- raw artifacts ------------------------------------------------------
 
@@ -64,51 +82,113 @@ class IndexReader:
             os.path.join(self.index_dir, meta["dir"]), meta["step"], target)
         return params
 
+    def _pq_array(self, name):
+        rel = self.manifest["pq"]["arrays"].get(name)
+        if rel is None:
+            return None
+        return np.load(os.path.join(self.index_dir, rel))
+
+    def _doc_codes(self):
+        """Rebuild per-doc (D, nsub) codes from the v2 code shards (cheap:
+        nsub bytes per doc) — lets device-side ADC (PQStore) serve a v2
+        index for parity checks and small corpora."""
+        g = self.geometry
+        codes = np.zeros((g["n_docs"], g["nsub"]), np.uint8)
+        cd = np.asarray(self.array("cluster_docs"))
+        for s in self.manifest["block_shards"]:
+            lo, hi = s["cluster_lo"], s["cluster_hi"]
+            mm = np.memmap(os.path.join(self.index_dir, s["file"]),
+                           dtype=np.uint8, mode="r",
+                           shape=(hi - lo, g["cap"], g["nsub"]))
+            local_cd = cd[lo:hi]
+            mask = local_cd >= 0
+            codes[local_cd[mask]] = mm[mask]
+        return codes
+
     def quantizer(self):
         meta = self.manifest["pq"]
         if meta is None:
             return None
         from repro.core.quant import PQ
-        load = lambda rel: jnp.asarray(
-            np.load(os.path.join(self.index_dir, rel)))
-        rot = meta["arrays"].get("rotation")
-        return PQ(codebooks=load(meta["arrays"]["codebooks"]),
-                  codes=load(meta["arrays"]["codes"]),
-                  rotation=load(rot) if rot else None,
+        rot = self._pq_array("rotation")
+        if self.is_pq:
+            return PQ(codebooks=jnp.asarray(self._pq_array("codebooks")),
+                      codes=jnp.asarray(self._doc_codes().astype(np.int32)),
+                      rotation=None if rot is None else jnp.asarray(rot),
+                      nsub=meta["nsub"])
+        return PQ(codebooks=jnp.asarray(self._pq_array("codebooks")),
+                  codes=jnp.asarray(self._pq_array("codes")),
+                  rotation=None if rot is None else jnp.asarray(rot),
                   nsub=meta["nsub"])
 
     # -- engine-level objects ----------------------------------------------
 
-    def load_index(self):
+    def _sparse_index(self):
+        if not self.is_pq:
+            return SparseIndex(
+                postings_docs=jnp.asarray(self.array("sparse_postings_docs")),
+                postings_weights=jnp.asarray(
+                    self.array("sparse_postings_weights")),
+                n_docs=self.geometry["n_docs"])
+        # v2: re-pad the CSR postings (lossless — sparse scoring is a
+        # scatter-add over valid entries; pad width never changes scores)
+        data = np.asarray(self.array("sparse_postings_data"))
+        wdata = np.asarray(self.array("sparse_postings_wdata"))
+        indptr = np.asarray(self.array("sparse_postings_indptr"))
+        counts = np.diff(indptr)
+        V, P = len(counts), max(1, int(counts.max()) if len(counts) else 1)
+        pd = np.full((V, P), -1, np.int32)
+        pw = np.zeros((V, P), np.float32)
+        cols = np.arange(P)[None, :]
+        mask = cols < counts[:, None]
+        pd[mask] = data
+        pw[mask] = wdata
+        return SparseIndex(postings_docs=jnp.asarray(pd),
+                           postings_weights=jnp.asarray(pw),
+                           n_docs=self.geometry["n_docs"])
+
+    def load_index(self, load_quantizer=None):
         """(cfg, CluSDIndex) with embeddings=None; small arrays go to device,
-        blocks stay on disk (serve via `open_store()` / `engine()`)."""
+        blocks stay on disk (serve via `open_store()` / `engine()`).
+
+        load_quantizer: by default PQ artifacts load for v1 (cheap — they
+        sit in pq/*.npy) but NOT for v2, where rebuilding the per-doc code
+        view would read every code shard at open time; v2 serving decodes
+        straight from the shards (`open_store()`), so cold open stays
+        manifest + mmap only. Pass True to force (device-side ADC over a
+        v2 index), or call `reader.quantizer()` directly."""
+        if load_quantizer is None:
+            load_quantizer = not self.is_pq
         cfg = self.config()
-        sp = SparseIndex(
-            postings_docs=jnp.asarray(self.array("sparse_postings_docs")),
-            postings_weights=jnp.asarray(
-                self.array("sparse_postings_weights")),
-            n_docs=self.geometry["n_docs"])
         index = CluSDIndex(
             centroids=jnp.asarray(self.array("centroids")),
             cluster_docs=jnp.asarray(self.array("cluster_docs")),
             doc_cluster=jnp.asarray(self.array("doc_cluster")),
             neighbor_ids=jnp.asarray(self.array("neighbor_ids")),
             neighbor_sims=jnp.asarray(self.array("neighbor_sims")),
-            embeddings=None, sparse_index=sp,
-            lstm_params=self.lstm_params(), quantizer=self.quantizer(),
+            embeddings=None, sparse_index=self._sparse_index(),
+            lstm_params=self.lstm_params(),
+            quantizer=self.quantizer() if load_quantizer else None,
             bin_ids=jnp.asarray(self.array("bin_ids")))
         return cfg, index
 
     def open_store(self, cluster_docs=None, stats: IOStats = None):
-        """ShardedDiskStore over the block shard files (mmap, read-only)."""
+        """Sharded store over the block shard files (mmap, read-only):
+        ShardedDiskStore for v1 float blocks, ShardedPQStore for v2 code
+        shards (decode-on-fetch ADC)."""
         g = self.geometry
         shards = self.manifest["block_shards"]
+        paths = [os.path.join(self.index_dir, s["file"]) for s in shards]
+        ranges = [(s["cluster_lo"], s["cluster_hi"]) for s in shards]
         if cluster_docs is None:
             cluster_docs = self.array("cluster_docs")
+        if self.is_pq:
+            return ShardedPQStore(
+                paths, ranges, g["cap"], self._pq_array("codebooks"),
+                cluster_docs, rotation=self._pq_array("rotation"),
+                out_dtype=np.dtype(g["block_dtype"]), stats=stats)
         return ShardedDiskStore(
-            [os.path.join(self.index_dir, s["file"]) for s in shards],
-            [(s["cluster_lo"], s["cluster_hi"]) for s in shards],
-            g["cap"], g["dim"], cluster_docs,
+            paths, ranges, g["cap"], g["dim"], cluster_docs,
             dtype=np.dtype(g["block_dtype"]), stats=stats)
 
     def engine(self, cfg=None, index=None, **engine_kw):

@@ -1,14 +1,25 @@
-"""ShardedDiskStore: engine ClusterStore backend over a built index's
-per-shard block files.
+"""Sharded on-disk ClusterStore backends over a built index's per-shard
+block files.
 
-Shard s memmaps `blocks/shard_s.bin`, owning clusters [lo_s, hi_s).
-`fetch_blocks` routes each requested cluster to its shard and coalesces
-runs of adjacent cluster ids *within* a shard into single contiguous
-memmap reads — `IOStats.n_ops` counts runs, not blocks, matching the
-coalesced `DiskClusterStore.fetch_clusters`. Thread-safe stats so the
+Shard s memmaps `blocks/shard_s.bin` (or `.codes.bin`), owning clusters
+[lo_s, hi_s). `fetch_blocks` routes each requested cluster to its shard and
+coalesces runs of adjacent cluster ids *within* a shard into single
+contiguous memmap reads — `IOStats.n_ops` counts runs, not blocks, matching
+the coalesced `DiskClusterStore.fetch_clusters`. Thread-safe stats so the
 engine's background prefetcher can share the store with serving.
 
-Plugs into `repro.engine` exactly like `DiskStore` (is_host backend):
+Two record encodings behind the same routing:
+
+  * ShardedDiskStore — raw float blocks (format v1): one (cap, dim) tensor
+    per cluster, returned as read.
+  * ShardedPQStore — PQ code blocks (format v2): one (cap, nsub) uint8
+    tensor per cluster, decoded through the (nsub, 256, dsub) codebooks at
+    fetch time. dot(q, decode(codes)) equals the ADC lookup-table score
+    exactly (same per-subspace terms), so serving this store through the
+    engine pipeline IS asymmetric-distance scoring — while the bytes that
+    cross the disk boundary shrink by 4*dim/nsub vs float32 blocks.
+
+Both plug into `repro.engine` exactly like `DiskStore` (is_host backends):
 selection runs batched on device; the pipeline fetches deduplicated,
 sorted unique cluster ids — which is what makes run coalescing pay off.
 """
@@ -20,19 +31,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.disk import IOStats, read_blocks_coalesced
+from repro.core.quant import decode_code_blocks
 
 
-class ShardedDiskStore:
+class _ShardedBlockFiles:
+    """Shared routing + run-coalescing over per-shard fixed-record files.
+
+    Subclasses define the on-disk record (shape/dtype per cluster) and how
+    a batch of raw records decodes into float embedding blocks."""
+
     is_host = True
 
-    def __init__(self, shard_paths, shard_ranges, cap, dim, cluster_docs,
-                 dtype=np.float32, stats: IOStats = None):
-        """shard_paths[i] holds clusters [shard_ranges[i][0], shard_ranges[i][1])
-        as a raw (hi-lo, cap, dim) block tensor."""
+    def __init__(self, shard_paths, shard_ranges, record_shape, record_dtype,
+                 cluster_docs, stats: IOStats = None):
         if len(shard_paths) != len(shard_ranges) or not shard_paths:
             raise ValueError("need one path per shard range")
-        self.dtype = np.dtype(dtype)
-        self.cap, self.dim = int(cap), int(dim)
+        self.record_shape = tuple(int(x) for x in record_shape)
+        self.record_dtype = np.dtype(record_dtype)
         self._lo = np.asarray([lo for lo, _ in shard_ranges], np.int64)
         self._hi = np.asarray([hi for _, hi in shard_ranges], np.int64)
         if (self._lo[0] != 0 or np.any(self._lo[1:] != self._hi[:-1])):
@@ -40,18 +55,32 @@ class ShardedDiskStore:
                              f"{list(zip(self._lo, self._hi))}")
         self.n_clusters = int(self._hi[-1])
         self._mms = [
-            np.memmap(p, dtype=self.dtype, mode="r",
-                      shape=(int(hi - lo), self.cap, self.dim))
+            np.memmap(p, dtype=self.record_dtype, mode="r",
+                      shape=(int(hi - lo),) + self.record_shape)
             for p, (lo, hi) in zip(shard_paths, shard_ranges)]
         self.cluster_docs = jnp.asarray(cluster_docs)
         self.cluster_docs_np = np.asarray(cluster_docs)
-        self.block_bytes = self.cap * self.dim * self.dtype.itemsize
+        # bytes that actually cross the disk boundary per cluster record
+        self.block_bytes = int(np.prod(self.record_shape)) * \
+            self.record_dtype.itemsize
         self.stats = stats if stats is not None else IOStats()
+        self.decode_ms = 0.0          # host decode time, outside IOStats
         self._lock = threading.Lock()
 
     @property
     def n_shards(self):
         return len(self._mms)
+
+    # -- decoding hook ------------------------------------------------------
+
+    def _decode(self, records):
+        """(n,) + record_shape raw records -> (n, cap, dim) float blocks."""
+        return records
+
+    def _empty_blocks(self):
+        return np.zeros((0,) + self.record_shape, self.record_dtype)
+
+    # -- fetch --------------------------------------------------------------
 
     def fetch_blocks(self, cluster_ids):
         """1-D host sequence of cluster ids -> (vecs, docs, valid)."""
@@ -60,10 +89,9 @@ class ShardedDiskStore:
         valid = docs >= 0
         n = len(ids)
         if n == 0:
-            return (np.zeros((0, self.cap, self.dim), self.dtype),
-                    docs, valid)
+            return self._decode(self._empty_blocks()), docs, valid
         t0 = time.perf_counter()
-        out = np.empty((n, self.cap, self.dim), self.dtype)
+        out = np.empty((n,) + self.record_shape, self.record_dtype)
         sid = np.searchsorted(self._hi, ids, side="right")
         # split at shard changes OR non-adjacent ids; coalesce inside a run
         brk = np.flatnonzero((np.diff(ids) != 1) | (np.diff(sid) != 0)) + 1
@@ -75,10 +103,15 @@ class ShardedDiskStore:
             _, runs = read_blocks_coalesced(self._mms[s], local, out,
                                             out_offset=int(lo))
             n_ops += runs
-        wall = (time.perf_counter() - t0) * 1e3
+        t1 = time.perf_counter()
+        vecs = self._decode(out)
+        # IOStats.wall_ms measures only the disk reads; decode is host
+        # compute and accounted separately so format v1/v2 I/O stays
+        # comparable in the BENCH trajectory
         with self._lock:
-            self.stats.add(n_ops, n * self.block_bytes, wall)
-        return out, docs, valid
+            self.stats.add(n_ops, n * self.block_bytes, (t1 - t0) * 1e3)
+            self.decode_ms += (time.perf_counter() - t1) * 1e3
+        return vecs, docs, valid
 
     def fetch_clusters(self, cluster_ids, stats: IOStats = None):
         """DiskClusterStore-compatible view: blocks only, optional extra
@@ -91,3 +124,51 @@ class ShardedDiskStore:
                       self.stats.bytes - before[1],
                       (time.perf_counter() - t0) * 1e3)
         return jnp.asarray(vecs)
+
+
+class ShardedDiskStore(_ShardedBlockFiles):
+    """Format-v1 backend: raw float cluster blocks, returned as read."""
+
+    def __init__(self, shard_paths, shard_ranges, cap, dim, cluster_docs,
+                 dtype=np.float32, stats: IOStats = None):
+        """shard_paths[i] holds clusters [shard_ranges[i][0], shard_ranges[i][1])
+        as a raw (hi-lo, cap, dim) block tensor."""
+        super().__init__(shard_paths, shard_ranges, (int(cap), int(dim)),
+                         dtype, cluster_docs, stats=stats)
+        self.cap, self.dim = int(cap), int(dim)
+        self.dtype = self.record_dtype
+
+
+class ShardedPQStore(_ShardedBlockFiles):
+    """Format-v2 backend: PQ code shards decoded through the codebooks.
+
+    Each cluster record is (cap, nsub) uint8; `fetch_blocks` reads codes
+    with the same run coalescing as ShardedDiskStore, then reconstructs
+    (cap, dim) float blocks on the host: vec[slot] = concat_s
+    codebooks[s, code[slot, s]] (optionally un-rotated). `IOStats.bytes`
+    counts CODE bytes — the 4*dim/nsub I/O reduction is visible there.
+    """
+
+    def __init__(self, shard_paths, shard_ranges, cap, codebooks,
+                 cluster_docs, rotation=None, out_dtype=np.float32,
+                 stats: IOStats = None):
+        self.codebooks = np.asarray(codebooks, np.float32)
+        if self.codebooks.ndim != 3:
+            raise ValueError(f"codebooks must be (nsub, n_codes, dsub), "
+                             f"got {self.codebooks.shape}")
+        self.nsub = int(self.codebooks.shape[0])
+        self.rotation = None if rotation is None \
+            else np.asarray(rotation, np.float32)
+        super().__init__(shard_paths, shard_ranges, (int(cap), self.nsub),
+                         np.uint8, cluster_docs, stats=stats)
+        self.cap = int(cap)
+        self.dim = int(self.nsub * self.codebooks.shape[2])
+        self.dtype = np.dtype(out_dtype)
+
+    def _decode(self, records):
+        return decode_code_blocks(self.codebooks, records,
+                                  self.rotation).astype(self.dtype,
+                                                        copy=False)
+
+    def _empty_blocks(self):
+        return np.zeros((0, self.cap, self.nsub), np.uint8)

@@ -5,16 +5,24 @@ rebuilding or materializing the embedding matrix at load time.
   PYTHONPATH=src python -m repro.launch.build_index --out /tmp/idx \
       --docs 20000 --clusters 256 --shards 8 --train-queries 512
 
+  # format v2: PQ code shards (4-16x smaller embedding store), built from
+  # an np.memmap staged corpus with bounded-chunk reads (corpus > RAM path)
+  PYTHONPATH=src python -m repro.launch.build_index --out /tmp/idx_pq \
+      --format-version 2 --pq-nsub 8 --memmap --chunk-docs 4096
+
 Pipeline (repro/index/builder.py): sharded Lloyd's k-means over embedding
 shards -> capacity-balanced cluster table -> neighbor graph -> sparse
 inverted index -> optional LSTM selector training (labels need the full
 embeddings; that is fine offline) -> optional PQ codebooks -> per-shard
-cluster-block files + versioned manifest with checksums.
+cluster-block (v1) or code-block (v2) files + versioned manifest with
+checksums.
 """
 
 import argparse
 import dataclasses
 import math
+import os
+import tempfile
 import time
 
 import jax
@@ -51,7 +59,18 @@ def main(argv=None):
                     help="0 skips LSTM selector training")
     ap.add_argument("--epochs", type=int, default=40)
     ap.add_argument("--pq-nsub", type=int, default=0,
-                    help="also train PQ codebooks with this many subspaces")
+                    help="train PQ codebooks with this many subspaces "
+                         "(v1: extra pq/ artifacts; v2: the code shards; "
+                         "defaults to 8 under --format-version 2)")
+    ap.add_argument("--format-version", type=int, default=1, choices=(1, 2),
+                    help="1 = float32 block shards, 2 = PQ code shards")
+    ap.add_argument("--memmap", action="store_true",
+                    help="stage embeddings through an np.memmap and build "
+                         "from it (the corpus>RAM path; LSTM label "
+                         "generation still uses in-RAM embeddings)")
+    ap.add_argument("--chunk-docs", type=int, default=0,
+                    help="bound every embedding read to this many rows "
+                         "(0 = per-shard granularity)")
     ap.add_argument("--kmeans-iters", type=int, default=15)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -61,8 +80,15 @@ def main(argv=None):
     print(f"corpus: {cfg.n_docs} docs x {cfg.dim} dim ...", flush=True)
     corpus = synth_corpus(args.seed, cfg.n_docs, cfg.dim, cfg.vocab)
     emb = np.asarray(corpus.embeddings)
+    if args.memmap:
+        staged = os.path.join(tempfile.mkdtemp(), "embeddings.bin")
+        np.asarray(emb, np.float32).tofile(staged)
+        emb = np.memmap(staged, dtype=np.float32, mode="r", shape=emb.shape)
+        print(f"staged embeddings -> np.memmap {staged}", flush=True)
 
     shard_docs = math.ceil(cfg.n_docs / max(1, args.shards))
+    if args.chunk_docs > 0:
+        shard_docs = min(shard_docs, args.chunk_docs)
     print(f"clustering: {cfg.n_clusters} clusters over "
           f"{args.shards} embedding shard(s) ...", flush=True)
     index = index_lib.build_index_offline(
@@ -84,20 +110,27 @@ def main(argv=None):
         print(f"  loss {hist[0]:.4f} -> {hist[-1]:.4f}", flush=True)
         index.embeddings = None
 
-    if args.pq_nsub > 0:
+    pq_nsub = args.pq_nsub or (8 if args.format_version == 2 else 0)
+    if pq_nsub > 0:
         from repro.core import quant as quant_lib
-        print(f"training PQ codebooks (nsub={args.pq_nsub}) ...", flush=True)
-        index.quantizer = quant_lib.train_pq(
-            jax.random.key(args.seed + 3), corpus.embeddings, args.pq_nsub)
+        print(f"training PQ codebooks (nsub={pq_nsub}) ...", flush=True)
+        # streaming train/encode: bounded-chunk reads off the (possibly
+        # memmap) source, so the v2 path never materializes the matrix
+        index.quantizer = quant_lib.train_pq_stream(
+            jax.random.key(args.seed + 3), emb, pq_nsub,
+            chunk_docs=args.chunk_docs or index_lib.builder.DEFAULT_CHUNK_DOCS)
 
     manifest = index_lib.write_index(
         args.out, cfg, index, emb, n_shards=args.shards,
+        format_version=args.format_version,
+        chunk_docs=args.chunk_docs or index_lib.builder.DEFAULT_CHUNK_DOCS,
         extra={"corpus": {"kind": "synthetic", "seed": args.seed,
                           "n_docs": cfg.n_docs, "dim": cfg.dim,
                           "vocab": cfg.vocab}})
     wall = time.perf_counter() - t0
     g = manifest["geometry"]
-    print(f"wrote {args.out}: {manifest['total_bytes'] / 2**20:.1f} MiB, "
+    print(f"wrote {args.out} (format v{manifest['format_version']}): "
+          f"{manifest['total_bytes'] / 2**20:.1f} MiB, "
           f"{len(manifest['block_shards'])} block shard(s), "
           f"N={g['n_clusters']} cap={g['cap']} dim={g['dim']}, "
           f"lstm={'yes' if manifest['lstm'] else 'no'}, "

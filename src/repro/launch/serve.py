@@ -78,7 +78,8 @@ def serve_from_index(args):
     st = engine.stats()
     io, cache = st.get("io", {}), st.get("cache", {})
     print(f"index: {reader.index_dir} "
-          f"({reader.manifest['total_bytes'] / 2**20:.1f} MiB, "
+          f"(format v{reader.format_version}, "
+          f"{reader.manifest['total_bytes'] / 2**20:.1f} MiB, "
           f"{len(reader.manifest['block_shards'])} shard(s), verify={args.verify})")
     print(f"cold open {open_ms:.0f} ms, first batch {first_ms:.0f} ms "
           f"(incl. compile)")
@@ -93,13 +94,26 @@ def serve_from_index(args):
         ref_ids, _, _ = pipe_lib.retrieve(
             cfg, index, mem, test_q.q_dense[:args.queries],
             test_q.q_terms[:args.queries], test_q.q_weights[:args.queries])
-        if not np.array_equal(ids, np.asarray(ref_ids)):
+        if reader.is_pq:
+            # PQ serving is approximate by construction: parity is a
+            # bounded MRR@10 delta vs the float32 in-memory backend
+            ref_mrr = mrr_at(np.asarray(ref_ids),
+                             test_q.rel_doc[:args.queries])
+            got_mrr = mrr_at(ids, test_q.rel_doc[:args.queries])
+            if abs(ref_mrr - got_mrr) > args.parity_mrr_tol:
+                print(f"PARITY FAIL: PQ MRR@10 {got_mrr:.4f} vs in-memory "
+                      f"{ref_mrr:.4f} (tol {args.parity_mrr_tol})")
+                return 1
+            print(f"parity OK: PQ MRR@10 {got_mrr:.4f} within "
+                  f"{args.parity_mrr_tol} of in-memory {ref_mrr:.4f}")
+        elif not np.array_equal(ids, np.asarray(ref_ids)):
             bad = int((ids != np.asarray(ref_ids)).any(axis=1).sum())
             print(f"PARITY FAIL: {bad}/{args.queries} queries differ from "
                   f"the in-memory pipeline")
             return 1
-        print("parity OK: sharded on-disk serving matches the in-memory "
-              "pipeline exactly")
+        else:
+            print("parity OK: sharded on-disk serving matches the "
+                  "in-memory pipeline exactly")
     return 0
 
 
@@ -122,7 +136,10 @@ def main():
                     help="built-index integrity check level at open")
     ap.add_argument("--check-parity", action="store_true",
                     help="with --index-dir: compare against the in-memory "
-                         "pipeline, exit non-zero on mismatch")
+                         "pipeline, exit non-zero on mismatch (exact ids "
+                         "for v1; MRR@10 tolerance for PQ/v2 indexes)")
+    ap.add_argument("--parity-mrr-tol", type=float, default=0.02,
+                    help="allowed MRR@10 delta for PQ-index parity")
     args = ap.parse_args()
 
     if args.index_dir:

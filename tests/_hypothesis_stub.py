@@ -2,9 +2,13 @@
 deterministic sample sweep) where the real package isn't installed.
 
 Only covers what this suite uses: `@settings(max_examples=..., deadline=...)`
-stacked on `@given(st.integers(lo, hi))`. Prefer the real hypothesis
+stacked on `@given(st.integers(lo, hi))`, with the drawn value filling the
+test's LAST parameter (hypothesis's right-to-left convention) so pytest
+fixtures in earlier parameters keep working. Prefer the real hypothesis
 (requirements.txt) — this fallback trades shrinking/coverage for zero deps.
 """
+
+import inspect
 
 import numpy as np
 
@@ -31,14 +35,19 @@ class strategies:
 
 def given(strategy):
     def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        value_name = params[-1].name          # strategy fills the last param
+
         def wrapper(*args, **kwargs):
             n = getattr(wrapper, "_max_examples", DEFAULT_EXAMPLES)
             for value in strategy.samples(n):
-                fn(*args, value, **kwargs)
-        # no functools.wraps: pytest must see the zero-arg wrapper signature,
-        # not the inner function's strategy-filled parameter
+                fn(*args, **dict(kwargs, **{value_name: value}))
+        # pytest must see only the fixture parameters, not the
+        # strategy-filled one (and not a bare *args/**kwargs signature)
         wrapper.__name__ = fn.__name__
         wrapper.__doc__ = fn.__doc__
+        wrapper.__signature__ = sig.replace(parameters=params[:-1])
         wrapper._max_examples = DEFAULT_EXAMPLES
         return wrapper
     return deco

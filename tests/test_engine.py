@@ -100,6 +100,99 @@ def test_legacy_wrappers_match_pipeline(tiny):
 
 
 # ---------------------------------------------------------------------------
+# backend parity matrix: all five stores on one fixture index
+# ---------------------------------------------------------------------------
+
+_MATRIX_SHAPES = {
+    "base": dict(n_docs=256, n_clusters=16),
+    # n_docs not divisible by cluster_cap, odd cluster count
+    "ragged": dict(n_docs=237, n_clusters=7),
+    "single-cluster": dict(n_docs=64, n_clusters=1),
+    "empty-stage1": dict(n_docs=256, n_clusters=16),
+}
+
+
+@pytest.mark.parametrize("case", sorted(_MATRIX_SHAPES))
+def test_backend_parity_matrix(case, tmp_path):
+    """InMemoryStore / DiskStore / ShardedDiskStore agree exactly;
+    PQStore / ShardedPQStore agree with each other and stay within a
+    bounded MRR@10 delta of the exact backends — across odd geometries
+    and an all-padding (empty Stage-I sparse input) query batch."""
+    from repro import index as index_lib
+    from repro.data import mrr_at, synth_corpus, synth_queries
+
+    shape = _MATRIX_SHAPES[case]
+    N = shape["n_clusters"]
+    cfg = dataclasses.replace(
+        get_config("clusd-msmarco", "smoke"),
+        n_docs=shape["n_docs"], dim=32, n_clusters=N, vocab=128,
+        max_postings=64, k_sparse=32, bins=(5, 15, 32),
+        n_candidates=min(8, N), max_selected=min(4, N),
+        n_neighbors=min(8, max(1, N - 1)), u_bins=4, k_final=16)
+    corpus = synth_corpus(11, cfg.n_docs, cfg.dim, cfg.vocab)
+    index = cl.build_index(cfg, jax.random.key(0), corpus.embeddings,
+                           corpus.doc_terms, corpus.doc_weights)
+    qs = synth_queries(13, corpus, 16)
+    q_terms, q_weights = qs.q_terms, qs.q_weights
+    if case == "empty-stage1":
+        q_terms = jnp.full_like(qs.q_terms, -1)
+        q_weights = jnp.zeros_like(qs.q_weights)
+
+    emb = np.asarray(corpus.embeddings)
+    pq = quant_lib.train_pq(jax.random.key(1), corpus.embeddings, nsub=8)
+    v1 = str(tmp_path / "v1")
+    v2 = str(tmp_path / "v2")
+    index_lib.write_index(v1, cfg, index, emb, n_shards=min(3, N))
+    index_lib.write_index(v2, cfg, index, emb, n_shards=min(3, N),
+                          format_version=index_lib.FORMAT_VERSION_PQ, pq=pq)
+    stores = {
+        "inmemory": InMemoryStore(index.embeddings, index.cluster_docs),
+        "disk": DiskStore.create(str(tmp_path / "blocks.bin"),
+                                 index.embeddings, index.cluster_docs),
+        "sharded-disk": index_lib.IndexReader.open(v1, verify="full")
+        .open_store(cluster_docs=index.cluster_docs),
+        "pq": PQStore(pq, index.cluster_docs),
+        "sharded-pq": index_lib.IndexReader.open(v2, verify="full")
+        .open_store(cluster_docs=index.cluster_docs),
+    }
+    results = {}
+    for name, store in stores.items():
+        ids, scores, _ = pipeline.retrieve(cfg, index, store, qs.q_dense,
+                                           q_terms, q_weights)
+        results[name] = (np.asarray(ids), np.asarray(scores))
+
+    ref_ids, ref_scores = results["inmemory"]
+    for name in ("disk", "sharded-disk"):       # exact backends: identical
+        np.testing.assert_array_equal(results[name][0], ref_ids,
+                                      err_msg=f"{case}:{name}")
+        np.testing.assert_allclose(results[name][1], ref_scores,
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{case}:{name}")
+    ref_mrr = mrr_at(ref_ids, qs.rel_doc)
+    for name in ("pq", "sharded-pq"):           # PQ backends: bounded delta
+        got_mrr = mrr_at(results[name][0], qs.rel_doc)
+        assert abs(got_mrr - ref_mrr) <= 0.02, (case, name, ref_mrr, got_mrr)
+    # the two PQ encodings score the same quantized vectors
+    np.testing.assert_allclose(results["sharded-pq"][1], results["pq"][1],
+                               rtol=1e-4, atol=1e-4, err_msg=case)
+
+
+def test_host_scoring_kernel_path_matches(tiny):
+    """score_selected_host(use_kernel=True) routes the unique-block dots
+    through the cluster_score Pallas kernel — same fused results."""
+    cfg, corpus, index, qs = tiny
+    with tempfile.TemporaryDirectory() as d:
+        store = DiskStore.create(os.path.join(d, "b.bin"),
+                                 index.embeddings, index.cluster_docs)
+        ids_ref, _, _ = pipeline.retrieve(cfg, index, store, qs.q_dense,
+                                          qs.q_terms, qs.q_weights)
+        ids_k, _, _ = pipeline.retrieve(cfg, index, store, qs.q_dense,
+                                        qs.q_terms, qs.q_weights,
+                                        use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(ids_k), np.asarray(ids_ref))
+
+
+# ---------------------------------------------------------------------------
 # LRU block cache
 # ---------------------------------------------------------------------------
 

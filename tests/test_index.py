@@ -1,7 +1,10 @@
-"""Persistent index subsystem tests: build -> write -> reopen round trip,
-manifest/checksum rejection of corruption, mmap loading without embedding
-materialization, ShardedDiskStore routing + run coalescing, the
-DiskClusterStore pack/open split, and the offline sharded build pipeline."""
+"""Persistent index subsystem tests: build -> write -> reopen round trip
+(v1 float blocks and v2 PQ code shards), manifest/checksum rejection of
+corruption, v1-reader rejection of v2, mmap loading without embedding
+materialization, sharded-store routing + run coalescing, the
+DiskClusterStore pack/open split, and the offline sharded build pipeline —
+including corpus>RAM streaming builds with read sizes capped by a test
+wrapper."""
 
 import dataclasses
 import json
@@ -17,9 +20,40 @@ from repro import index as index_lib
 from repro.configs import get_config
 from repro.core import clusd as cl
 from repro.core import disk as dk
+from repro.core import quant as quant_lib
+from repro.core import sparse as sparse_lib
 from repro.core import train_lstm as tl
-from repro.data import synth_corpus, synth_queries
+from repro.data import mrr_at, synth_corpus, synth_queries
 from repro.engine import InMemoryStore, RetrievalEngine, pipeline
+
+
+class CappedReads:
+    """Row-indexable embedding source that fails the test if any single
+    read pulls more than `max_rows` rows or the full matrix is
+    materialized — the streaming-build contract, enforced."""
+
+    def __init__(self, arr, max_rows):
+        self._arr = np.asarray(arr)
+        self.max_rows = int(max_rows)
+        self.peak = 0
+        self.shape = self._arr.shape
+        self.dtype = self._arr.dtype
+
+    def __len__(self):
+        return self.shape[0]
+
+    def __array__(self, dtype=None, copy=None):
+        raise AssertionError("full embedding matrix materialized")
+
+    def __getitem__(self, key):
+        out = self._arr[key]
+        rows = int(out.shape[0]) if out.ndim == 2 else 1
+        self.peak = max(self.peak, rows)
+        if rows > self.max_rows:
+            raise AssertionError(
+                f"read {rows} embedding rows in one access "
+                f"(cap {self.max_rows})")
+        return out
 
 
 def _tiny_cfg():
@@ -133,7 +167,7 @@ def test_wrong_format_version_rejected(built, tmp_path):
     mpath = os.path.join(bad, "manifest.json")
     with open(mpath) as f:
         manifest = json.load(f)
-    manifest["format_version"] = index_lib.FORMAT_VERSION + 1
+    manifest["format_version"] = max(index_lib.SUPPORTED_VERSIONS) + 1
     with open(mpath, "w") as f:
         json.dump(manifest, f)
     with pytest.raises(index_lib.IndexFormatError, match="version"):
@@ -238,6 +272,166 @@ def test_disk_cluster_store_pack_open_split(built, tmp_path):
                                  packed.dim)
     with pytest.raises(ValueError, match="n_clusters"):
         dk.DiskClusterStore(path)
+
+
+# ---------------------------------------------------------------------------
+# format v2: PQ code shards
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def built_v2(built, tmp_path_factory):
+    """The same index serialized as a v2 PQ index (explicit trained PQ)."""
+    cfg, corpus, index, _, _, qs = built
+    pq = quant_lib.train_pq(jax.random.key(3), corpus.embeddings, nsub=8)
+    out = str(tmp_path_factory.mktemp("idx_v2") / "index")
+    manifest = index_lib.write_index(
+        out, cfg, index, np.asarray(corpus.embeddings), n_shards=3,
+        format_version=index_lib.FORMAT_VERSION_PQ, pq=pq)
+    return cfg, corpus, index, out, manifest, qs, pq
+
+
+def test_v2_roundtrip_codes_and_postings(built_v2):
+    cfg, corpus, index, out, manifest, qs, pq = built_v2
+    assert manifest["format_version"] == index_lib.FORMAT_VERSION_PQ
+    assert manifest["pq"] is not None
+    assert "codes" not in manifest["pq"]["arrays"]   # codes live in shards
+    reader = index_lib.IndexReader.open(out, verify="full")
+    assert reader.is_pq
+    lcfg, lindex = reader.load_index()
+    assert lcfg == cfg and lindex.embeddings is None
+    # cold open stays cheap: the v2 per-doc code view is NOT rebuilt by
+    # default (serving decodes straight from the shards) ...
+    assert lindex.quantizer is None
+    # ... but rebuilding it on demand recovers exactly the written codes
+    np.testing.assert_array_equal(np.asarray(reader.quantizer().codes),
+                                  np.asarray(pq.codes))
+    # CSR re-pad is lossless: identical sparse retrieval
+    ref_ids, ref_scores = sparse_lib.sparse_retrieve_topk(
+        index.sparse_index, qs.q_terms, qs.q_weights, cfg.k_sparse)
+    got_ids, got_scores = sparse_lib.sparse_retrieve_topk(
+        lindex.sparse_index, qs.q_terms, qs.q_weights, cfg.k_sparse)
+    np.testing.assert_array_equal(np.asarray(got_ids), np.asarray(ref_ids))
+    np.testing.assert_allclose(np.asarray(got_scores),
+                               np.asarray(ref_scores), rtol=1e-6, atol=1e-6)
+
+
+def test_v2_store_decodes_to_pq_reconstruction(built_v2):
+    """ShardedPQStore.fetch_blocks == codebook reconstruction of the same
+    docs (= exact ADC), and I/O bytes count CODE bytes, not float bytes."""
+    _, _, index, out, _, _, pq = built_v2
+    reader = index_lib.IndexReader.open(out)
+    store = reader.open_store()
+    assert isinstance(store, index_lib.ShardedPQStore)
+    cids = np.asarray([0, 1, 2, 17, 31])
+    vecs, docs, valid = store.fetch_blocks(cids)
+    flat_docs = np.where(docs >= 0, docs, 0).reshape(-1)
+    ref = np.asarray(quant_lib.reconstruct(pq, jnp.asarray(flat_docs)))
+    ref = ref.reshape(vecs.shape)
+    np.testing.assert_allclose(np.asarray(vecs)[valid], ref[valid],
+                               rtol=1e-5, atol=1e-5)
+    # [0,1,2] coalesce; [17]; [31] -> 3 ops, and bytes are uint8 codes
+    assert store.stats.n_ops == 3
+    assert store.stats.bytes == 5 * store.cap * store.nsub
+
+
+def test_v2_serving_quality_within_tolerance(built_v2):
+    """Acceptance: v2 PQ serving through the engine stays within 0.02
+    MRR@10 of the float32 in-memory backend on the same queries."""
+    cfg, corpus, _, out, _, qs, _ = built_v2
+    reader = index_lib.IndexReader.open(out, verify="full")
+    lcfg, lindex = reader.load_index()
+    mem = InMemoryStore(corpus.embeddings, lindex.cluster_docs)
+    ref_ids, _, _ = pipeline.retrieve(lcfg, lindex, mem, qs.q_dense,
+                                      qs.q_terms, qs.q_weights)
+    with reader.engine(cfg=lcfg, index=lindex, max_batch=8) as eng:
+        ids, _ = eng.retrieve(qs.q_dense, qs.q_terms, qs.q_weights)
+    ref_mrr = mrr_at(np.asarray(ref_ids), qs.rel_doc)
+    got_mrr = mrr_at(np.asarray(ids), qs.rel_doc)
+    assert abs(ref_mrr - got_mrr) <= 0.02, (ref_mrr, got_mrr)
+    assert eng.stats()["io"]["n_ops"] > 0
+
+
+def test_v2_index_smaller_than_v1(built, built_v2):
+    _, _, _, _, m1, _ = built
+    _, _, _, _, m2, _, _ = built_v2
+    assert m2["total_bytes"] < m1["total_bytes"] / 2, \
+        (m2["total_bytes"], m1["total_bytes"])
+
+
+def test_v1_reader_rejects_v2(built_v2):
+    """Compat rule: a PR-2-era reader (speaks only format 1) must refuse a
+    v2 index up front with a clear error, not misread code shards."""
+    _, _, _, out, _, _, _ = built_v2
+    with pytest.raises(index_lib.IndexFormatError, match="version"):
+        index_lib.load_manifest(out, supported=(index_lib.FORMAT_VERSION,))
+    with pytest.raises(index_lib.IndexFormatError, match="version"):
+        index_lib.IndexReader.open(out,
+                                   supported=(index_lib.FORMAT_VERSION,))
+
+
+# ---------------------------------------------------------------------------
+# corpus > RAM: streaming builds with bounded reads
+# ---------------------------------------------------------------------------
+
+def test_streaming_build_bounded_reads(tmp_path):
+    """build_index_offline + write_index (v1 and v2) over a capped-read
+    source: no single access exceeds the chunk, nothing materializes the
+    matrix, and the result matches the unrestricted build exactly."""
+    cfg = _tiny_cfg()
+    corpus = synth_corpus(5, cfg.n_docs, cfg.dim, cfg.vocab)
+    emb = np.asarray(corpus.embeddings)
+    chunk = 96              # > cluster_cap, << n_docs
+    assert chunk < cfg.n_docs and chunk >= cfg.cluster_cap
+    capped = CappedReads(emb, chunk)
+    index = index_lib.build_index_offline(
+        cfg, jax.random.key(1), capped, corpus.doc_terms,
+        corpus.doc_weights, shard_docs=chunk, kmeans_iters=3)
+    ref = index_lib.build_index_offline(
+        cfg, jax.random.key(1), emb, corpus.doc_terms,
+        corpus.doc_weights, shard_docs=chunk, kmeans_iters=3)
+    np.testing.assert_array_equal(np.asarray(index.cluster_docs),
+                                  np.asarray(ref.cluster_docs))
+    np.testing.assert_allclose(np.asarray(index.centroids),
+                               np.asarray(ref.centroids))
+    assert 0 < capped.peak <= chunk
+
+    for version, name in ((1, "v1"), (2, "v2")):
+        out = str(tmp_path / f"idx_{name}")
+        index_lib.write_index(out, cfg, index, capped, n_shards=3,
+                              format_version=version, chunk_docs=chunk,
+                              pq_nsub=8)
+        index_lib.IndexReader.open(out, verify="full")
+    assert capped.peak <= chunk
+
+
+def test_build_and_serve_from_memmap(tmp_path):
+    """End to end with an actual np.memmap source: offline build matches
+    the in-memory build, and a v2 index written from the memmap serves."""
+    cfg = _tiny_cfg()
+    corpus = synth_corpus(6, cfg.n_docs, cfg.dim, cfg.vocab)
+    emb = np.asarray(corpus.embeddings, np.float32)
+    raw = str(tmp_path / "emb.bin")
+    emb.tofile(raw)
+    mm = np.memmap(raw, dtype=np.float32, mode="r", shape=emb.shape)
+
+    index = index_lib.build_index_offline(
+        cfg, jax.random.key(2), mm, corpus.doc_terms, corpus.doc_weights,
+        shard_docs=128, kmeans_iters=3)
+    ref = index_lib.build_index_offline(
+        cfg, jax.random.key(2), emb, corpus.doc_terms, corpus.doc_weights,
+        shard_docs=128, kmeans_iters=3)
+    np.testing.assert_array_equal(np.asarray(index.cluster_docs),
+                                  np.asarray(ref.cluster_docs))
+
+    out = str(tmp_path / "idx")
+    index_lib.write_index(out, cfg, index, mm, n_shards=2,
+                          format_version=index_lib.FORMAT_VERSION_PQ,
+                          chunk_docs=128, pq_nsub=8)
+    reader = index_lib.IndexReader.open(out, verify="full")
+    qs = synth_queries(8, corpus, 4)
+    with reader.engine(max_batch=4) as eng:
+        ids, _ = eng.retrieve(qs.q_dense, qs.q_terms, qs.q_weights)
+    assert np.asarray(ids).shape[0] == 4
 
 
 # ---------------------------------------------------------------------------

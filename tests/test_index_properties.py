@@ -1,0 +1,215 @@
+"""Property-based invariants for the on-disk index formats (hypothesis,
+falling back to the deterministic tests/_hypothesis_stub.py sweep):
+
+  * arbitrary-geometry write -> read round trips: v1 block shards are
+    byte-identical to reference packing, v2 code shards are code-identical,
+    and CSR postings re-pad losslessly — including odd shapes (n_docs not
+    divisible by cap, single cluster, singleton shards)
+  * full-verify checksums catch ANY single flipped bit in ANY artifact
+  * run-coalesced fetch_clusters returns exactly the same arrays as naive
+    per-cluster reads, with one I/O op per run
+"""
+
+import dataclasses
+import os
+import shutil
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # fall back to deterministic sweeps
+    from _hypothesis_stub import given, settings
+    from _hypothesis_stub import strategies as st
+
+from repro import index as index_lib
+from repro.configs import get_config
+from repro.core import quant as quant_lib
+from repro.core.clusd import CluSDIndex
+from repro.core.disk import pack_blocks
+from repro.core.sparse import SparseIndex
+
+jnp = pytest.importorskip("jax.numpy")
+
+
+def _random_index(seed):
+    """Arbitrary-geometry CluSDIndex built directly (no k-means): a random
+    valid partition of D docs into N clusters of size <= cap, random
+    embeddings, and left-aligned impact-ordered postings."""
+    rng = np.random.default_rng(seed)
+    n_clusters = 1 if seed % 5 == 0 else int(rng.integers(2, 24))
+    cap = int(rng.integers(3, 17))
+    # odd shapes on purpose: D rarely divides cap * n_clusters
+    n_docs = int(rng.integers(1, n_clusters * cap + 1))
+    dim = int(rng.choice([8, 16, 24]))
+    emb = rng.standard_normal((n_docs, dim)).astype(np.float32)
+
+    perm = rng.permutation(n_docs)
+    cd = np.full((n_clusters, cap), -1, np.int32)
+    dc = np.zeros(n_docs, np.int32)
+    sizes = np.zeros(n_clusters, np.int64)
+    for d in perm:                       # random feasible placement
+        c = rng.integers(0, n_clusters)
+        while sizes[c] >= cap:
+            c = (c + 1) % n_clusters
+        cd[c, sizes[c]] = d
+        dc[d] = c
+        sizes[c] += 1
+
+    vocab = int(rng.integers(4, 40))
+    P = int(rng.integers(1, 9))
+    pd = np.full((vocab, P), -1, np.int32)
+    pw = np.zeros((vocab, P), np.float32)
+    for t in range(vocab):               # left-aligned, like SparseIndex.build
+        n = int(rng.integers(0, P + 1))
+        pd[t, :n] = rng.integers(0, n_docs, n)
+        pw[t, :n] = np.sort(rng.random(n).astype(np.float32))[::-1]
+    sp = SparseIndex(jnp.asarray(pd), jnp.asarray(pw), n_docs)
+
+    m = max(1, min(4, n_clusters - 1)) if n_clusters > 1 else 1
+    nb = rng.integers(0, n_clusters, (n_clusters, m)).astype(np.int32)
+    index = CluSDIndex(
+        centroids=jnp.asarray(rng.standard_normal(
+            (n_clusters, dim)).astype(np.float32)),
+        cluster_docs=jnp.asarray(cd), doc_cluster=jnp.asarray(dc),
+        neighbor_ids=jnp.asarray(nb),
+        neighbor_sims=jnp.asarray(rng.random(nb.shape).astype(np.float32)),
+        embeddings=None, sparse_index=sp,
+        bin_ids=jnp.asarray(np.arange(8, dtype=np.int32)))
+    cfg = dataclasses.replace(get_config("clusd-msmarco", "smoke"),
+                              n_docs=n_docs, dim=dim, n_clusters=n_clusters,
+                              vocab=vocab)
+    return cfg, index, emb
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000))
+def test_v1_roundtrip_blocks_byte_identical(tmp_path_factory, seed):
+    cfg, index, emb = _random_index(seed)
+    cd = np.asarray(index.cluster_docs)
+    n_shards = 1 + seed % 4
+    out = str(tmp_path_factory.mktemp("prop_v1") / "index")
+    manifest = index_lib.write_index(out, cfg, index, emb,
+                                     n_shards=n_shards,
+                                     chunk_docs=max(cd.shape[1], 16))
+    assert manifest["format_version"] == 1
+    reader = index_lib.IndexReader.open(out, verify="full")
+    for s in manifest["block_shards"]:
+        lo, hi = s["cluster_lo"], s["cluster_hi"]
+        expected = pack_blocks(emb, cd[lo:hi], np.float32).tobytes()
+        with open(os.path.join(out, s["file"]), "rb") as f:
+            assert f.read() == expected, s["file"]
+    # and the store returns those exact blocks
+    store = reader.open_store()
+    vecs, _, _ = store.fetch_blocks(np.arange(cd.shape[0]))
+    np.testing.assert_array_equal(np.asarray(vecs),
+                                  pack_blocks(emb, cd, np.float32))
+    shutil.rmtree(out, ignore_errors=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_v2_roundtrip_codes_identical(tmp_path_factory, seed):
+    cfg, index, emb = _random_index(seed)
+    cd = np.asarray(index.cluster_docs)
+    nsub = 4 if emb.shape[1] % 4 == 0 else 8
+    pq = quant_lib.train_pq(jax.random.key(seed), jnp.asarray(emb), nsub,
+                            iters=2)
+    codes = np.asarray(pq.codes).astype(np.uint8)
+    out = str(tmp_path_factory.mktemp("prop_v2") / "index")
+    manifest = index_lib.write_index(
+        out, cfg, index, emb, n_shards=1 + seed % 3,
+        format_version=index_lib.FORMAT_VERSION_PQ, pq=pq)
+    reader = index_lib.IndexReader.open(out, verify="full")
+    for s in manifest["block_shards"]:
+        lo, hi = s["cluster_lo"], s["cluster_hi"]
+        block = np.zeros((hi - lo, cd.shape[1], nsub), np.uint8)
+        mask = cd[lo:hi] >= 0
+        block[mask] = codes[cd[lo:hi][mask]]
+        with open(os.path.join(out, s["file"]), "rb") as f:
+            assert f.read() == block.tobytes(), s["file"]
+    # per-doc codes survive the shard round trip exactly
+    _, lindex = reader.load_index()
+    np.testing.assert_array_equal(np.asarray(reader.quantizer().codes),
+                                  np.asarray(pq.codes))
+    # CSR postings re-pad losslessly: same valid (doc, weight) multiset
+    pd = np.asarray(index.sparse_index.postings_docs)
+    pw = np.asarray(index.sparse_index.postings_weights)
+    pd2 = np.asarray(lindex.sparse_index.postings_docs)
+    pw2 = np.asarray(lindex.sparse_index.postings_weights)
+    np.testing.assert_array_equal(pd2[pd2 >= 0], pd[pd >= 0])
+    np.testing.assert_array_equal(pw2[pd2 >= 0], pw[pd >= 0])
+    shutil.rmtree(out, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# checksums + coalescing over one fixed index, many probes
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def prop_index(tmp_path_factory):
+    cfg, index, emb = _random_index(17)          # 17 % 5 != 0: multi-cluster
+    base = tmp_path_factory.mktemp("prop_fix")
+    out1 = str(base / "v1")
+    index_lib.write_index(out1, cfg, index, emb, n_shards=3)
+    pq = quant_lib.train_pq(jax.random.key(0), jnp.asarray(emb),
+                            4 if emb.shape[1] % 4 == 0 else 8, iters=2)
+    out2 = str(base / "v2")
+    index_lib.write_index(out2, cfg, index, emb, n_shards=3,
+                          format_version=index_lib.FORMAT_VERSION_PQ, pq=pq)
+    return out1, out2
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1 << 30))
+def test_full_verify_catches_any_single_bit_flip(prop_index, tmp_path_factory,
+                                                 seed):
+    """Flip one random bit of one random artifact in a copy of the index:
+    verify="full" must reject; verify="none" must not mask the corruption
+    check (it is an explicit opt-out)."""
+    rng = np.random.default_rng(seed)
+    src = prop_index[seed % 2]
+    dst = str(tmp_path_factory.mktemp("flip") / "index")
+    shutil.copytree(src, dst)
+    manifest = index_lib.load_manifest(dst)
+    files = sorted(manifest["files"])
+    rel = files[int(rng.integers(0, len(files)))]
+    path = os.path.join(dst, rel)
+    size = os.path.getsize(path)
+    off = int(rng.integers(0, size))
+    with open(path, "r+b") as f:
+        f.seek(off)
+        byte = f.read(1)[0]
+        f.seek(off)
+        f.write(bytes([byte ^ (1 << int(rng.integers(0, 8)))]))
+    with pytest.raises(index_lib.IndexChecksumError, match="sha256|size"):
+        index_lib.IndexReader.open(dst, verify="full")
+    shutil.rmtree(dst, ignore_errors=True)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1 << 30))
+def test_coalesced_fetch_matches_naive_reads(prop_index, seed):
+    """fetch_clusters over any sorted-unique id set == concatenated
+    one-cluster fetches, for both store kinds, with ops == run count."""
+    rng = np.random.default_rng(seed)
+    for out in prop_index:
+        reader = index_lib.IndexReader.open(out)
+        store = reader.open_store()
+        N = store.n_clusters
+        n_pick = int(rng.integers(1, N + 1))
+        ids = np.sort(rng.choice(N, n_pick, replace=False))
+        batched = np.asarray(store.fetch_clusters(ids))
+        naive = np.concatenate([np.asarray(store.fetch_clusters([i]))
+                                for i in ids])
+        np.testing.assert_array_equal(batched, naive)
+        # ops for the batched read == number of (shard, adjacency) runs
+        fresh = reader.open_store()
+        fresh.fetch_clusters(ids)
+        sid = np.searchsorted(fresh._hi, ids, side="right")
+        runs = 1 + int(((np.diff(ids) != 1) | (np.diff(sid) != 0)).sum())
+        assert fresh.stats.n_ops == runs
+        assert fresh.stats.bytes == n_pick * fresh.block_bytes

@@ -83,3 +83,60 @@ def test_topk(B, D, k, block, rng):
     # values gathered at reported indices must equal reported values
     got = np.take_along_axis(np.asarray(x), np.asarray(i1), axis=1)
     np.testing.assert_allclose(got, np.asarray(v1), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# non-aligned shapes + ties: ref-vs-ops parity off the happy path
+# (interpret mode imposes no TPU tiling constraints, so these geometries
+# exercise the kernel logic itself — index maps, tail tiles, merge order)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,dim,N,cap,S", [
+    (2, 13, 5, 7, 3),        # nothing a power of two or lane-aligned
+    (1, 24, 3, 5, 6),        # S > N: repeated cluster selections per row
+    (3, 8, 2, 1, 2),         # cap = 1 blocks
+    (1, 48, 1, 9, 4),        # single cluster, every slot the same block
+])
+def test_cluster_score_nonaligned(B, dim, N, cap, S, rng):
+    q = jnp.asarray(rng.standard_normal((B, dim)), jnp.float32)
+    blocks = jnp.asarray(rng.standard_normal((N, cap, dim)), jnp.float32)
+    sel = jnp.asarray(rng.integers(0, N, (B, S)), jnp.int32)
+    out = cluster_score(q, blocks, sel)
+    ref = cluster_score_ref(q, blocks, sel)
+    assert out.shape == (B, S, cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,D,k,block", [
+    (2, 37, 11, 8),          # tail tile of 5
+    (1, 5, 5, 3),            # k == D, block > tail
+    (2, 100, 32, 7),         # k >> block: merge keeps more than one tile
+])
+def test_topk_nonaligned_shapes(B, D, k, block, rng):
+    from repro.kernels.topk.kernel import topk_pallas
+    # distinct values: parity must be exact, indices included
+    x = rng.standard_normal((B, D)).astype(np.float32)
+    x += np.arange(D, dtype=np.float32)[None, :] * 1e-3
+    x = jnp.asarray(x)
+    v1, i1 = topk_pallas(x, k, block_d=block, interpret=True)
+    v2, i2 = topk_ref(x, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@pytest.mark.parametrize("block", [4, 7, 16, 64])
+def test_topk_ties_deterministic(block, rng):
+    """Duplicated values everywhere, including runs that span tile
+    boundaries: the blocked merge must reproduce lax.top_k's deterministic
+    lowest-index-first tie-break exactly (values AND indices)."""
+    from repro.kernels.topk.kernel import topk_pallas
+    B, D, k = 3, 50, 17
+    x = jnp.asarray(rng.integers(0, 4, (B, D)), jnp.float32)   # heavy ties
+    v1, i1 = topk_pallas(x, k, block_d=block, interpret=True)
+    v2, i2 = topk_ref(x, k)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    # ties within one kernel call are stable across block sizes too
+    v3, i3 = topk_pallas(x, k, block_d=max(2, block // 2), interpret=True)
+    np.testing.assert_array_equal(np.asarray(i3), np.asarray(i1))
