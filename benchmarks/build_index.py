@@ -21,8 +21,18 @@ the trajectory is comparable across PRs):
   pq                            the v2 build: index_bytes, size_ratio_vs_v1
                                 (acceptance: >= 4x), MRR@10 + delta vs the
                                 float32 serve, code-byte I/O
+  update                        incremental delta (5% upserts + 2% deletes,
+                                shard-localized) applied to the v1 index:
+                                delta wall time vs a timed full rebuild of
+                                the same logical corpus, shard bytes
+                                rewritten vs total, hot-reload serving
+                                check, and top-k parity vs a compacted
+                                (from-scratch serialized) copy.
+                                Acceptance: < 30% of shard bytes rewritten,
+                                < 25% of full-rebuild wall, exact v1 parity.
 
 Standalone: PYTHONPATH=src python -m benchmarks.build_index
+            [--no-bench-update]
 """
 
 import dataclasses
@@ -48,7 +58,135 @@ PQ_NSUB = 12             # 48-dim corpus -> 4-dim subspaces, 16x block shrink
 PQ_ROTATE = True         # OPQ-lite rotation: measured MRR delta ~0.004
 
 
-def run():
+UPSERT_FRAC = 0.05       # acceptance: this delta rewrites < 30% of shard
+DELETE_FRAC = 0.02       # bytes in < 25% of the full-rebuild wall time
+
+
+def bench_update(out_dir, cfg, corpus, qs):
+    """Apply a localized 5% upsert + 2% delete delta to the built v1 index;
+    measure delta wall vs a timed full rebuild of the same logical corpus
+    (k-means + pack, no LSTM — the delta does not retrain either), bytes
+    rewritten vs total shard bytes, hot-reload serving, and top-k parity
+    vs a compacted (= from-scratch serialized) copy of the result."""
+    import shutil
+
+    from repro.launch.update_index import synth_delta
+
+    n_up = int(round(UPSERT_FRAC * cfg.n_docs))
+    n_del = int(round(DELETE_FRAC * cfg.n_docs))
+    reader = index_lib.IndexReader.open(out_dir)
+    delta, info = synth_delta(reader, n_up, n_del, seed=5)
+
+    # one engine serves across the commit: queries before, hot-swap,
+    # after — every retrieve that raises counts as a failed request
+    engine = reader.engine(max_batch=BATCH, cache_capacity=cfg.n_clusters)
+    failed_requests = 0
+
+    def _serve_batch(lo):
+        nonlocal failed_requests
+        try:
+            ids, _ = engine.retrieve(qs.q_dense[lo:lo + BATCH],
+                                     qs.q_terms[lo:lo + BATCH],
+                                     qs.q_weights[lo:lo + BATCH])
+            return np.asarray(ids)
+        except Exception:
+            failed_requests += BATCH
+            return None
+
+    pre_ids = _serve_batch(0)
+    t0 = time.perf_counter()
+    report = index_lib.write_index_delta(out_dir, delta)
+    delta_wall_s = time.perf_counter() - t0
+    engine.reload_index()
+    post_ids = _serve_batch(0)
+    est = engine.stats()
+    engine.close()
+    assert failed_requests == 0, \
+        f"{failed_requests} requests failed across the hot reload"
+    assert pre_ids.shape == post_ids.shape
+    assert est["reloads"] == 1 and est["cache"]["size"] >= 0
+
+    # full-rebuild baseline on the SAME logical corpus (append new docs,
+    # overwrite replaced rows, blank deleted docs' terms), timed like the
+    # delta: clustering + packing, no selector training on either side
+    emb0 = np.asarray(corpus.embeddings, np.float32)
+    n_app = int((delta.upsert_ids >= cfg.n_docs).sum())
+    emb_new = np.concatenate(
+        [emb0, np.zeros((n_app, emb0.shape[1]), np.float32)])
+    emb_new[delta.upsert_ids] = delta.upsert_embeddings
+    dt = np.concatenate([np.asarray(corpus.doc_terms),
+                         np.full((n_app,) + corpus.doc_terms.shape[1:], -1,
+                                 np.int32)])
+    dw = np.concatenate([np.asarray(corpus.doc_weights),
+                         np.zeros((n_app,) + corpus.doc_weights.shape[1:],
+                                  np.float32)])
+    dt[delta.upsert_ids] = delta.upsert_terms
+    dw[delta.upsert_ids] = delta.upsert_weights
+    dt[delta.delete_ids] = -1
+    dw[delta.delete_ids] = 0.0
+    rcfg = dataclasses.replace(cfg, n_docs=int(emb_new.shape[0]))
+    rebuild_dir = out_dir + "_rebuild"
+    t1 = time.perf_counter()
+    ridx = index_lib.build_index_offline(
+        rcfg, jax.random.key(0), emb_new, dt, dw,
+        shard_docs=math.ceil(rcfg.n_docs / N_SHARDS))
+    index_lib.write_index(rebuild_dir, rcfg, ridx, emb_new,
+                          n_shards=N_SHARDS)
+    rebuild_wall_s = time.perf_counter() - t1
+
+    # parity: the updated index vs its compaction (by the update-subsystem
+    # invariant, compaction == from-scratch serialization of this state)
+    comp_dir = out_dir + "_compacted"
+    if os.path.exists(comp_dir):
+        shutil.rmtree(comp_dir)
+    shutil.copytree(out_dir, comp_dir)
+    index_lib.compact_index(comp_dir)
+    nq = 2 * BATCH
+    with index_lib.IndexReader.open(out_dir).engine(max_batch=BATCH) as e1:
+        live_ids, _ = e1.retrieve(qs.q_dense[:nq], qs.q_terms[:nq],
+                                  qs.q_weights[:nq])
+    with index_lib.IndexReader.open(comp_dir).engine(max_batch=BATCH) as e2:
+        comp_ids, _ = e2.retrieve(qs.q_dense[:nq], qs.q_terms[:nq],
+                                  qs.q_weights[:nq])
+    exact = bool(np.array_equal(np.asarray(live_ids), np.asarray(comp_ids)))
+    mrr_live = round(mrr_at(np.asarray(live_ids), qs.rel_doc[:nq]), 4)
+    mrr_comp = round(mrr_at(np.asarray(comp_ids), qs.rel_doc[:nq]), 4)
+
+    bytes_frac = report["bytes_rewritten_frac"]
+    wall_ratio = delta_wall_s / rebuild_wall_s
+    assert exact, ("updated index diverged from its compacted "
+                   "(from-scratch serialized) copy")
+    assert bytes_frac < 0.30, \
+        f"delta rewrote {bytes_frac:.0%} of shard bytes (need < 30%)"
+    assert wall_ratio < 0.25, \
+        f"delta took {wall_ratio:.0%} of full-rebuild wall (need < 25%)"
+    return {
+        "upsert_frac": UPSERT_FRAC,
+        "delete_frac": DELETE_FRAC,
+        "n_upserts": report["n_upserts"],
+        "n_deletes": report["n_deletes"],
+        "n_replaced": report["n_replaced"],
+        "n_appended": report["n_appended"],
+        "target_shards": info["target_shards"],
+        "generation": report["generation"],
+        "wall_s": round(delta_wall_s, 3),
+        "full_rebuild_wall_s": round(rebuild_wall_s, 3),
+        "wall_ratio": round(wall_ratio, 4),
+        "bytes_rewritten": report["bytes_rewritten"],
+        "shard_bytes_total": report["shard_bytes_total"],
+        "bytes_rewritten_frac": bytes_frac,
+        "shards_rewritten": report["shards_rewritten"],
+        "n_shards": report["n_shards"],
+        "reclustered_shards": report["reclustered_shards"],
+        "reload": {"reloads": est["reloads"],
+                   "cache_clears": est["cache"]["clears"],
+                   "failed_requests": failed_requests},
+        "parity": {"exact": exact, "MRR@10_updated": mrr_live,
+                   "MRR@10_compacted": mrr_comp},
+    }
+
+
+def run(bench_update_row=True):
     cfg = dataclasses.replace(C.bench_cfg(), n_docs=N_DOCS,
                               train_queries=256, epochs=15)
     corpus = synth_corpus(0, cfg.n_docs, cfg.dim, cfg.vocab, topic_noise=0.5)
@@ -126,6 +264,11 @@ def run():
     assert abs(mrr_pq - mrr_v1) <= 0.02, \
         f"v2 MRR@10 {mrr_pq} vs v1 {mrr_v1}: outside 0.02 tolerance"
 
+    # ---- incremental update: delta vs full rebuild (--bench-update) ----
+    update_row = None
+    if bench_update_row:
+        update_row = bench_update(out_dir, cfg, corpus, qs)
+
     result = {
         "bench": "build_index", **C.bench_meta(cfg),
         "n_shards": N_SHARDS,
@@ -153,6 +296,8 @@ def run():
             "io": st_pq.get("io", {}),
         },
     }
+    if update_row is not None:
+        result["update"] = update_row
     out = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "BENCH_index.json"))
     with open(out, "w") as f:
@@ -162,8 +307,18 @@ def run():
 
 
 if __name__ == "__main__":
+    import argparse
     import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    res = run()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench-update", dest="bench_update",
+                    action="store_true", default=True,
+                    help="measure the incremental-delta 'update' row "
+                         "(default on)")
+    ap.add_argument("--no-bench-update", dest="bench_update",
+                    action="store_false",
+                    help="skip the update row (faster local runs)")
+    args = ap.parse_args()
+    res = run(bench_update_row=args.bench_update)
     print(json.dumps({k: v for k, v in res.items() if k != "cluster_fill"},
                      indent=1))

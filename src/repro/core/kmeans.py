@@ -97,6 +97,37 @@ def kmeans_shards(rng, shards, n_clusters, iters=15):
     return centroids, jnp.asarray(assign, dtype=jnp.int32)
 
 
+def lloyd_refine(X, centroids, iters=4):
+    """Deterministic local Lloyd's refinement from a centroid init — no
+    random reseeding, pure host numpy. This is the re-clustering primitive
+    of the incremental index updater (repro.index.update): when a shard's
+    clusters overflow or go lopsided after upserts, its member vectors are
+    re-refined *locally*, initialized from the shard's current centroids,
+    so the result is reproducible and never depends on clusters outside
+    the shard. Empty clusters keep their previous centroid (a reseed would
+    need randomness and would break delta/compaction parity).
+
+    X: (n, dim) member vectors; centroids: (k, dim) init.
+    Returns (refined centroids (k, dim) f32, assignments (n,) int64).
+    """
+    X = np.asarray(X, np.float32)
+    C = np.asarray(centroids, np.float32).copy()
+    x2 = (X * X).sum(axis=1)[:, None]
+
+    def assign_to(C):
+        d2 = x2 + (C * C).sum(axis=1)[None, :] - 2.0 * X @ C.T
+        return np.argmin(d2, axis=1)
+
+    assign = assign_to(C)
+    for _ in range(int(iters)):
+        for c in range(C.shape[0]):
+            sel = assign == c
+            if sel.any():
+                C[c] = X[sel].mean(axis=0)
+        assign = assign_to(C)
+    return C, assign
+
+
 def gather_rows_chunked(X, idx, chunk_rows=8192):
     """Gather X[idx] in bounded fancy-index reads — X only needs row
     indexing (np.memmap or any capped/lazy source works; the full matrix is

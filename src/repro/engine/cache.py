@@ -20,6 +20,7 @@ class BlockCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.clears = 0      # full invalidations (index generation swaps)
 
     def __len__(self):
         with self._lock:
@@ -104,9 +105,15 @@ class BlockCache:
 
     def stats(self):
         return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "size": len(self),
+                "evictions": self.evictions, "clears": self.clears,
+                "size": len(self),
                 "capacity": self.capacity, "hit_rate": round(self.hit_rate(), 4)}
 
     def clear(self):
+        """Drop every cached block (cluster ids name different blocks after
+        an index generation swap — RetrievalEngine.reload_index calls this
+        under its swap lock). Hit/miss counters are preserved; `clears`
+        records the invalidation."""
         with self._lock:
             self._blocks.clear()
+            self.clears += 1

@@ -13,11 +13,20 @@ Three serving optimizations on top of engine/pipeline.py:
     still running, so by the time the selection lands, most selected
     blocks are already cache hits.
 
+Plus zero-downtime index swaps: `reload_index()` hops a serving engine to
+a newer committed index generation (repro.index.update) between batches —
+the store/arrays are rebuilt from the reader, compiled buckets and the
+block cache are invalidated (geometry may have changed), and the prefetch
+worker is quiesced across the swap so no stale block can repopulate the
+fresh cache. In-flight batches finish on the old generation; no request
+ever fails.
+
 Usage:
     engine = RetrievalEngine(cfg, index)                  # in-memory / PQ
     engine = RetrievalEngine(cfg, index, store=DiskStore(...))
     ids, scores = engine.retrieve(q_dense, q_terms, q_weights)
     engine.stats()   # latency percentiles, cache hit rate, I/O counters
+    engine.reload_index()   # adopt a newer generation (reader-backed)
     engine.close()
 """
 
@@ -70,6 +79,7 @@ class ServeStats:
     batches: List[BatchRecord] = dataclasses.field(default_factory=list)
     prefetch_enqueued: int = 0
     prefetch_errors: int = 0
+    reloads: int = 0
 
     def record(self, size, bucket, compiled, ms):
         self.n_queries += size
@@ -114,7 +124,7 @@ class RetrievalEngine:
 
     def __init__(self, cfg, index, store=None, *, max_batch=256,
                  cache_capacity=512, prefetch=True, prefetch_depth=None,
-                 k=None):
+                 k=None, reader=None):
         self.cfg = cfg
         self.index = index
         self.store = store if store is not None \
@@ -122,6 +132,10 @@ class RetrievalEngine:
         self.is_host = bool(getattr(self.store, "is_host", False))
         self.max_batch = max(1, max_batch)
         self.k = k or cfg.k_final
+        self.reader = reader            # IndexReader backing reload_index()
+        self._prefetch_enabled = bool(prefetch)
+        self._swap_lock = threading.RLock()   # serving vs reload_index
+        self._pf_drop = False           # quiesce flag across index swaps
         self.serve_stats = ServeStats()
         self.cache = BlockCache(cache_capacity) \
             if (self.is_host and cache_capacity) else None
@@ -133,15 +147,18 @@ class RetrievalEngine:
         self._fns: Dict[Any, Any] = {}          # (kind, bucket) -> jitted fn
         self._pf_q = None
         self._pf_thread = None
-        if prefetch and self.is_host and self.cache is not None:
+        self._start_prefetch()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _start_prefetch(self):
+        if self._prefetch_enabled and self.is_host and self.cache is not None:
             self._pf_q = queue.Queue(maxsize=64)
             self._pf_thread = threading.Thread(target=self._prefetch_worker,
                                                daemon=True)
             self._pf_thread.start()
 
-    # -- lifecycle ----------------------------------------------------------
-
-    def close(self):
+    def _stop_prefetch(self):
         if self._pf_q is not None:
             self._pf_q.put(None)
             # unbounded join: the queue is bounded and fetches are chunked,
@@ -149,6 +166,48 @@ class RetrievalEngine:
             self._pf_thread.join()
             self._pf_q = None
             self._pf_thread = None
+
+    def close(self):
+        self._stop_prefetch()
+
+    def reload_index(self, reader=None, *, verify="none"):
+        """Hot-swap to the index's current committed generation with no
+        downtime: re-reads the manifest (`IndexReader.refresh`), rebuilds
+        the arrays/store, and atomically replaces them between batches —
+        compiled buckets and the block cache are invalidated (geometry and
+        doc membership may have changed), and the prefetch worker is
+        stopped across the swap so an in-flight prefetch of the OLD
+        generation can never repopulate the fresh cache.
+
+        `reader` defaults to the one the engine was constructed with
+        (`IndexReader.engine()` wires it). Returns the generation now
+        being served. Safe to call from a control thread while another
+        thread serves: in-flight batches finish on the old generation."""
+        reader = reader if reader is not None else self.reader
+        if reader is None:
+            raise ValueError("reload_index needs an IndexReader (construct "
+                             "the engine via IndexReader.engine, or pass "
+                             "reader=)")
+        reader.refresh(verify=verify)
+        cfg, index = reader.load_index()
+        store = reader.open_store(cluster_docs=index.cluster_docs)
+        # quiesce prefetch: drop queued candidate ids and wait out any
+        # fetch against the old store before the cache is cleared
+        restart = self._pf_thread is not None
+        self._pf_drop = True
+        if restart:
+            self._stop_prefetch()
+        with self._swap_lock:
+            self.cfg, self.index, self.store = cfg, index, store
+            self.reader = reader
+            self._fns.clear()           # bucket shapes/geometry changed
+            if self.cache is not None:
+                self.cache.clear()      # block ids now name new-gen blocks
+            self.serve_stats.reloads += 1
+        self._pf_drop = False
+        if restart:
+            self._start_prefetch()
+        return reader.generation
 
     def __enter__(self):
         return self
@@ -164,6 +223,8 @@ class RetrievalEngine:
             cids = self._pf_q.get()
             if cids is None:
                 return
+            if self._pf_drop:
+                continue        # reload in progress: stale candidate ids
             try:
                 # record=False: prefetch probes must not skew the serving
                 # hit-rate; single-flight inside keeps the serving thread
@@ -181,14 +242,15 @@ class RetrievalEngine:
 
     def _enqueue_prefetch(self, cand):
         """cand: (B, n_candidates) host array, stage-1 ordered."""
-        if self._pf_q is None:
+        q = self._pf_q     # snapshot: reload_index() may null the attribute
+        if q is None:      # between this check and the put (TOCTOU)
             return
         cids = np.unique(np.asarray(cand)[:, :self.prefetch_depth])
         cids = [int(c) for c in cids if int(c) not in self.cache]
         if not cids:
             return
         try:
-            self._pf_q.put_nowait(cids)
+            q.put_nowait(cids)
             self.serve_stats.prefetch_enqueued += len(cids)
         except queue.Full:
             pass
@@ -259,22 +321,25 @@ class RetrievalEngine:
                 jnp.concatenate(out_scores, axis=0))
 
     def _retrieve_chunk(self, q_dense, q_terms, q_weights):
-        n = int(np.asarray(q_dense).shape[0])
-        bucket = bucket_size(n, self.max_batch)
-        compiled = self._bucket_is_cold(bucket)
-        pad = bucket - n
-        qd = jnp.asarray(_pad_rows(q_dense, pad))
-        qt = jnp.asarray(_pad_rows(q_terms, pad))
-        qw = jnp.asarray(_pad_rows(q_weights, pad))
-        t0 = time.perf_counter()
-        if self.is_host:
-            ids, scores = self._serve_host(bucket, qd, qt, qw)
-        else:
-            ids, scores, _ = self._device_fn(bucket)(qd, qt, qw)
-        ids.block_until_ready()
-        self.serve_stats.record(n, bucket, compiled,
-                                (time.perf_counter() - t0) * 1e3)
-        return ids[:n], scores[:n]
+        # one chunk serves entirely on one index generation: reload_index
+        # takes the same lock, so swaps land between chunks, never inside
+        with self._swap_lock:
+            n = int(np.asarray(q_dense).shape[0])
+            bucket = bucket_size(n, self.max_batch)
+            compiled = self._bucket_is_cold(bucket)
+            pad = bucket - n
+            qd = jnp.asarray(_pad_rows(q_dense, pad))
+            qt = jnp.asarray(_pad_rows(q_terms, pad))
+            qw = jnp.asarray(_pad_rows(q_weights, pad))
+            t0 = time.perf_counter()
+            if self.is_host:
+                ids, scores = self._serve_host(bucket, qd, qt, qw)
+            else:
+                ids, scores, _ = self._device_fn(bucket)(qd, qt, qw)
+            ids.block_until_ready()
+            self.serve_stats.record(n, bucket, compiled,
+                                    (time.perf_counter() - t0) * 1e3)
+            return ids[:n], scores[:n]
 
     def _serve_host(self, bucket, qd, qt, qw):
         sid, ss, cand, feats = self._stage1_fn(bucket)(qd, qt, qw)
@@ -295,7 +360,10 @@ class RetrievalEngine:
                "qps_steady": round(self.serve_stats.steady_qps(), 1),
                "prefetch_enqueued": self.serve_stats.prefetch_enqueued,
                "prefetch_errors": self.serve_stats.prefetch_errors,
+               "reloads": self.serve_stats.reloads,
                **self.serve_stats.latency_percentiles()}
+        if self.reader is not None:
+            out["generation"] = self.reader.generation
         if self.cache is not None:
             out["cache"] = self.cache.stats()
         io = getattr(self.store, "stats", None)

@@ -23,7 +23,11 @@ Backends additionally expose:
 Five backends speak the protocol: InMemoryStore and PQStore (device),
 DiskStore, and — re-exported from repro.index.sharded — ShardedDiskStore
 (format-v1 float block shards) and ShardedPQStore (format-v2 PQ code
-shards, decode-on-fetch ADC).
+shards, decode-on-fetch ADC). The sharded stores additionally accept an
+incrementally-updated index's tombstone bitmap and mask deleted slots at
+fetch time (docs=-1/valid=False; the shard bytes are never rewritten for
+a delete). The full contract — fetch semantics, IOStats run-counting,
+thread safety — is documented in engine/README.md.
 """
 
 from typing import Protocol, runtime_checkable

@@ -1,22 +1,27 @@
 """Persistent sharded index subsystem: offline build pipeline, versioned
-on-disk format (v1 float blocks, v2 PQ code shards), and an mmap loader
-that feeds the engine stores. See README.md in this directory for the
-manifest schema and shard layout."""
+on-disk format (v1 float blocks, v2 PQ code shards), an mmap loader that
+feeds the engine stores, and incremental updates (upsert/delete deltas,
+tombstones, atomic generations, compaction). See README.md in this
+directory for the manifest schema, shard layout, and update protocol."""
 
 from repro.index.builder import (
-    RowSlice, build_index_offline, embedding_shards, shard_ranges,
-    write_index)
+    RowSlice, build_index_offline, embedding_shards, postings_csr,
+    shard_ranges, write_index)
 from repro.index.format import (
     FORMAT_VERSION, FORMAT_VERSION_PQ, SUPPORTED_VERSIONS,
     IndexChecksumError, IndexFormatError, file_sha256, load_manifest,
-    verify_files)
+    manifest_generation, verify_files)
 from repro.index.reader import IndexReader
 from repro.index.sharded import ShardedDiskStore, ShardedPQStore
+from repro.index.update import (
+    IndexDelta, apply_delta_to_index, compact_index, write_index_delta)
 
 __all__ = [
     "FORMAT_VERSION", "FORMAT_VERSION_PQ", "IndexChecksumError",
-    "IndexFormatError", "IndexReader", "RowSlice", "SUPPORTED_VERSIONS",
-    "ShardedDiskStore", "ShardedPQStore", "build_index_offline",
-    "embedding_shards", "file_sha256", "load_manifest", "shard_ranges",
-    "verify_files", "write_index",
+    "IndexDelta", "IndexFormatError", "IndexReader", "RowSlice",
+    "SUPPORTED_VERSIONS", "ShardedDiskStore", "ShardedPQStore",
+    "apply_delta_to_index", "build_index_offline", "compact_index",
+    "embedding_shards", "file_sha256", "load_manifest",
+    "manifest_generation", "postings_csr", "shard_ranges", "verify_files",
+    "write_index", "write_index_delta",
 ]

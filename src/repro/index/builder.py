@@ -59,6 +59,8 @@ _ARRAY_DTYPES = {
     "sparse_postings_data": np.int32,
     "sparse_postings_wdata": np.float32,
     "sparse_postings_indptr": np.int64,
+    # incremental updates (repro.index.update): per-slot delete bitmap
+    "tombstones": np.uint8,
 }
 
 DEFAULT_CHUNK_DOCS = 1 << 16
@@ -168,16 +170,45 @@ def _write_code_blocks(path, codes, cd):
     block.tofile(path)
 
 
-def _postings_csr(sp):
-    """Compact the padded (V, P) posting arrays to CSR (lossless: padding
-    never affects retrieval — scores are scatter-adds over valid entries)."""
-    pd = np.asarray(sp.postings_docs)
-    pw = np.asarray(sp.postings_weights)
+def postings_csr(postings_docs, postings_weights):
+    """Compact padded (V, P) posting arrays to CSR (lossless: padding never
+    affects retrieval — scores are scatter-adds over valid entries). The
+    padded width P never influences the CSR bytes, so any re-padded view of
+    the same postings serializes identically (the invariant the incremental
+    update path relies on)."""
+    pd = np.asarray(postings_docs)
+    pw = np.asarray(postings_weights)
     valid = pd >= 0
     counts = valid.sum(axis=1)
     indptr = np.zeros(pd.shape[0] + 1, np.int64)
     np.cumsum(counts, out=indptr[1:])
     return pd[valid].astype(np.int32), pw[valid].astype(np.float32), indptr
+
+
+def _postings_csr(sp):
+    return postings_csr(sp.postings_docs, sp.postings_weights)
+
+
+def postings_from_csr(data, wdata, indptr, min_width=1):
+    """Inverse of `postings_csr`: re-pad CSR postings into (V, P) arrays,
+    P = max(min_width, longest row). Lossless — the pad width never
+    affects retrieval. The single implementation behind both the serving
+    re-pad (IndexReader) and the delta path (index/update.py), which
+    passes min_width=cfg.max_postings so truncation behaves like the
+    original build."""
+    data = np.asarray(data)
+    wdata = np.asarray(wdata)
+    indptr = np.asarray(indptr)
+    counts = np.diff(indptr)
+    V = len(counts)
+    P = int(max(min_width, counts.max() if V else 0, 1))
+    pd = np.full((V, P), -1, np.int32)
+    pw = np.zeros((V, P), np.float32)
+    cols = np.arange(P)[None, :]
+    mask = cols < counts[:, None]
+    pd[mask] = data
+    pw[mask] = wdata
+    return pd, pw
 
 
 def _write_pq_arrays(tmp, pq_arrays, nsub, dtype=None):
@@ -211,7 +242,8 @@ def _index_pq(index, embeddings, pq, pq_nsub, chunk_docs):
 def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
                 block_dtype=np.float32, extra=None,
                 format_version=fmt.FORMAT_VERSION, pq=None, pq_nsub=8,
-                chunk_docs=DEFAULT_CHUNK_DOCS):
+                chunk_docs=DEFAULT_CHUNK_DOCS, generation=0,
+                parent_generation=None):
     """Serialize `index` + packed cluster blocks under `out_dir` (atomic:
     staged in `<out_dir>.tmp`, committed by rename). Returns the manifest.
 
@@ -219,6 +251,10 @@ def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
     shards (using `pq`, else `index.quantizer`, else codebooks trained here)
     plus CSR-compacted postings. `embeddings` may be an np.memmap: all reads
     are bounded by `chunk_docs` rows.
+
+    `generation`/`parent_generation` stamp the manifest for the incremental
+    update protocol (repro.index.update): fresh builds are generation 0;
+    `compact_index` rewrites the whole layout at `old generation + 1`.
     """
     if format_version not in fmt.SUPPORTED_VERSIONS:
         raise ValueError(f"format_version {format_version} not in "
@@ -308,6 +344,9 @@ def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
     manifest = {
         "format_version": format_version,
         "kind": "clusd-index",
+        "generation": int(generation),
+        "parent_generation": None if parent_generation is None
+        else int(parent_generation),
         "config": dataclasses.asdict(cfg),
         "geometry": geometry,
         "arrays": array_paths,

@@ -44,10 +44,37 @@ store and the sparse-postings encoding:
 v1 readers (format PR 2) reject v2 manifests up front via the
 format_version check; pass supported=(1,) to load_manifest to emulate one.
 
+Generations (incremental updates, repro.index.update):
+
+  generation        : int — 0 for a fresh `write_index` build; each
+                      committed delta bumps it by one. ADDITIVE: readers
+                      that predate generations treat a missing key as 0.
+  parent_generation : the generation this manifest was derived from
+                      (null for a fresh build)
+  arrays.tombstones : optional (n_clusters, cap) uint8 bitmap; slot
+                      (c, i) == 1 means cluster_docs[c, i] is deleted.
+                      Stores mask tombstoned slots at fetch time — the
+                      shard bytes on disk are NOT rewritten for deletes.
+  update_stats      : bookkeeping of the last delta commit (bytes
+                      rewritten, shards touched, upsert/delete counts)
+
+  Delta commits never mutate existing artifact files. New/changed
+  artifacts get generation-suffixed names (`centroids.g3.npy`,
+  `blocks/shard_00002.g3.bin`); unchanged artifacts are carried by
+  reference in `arrays`/`block_shards`. The previous manifest is archived
+  to `manifests/manifest.g<g>.json` before the new one atomically
+  replaces `manifest.json` — so every older generation stays readable
+  (`load_manifest(dir, generation=g)`) until `compact_index` folds the
+  history into a fresh single-generation layout.
+
 Integrity levels (IndexReader.open(verify=...)):
   "none" — trust the manifest
   "size" — every listed file exists with the exact byte size (cheap; default)
   "full" — additionally sha256 every file (reads everything once)
+
+`files`/`total_bytes` always describe the LIVE artifact set of that
+manifest's generation — files belonging only to older generations are
+not listed (their checksums live in the archived manifests).
 """
 
 import hashlib
@@ -58,6 +85,7 @@ FORMAT_VERSION = 1            # float32 block shards (PR 2 layout)
 FORMAT_VERSION_PQ = 2         # PQ code shards + CSR postings
 SUPPORTED_VERSIONS = (FORMAT_VERSION, FORMAT_VERSION_PQ)
 MANIFEST_NAME = "manifest.json"
+MANIFEST_HISTORY_DIR = "manifests"
 VERIFY_LEVELS = ("none", "size", "full")
 
 
@@ -100,12 +128,58 @@ def write_manifest(index_dir, manifest):
         json.dump(manifest, f, indent=1, sort_keys=True)
 
 
-def load_manifest(index_dir, supported=SUPPORTED_VERSIONS):
+def manifest_generation(manifest):
+    """Generation of a parsed manifest; pre-generation manifests are 0."""
+    return int(manifest.get("generation", 0))
+
+
+def archive_manifest(index_dir, manifest):
+    """Preserve the CURRENT manifest under manifests/manifest.g<g>.json so
+    its generation stays readable after a newer one replaces manifest.json.
+    Called by the delta commit path just before the atomic flip."""
+    hist = os.path.join(index_dir, MANIFEST_HISTORY_DIR)
+    os.makedirs(hist, exist_ok=True)
+    g = manifest_generation(manifest)
+    path = os.path.join(hist, f"manifest.g{g}.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return path
+
+
+def commit_manifest(index_dir, manifest):
+    """Atomically replace manifest.json (write-to-temp + os.replace): a
+    reader racing the commit sees either the old or the new generation,
+    never a torn file."""
+    final = os.path.join(index_dir, MANIFEST_NAME)
+    tmp = final + f".tmp-g{manifest_generation(manifest)}"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
+
+
+def load_manifest(index_dir, supported=SUPPORTED_VERSIONS, generation=None):
     """Parse + version-check the manifest. `supported` restricts which
     format versions this reader speaks — a PR-2 (v1-only) reader is
     `supported=(1,)` and must reject v2 indexes cleanly, which is exactly
-    what this check does."""
+    what this check does.
+
+    `generation=None` (default) loads the current manifest.json; an int
+    loads that archived generation from manifests/ (delta commits keep
+    every older generation readable until compaction)."""
     path = os.path.join(index_dir, MANIFEST_NAME)
+    if generation is not None:
+        current = load_manifest(index_dir, supported=supported)
+        if manifest_generation(current) == int(generation):
+            return current
+        path = os.path.join(index_dir, MANIFEST_HISTORY_DIR,
+                            f"manifest.g{int(generation)}.json")
+        if not os.path.isfile(path):
+            raise IndexFormatError(
+                f"generation {generation} not found in {index_dir} "
+                f"(current is {manifest_generation(current)}; older "
+                f"generations are dropped by compaction)")
     if not os.path.isfile(path):
         raise IndexFormatError(f"no {MANIFEST_NAME} in {index_dir}")
     try:

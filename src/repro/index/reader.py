@@ -60,12 +60,50 @@ class IndexReader:
     def is_pq(self):
         return self.format_version == fmt.FORMAT_VERSION_PQ
 
+    @property
+    def generation(self):
+        """Index generation: 0 for a fresh build, +1 per committed delta
+        (repro.index.update). Missing key (pre-generation manifests) = 0."""
+        return fmt.manifest_generation(self.manifest)
+
+    def refresh(self, verify="none"):
+        """Re-read manifest.json and adopt a newer generation if one was
+        committed since open. Returns True when the generation changed
+        (callers should then rebuild stores/engines — see
+        `RetrievalEngine.reload_index`), False when nothing moved.
+        Delta commits replace the manifest atomically, so this never
+        observes a torn state."""
+        manifest = fmt.load_manifest(self.index_dir)
+        if fmt.manifest_generation(manifest) == self.generation:
+            return False
+        fmt.verify_files(self.index_dir, manifest, level=verify)
+        self.manifest = manifest
+        self.geometry = manifest["geometry"]
+        return True
+
     # -- raw artifacts ------------------------------------------------------
 
     def array(self, name):
         """Mmap a per-index array by logical name (no copy)."""
         rel = self.manifest["arrays"][name]
         return np.load(os.path.join(self.index_dir, rel), mmap_mode="r")
+
+    def tombstones(self):
+        """(n_clusters, cap) uint8 delete bitmap, or None when this
+        generation has no deletes (fresh builds, compacted indexes)."""
+        if "tombstones" not in self.manifest["arrays"]:
+            return None
+        return np.asarray(self.array("tombstones"))
+
+    def masked_cluster_docs(self):
+        """cluster_docs with tombstoned slots already masked to -1 — the
+        doc-id table every serving path should see (deleted docs score as
+        invalid without any shard bytes having been rewritten)."""
+        cd = np.asarray(self.array("cluster_docs"))
+        tomb = self.tombstones()
+        if tomb is None:
+            return cd
+        return np.where(tomb > 0, -1, cd)
 
     def config(self) -> CluSDConfig:
         d = dict(self.manifest["config"])
@@ -94,8 +132,8 @@ class IndexReader:
         index for parity checks and small corpora."""
         g = self.geometry
         codes = np.zeros((g["n_docs"], g["nsub"]), np.uint8)
-        cd = np.asarray(self.array("cluster_docs"))
-        for s in self.manifest["block_shards"]:
+        cd = self.masked_cluster_docs()   # a replaced doc's stale slot is
+        for s in self.manifest["block_shards"]:   # tombstoned — skip it
             lo, hi = s["cluster_lo"], s["cluster_hi"]
             mm = np.memmap(os.path.join(self.index_dir, s["file"]),
                            dtype=np.uint8, mode="r",
@@ -132,17 +170,10 @@ class IndexReader:
                 n_docs=self.geometry["n_docs"])
         # v2: re-pad the CSR postings (lossless — sparse scoring is a
         # scatter-add over valid entries; pad width never changes scores)
-        data = np.asarray(self.array("sparse_postings_data"))
-        wdata = np.asarray(self.array("sparse_postings_wdata"))
-        indptr = np.asarray(self.array("sparse_postings_indptr"))
-        counts = np.diff(indptr)
-        V, P = len(counts), max(1, int(counts.max()) if len(counts) else 1)
-        pd = np.full((V, P), -1, np.int32)
-        pw = np.zeros((V, P), np.float32)
-        cols = np.arange(P)[None, :]
-        mask = cols < counts[:, None]
-        pd[mask] = data
-        pw[mask] = wdata
+        from repro.index.builder import postings_from_csr
+        pd, pw = postings_from_csr(self.array("sparse_postings_data"),
+                                   self.array("sparse_postings_wdata"),
+                                   self.array("sparse_postings_indptr"))
         return SparseIndex(postings_docs=jnp.asarray(pd),
                            postings_weights=jnp.asarray(pw),
                            n_docs=self.geometry["n_docs"])
@@ -162,7 +193,7 @@ class IndexReader:
         cfg = self.config()
         index = CluSDIndex(
             centroids=jnp.asarray(self.array("centroids")),
-            cluster_docs=jnp.asarray(self.array("cluster_docs")),
+            cluster_docs=jnp.asarray(self.masked_cluster_docs()),
             doc_cluster=jnp.asarray(self.array("doc_cluster")),
             neighbor_ids=jnp.asarray(self.array("neighbor_ids")),
             neighbor_sims=jnp.asarray(self.array("neighbor_sims")),
@@ -175,28 +206,35 @@ class IndexReader:
     def open_store(self, cluster_docs=None, stats: IOStats = None):
         """Sharded store over the block shard files (mmap, read-only):
         ShardedDiskStore for v1 float blocks, ShardedPQStore for v2 code
-        shards (decode-on-fetch ADC)."""
+        shards (decode-on-fetch ADC). The generation's tombstone bitmap is
+        handed to the store, which masks deleted slots at fetch time."""
         g = self.geometry
         shards = self.manifest["block_shards"]
         paths = [os.path.join(self.index_dir, s["file"]) for s in shards]
         ranges = [(s["cluster_lo"], s["cluster_hi"]) for s in shards]
+        tomb = self.tombstones()
         if cluster_docs is None:
             cluster_docs = self.array("cluster_docs")
         if self.is_pq:
             return ShardedPQStore(
                 paths, ranges, g["cap"], self._pq_array("codebooks"),
                 cluster_docs, rotation=self._pq_array("rotation"),
-                out_dtype=np.dtype(g["block_dtype"]), stats=stats)
+                out_dtype=np.dtype(g["block_dtype"]), tombstones=tomb,
+                stats=stats)
         return ShardedDiskStore(
             paths, ranges, g["cap"], g["dim"], cluster_docs,
-            dtype=np.dtype(g["block_dtype"]), stats=stats)
+            dtype=np.dtype(g["block_dtype"]), tombstones=tomb, stats=stats)
 
     def engine(self, cfg=None, index=None, **engine_kw):
-        """RetrievalEngine serving this index through the sharded store."""
+        """RetrievalEngine serving this index through the sharded store.
+        The engine keeps a handle on this reader, so
+        `engine.reload_index()` hot-swaps to a newer committed generation
+        (repro.index.update) with no restart."""
         from repro.engine.server import RetrievalEngine
         if index is None:
             loaded_cfg, index = self.load_index()
             cfg = cfg or loaded_cfg
         cfg = cfg if cfg is not None else self.config()
         store = self.open_store(cluster_docs=index.cluster_docs)
-        return RetrievalEngine(cfg, index, store=store, **engine_kw)
+        return RetrievalEngine(cfg, index, store=store, reader=self,
+                               **engine_kw)

@@ -43,7 +43,7 @@ class _ShardedBlockFiles:
     is_host = True
 
     def __init__(self, shard_paths, shard_ranges, record_shape, record_dtype,
-                 cluster_docs, stats: IOStats = None):
+                 cluster_docs, tombstones=None, stats: IOStats = None):
         if len(shard_paths) != len(shard_ranges) or not shard_paths:
             raise ValueError("need one path per shard range")
         self.record_shape = tuple(int(x) for x in record_shape)
@@ -58,8 +58,20 @@ class _ShardedBlockFiles:
             np.memmap(p, dtype=self.record_dtype, mode="r",
                       shape=(int(hi - lo),) + self.record_shape)
             for p, (lo, hi) in zip(shard_paths, shard_ranges)]
-        self.cluster_docs = jnp.asarray(cluster_docs)
-        self.cluster_docs_np = np.asarray(cluster_docs)
+        # tombstone masking happens HERE, at the doc-id table the fetch
+        # paths consult: a deleted slot's bytes stay on disk (deletes are
+        # zero-rewrite), but fetch_blocks reports it as docs=-1/valid=False
+        # and the host scoring path never scores it.
+        cd = np.asarray(cluster_docs)
+        if tombstones is not None:
+            tomb = np.asarray(tombstones)
+            if tomb.shape != cd.shape:
+                raise ValueError(f"tombstones shape {tomb.shape} != "
+                                 f"cluster_docs shape {cd.shape}")
+            cd = np.where(tomb > 0, -1, cd)
+        self.tombstones = tombstones
+        self.cluster_docs = jnp.asarray(cd)
+        self.cluster_docs_np = cd
         # bytes that actually cross the disk boundary per cluster record
         self.block_bytes = int(np.prod(self.record_shape)) * \
             self.record_dtype.itemsize
@@ -130,11 +142,12 @@ class ShardedDiskStore(_ShardedBlockFiles):
     """Format-v1 backend: raw float cluster blocks, returned as read."""
 
     def __init__(self, shard_paths, shard_ranges, cap, dim, cluster_docs,
-                 dtype=np.float32, stats: IOStats = None):
+                 dtype=np.float32, tombstones=None, stats: IOStats = None):
         """shard_paths[i] holds clusters [shard_ranges[i][0], shard_ranges[i][1])
         as a raw (hi-lo, cap, dim) block tensor."""
         super().__init__(shard_paths, shard_ranges, (int(cap), int(dim)),
-                         dtype, cluster_docs, stats=stats)
+                         dtype, cluster_docs, tombstones=tombstones,
+                         stats=stats)
         self.cap, self.dim = int(cap), int(dim)
         self.dtype = self.record_dtype
 
@@ -151,7 +164,7 @@ class ShardedPQStore(_ShardedBlockFiles):
 
     def __init__(self, shard_paths, shard_ranges, cap, codebooks,
                  cluster_docs, rotation=None, out_dtype=np.float32,
-                 stats: IOStats = None):
+                 tombstones=None, stats: IOStats = None):
         self.codebooks = np.asarray(codebooks, np.float32)
         if self.codebooks.ndim != 3:
             raise ValueError(f"codebooks must be (nsub, n_codes, dsub), "
@@ -160,7 +173,8 @@ class ShardedPQStore(_ShardedBlockFiles):
         self.rotation = None if rotation is None \
             else np.asarray(rotation, np.float32)
         super().__init__(shard_paths, shard_ranges, (int(cap), self.nsub),
-                         np.uint8, cluster_docs, stats=stats)
+                         np.uint8, cluster_docs, tombstones=tombstones,
+                         stats=stats)
         self.cap = int(cap)
         self.dim = int(self.nsub * self.codebooks.shape[2])
         self.dtype = np.dtype(out_dtype)

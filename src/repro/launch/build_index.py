@@ -1,6 +1,7 @@
 """Offline index build CLI: cluster, pack, and serialize once — then serve
 from the built directory (`repro.launch.serve --index-dir`) without ever
-rebuilding or materializing the embedding matrix at load time.
+rebuilding or materializing the embedding matrix at load time, and mutate
+it later with `repro.launch.update_index` (incremental deltas).
 
   PYTHONPATH=src python -m repro.launch.build_index --out /tmp/idx \
       --docs 20000 --clusters 256 --shards 8 --train-queries 512
@@ -10,12 +11,25 @@ rebuilding or materializing the embedding matrix at load time.
   PYTHONPATH=src python -m repro.launch.build_index --out /tmp/idx_pq \
       --format-version 2 --pq-nsub 8 --memmap --chunk-docs 4096
 
+Key flags (the full list with defaults is below / `--help`):
+  --format-version {1,2}  1 = float32 block shards; 2 = PQ code shards +
+                          CSR postings (4-16x smaller; served via
+                          decode-on-fetch ADC at exact-ADC numerics)
+  --memmap                stage the synthetic corpus through an np.memmap
+                          and build from it — the corpus>RAM path (LSTM
+                          label generation still uses in-RAM embeddings)
+  --chunk-docs N          bound every embedding read to N rows (0 = one
+                          k-means shard per read); enforced by a capped-
+                          read wrapper test in tests/test_index.py
+  --pq-nsub N             PQ subspaces (v1: optional side artifacts;
+                          v2: the code shards; defaults to 8 under v2)
+
 Pipeline (repro/index/builder.py): sharded Lloyd's k-means over embedding
 shards -> capacity-balanced cluster table -> neighbor graph -> sparse
 inverted index -> optional LSTM selector training (labels need the full
 embeddings; that is fine offline) -> optional PQ codebooks -> per-shard
-cluster-block (v1) or code-block (v2) files + versioned manifest with
-checksums.
+cluster-block (v1) or code-block (v2) files + versioned, checksummed,
+generation-0 manifest (see src/repro/index/README.md).
 """
 
 import argparse
@@ -47,7 +61,12 @@ def build_cfg(args):
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    # __doc__ IS the epilog: the module docstring and --help can never
+    # drift apart (CI smoke-tests --help for every repro.launch CLI)
+    ap = argparse.ArgumentParser(
+        description="Build a persistent CluSD index offline (cluster, "
+                    "pack, serialize + checksummed manifest).",
+        epilog=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--out", required=True, help="index output directory")
     ap.add_argument("--docs", type=int, default=20000)
     ap.add_argument("--dim", type=int, default=64)

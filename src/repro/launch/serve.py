@@ -14,16 +14,24 @@ Reports latency percentiles and quality vs the full-retrieval oracle.
 
 With --index-dir, the build step is skipped entirely: the engine serves a
 persistent index built by `python -m repro.launch.build_index` — the
-manifest is validated, arrays are mmapped, and cluster blocks are read
-from the per-shard files through a `ShardedDiskStore` (the embedding
-matrix is never materialized). --check-parity additionally replays the
-queries through the in-memory pipeline and exits non-zero on mismatch.
+manifest is validated (at the --verify level: none/size/full), arrays are
+mmapped, and cluster blocks are read from the per-shard files through a
+`ShardedDiskStore` (v1 float blocks) or `ShardedPQStore` (v2 PQ code
+shards built with `--format-version 2 [--memmap --chunk-docs N]`; codes
+decode through the index codebooks at fetch time — exact-ADC numerics).
+Indexes mutated by `repro.launch.update_index` serve their newest
+generation; deleted docs are tombstone-masked at fetch.
+
+--check-parity replays the queries through the in-memory pipeline and
+exits non-zero on mismatch: exact top-k ids for v1 indexes; for v2 (PQ)
+indexes — approximate by construction — parity is an MRR@10 delta bound,
+tunable with --parity-mrr-tol (default 0.02).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --docs 20000 --queries 256 \
       [--ondisk] [--cache-blocks 512] [--no-prefetch]
   PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/idx \
-      --queries 64 [--verify full] [--check-parity]
+      --queries 64 [--verify full] [--check-parity [--parity-mrr-tol T]]
 """
 
 import argparse
@@ -90,6 +98,14 @@ def serve_from_index(args):
           f"cache hit rate {cache.get('hit_rate', 0.0):.2f}")
 
     if args.check_parity:
+        if reader.generation > 0:
+            print("PARITY UNAVAILABLE: this index has been incrementally "
+                  f"updated (generation {reader.generation}); the "
+                  "synthetic-corpus recipe no longer reproduces its "
+                  "documents, so the in-memory baseline would be stale. "
+                  "Use repro.launch.update_index --check-parity (compares "
+                  "against a compacted copy) instead.")
+            return 1
         mem = InMemoryStore(corpus.embeddings, index.cluster_docs)
         ref_ids, _, _ = pipe_lib.retrieve(
             cfg, index, mem, test_q.q_dense[:args.queries],
@@ -118,7 +134,13 @@ def serve_from_index(args):
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    # __doc__ IS the epilog: the module docstring and --help can never
+    # drift apart (CI smoke-tests --help for every repro.launch CLI)
+    ap = argparse.ArgumentParser(
+        description="Serve CluSD retrieval through the unified "
+                    "RetrievalEngine (in-memory, on-disk, or a persistent "
+                    "built index).",
+        epilog=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--docs", type=int, default=20000)
     ap.add_argument("--dim", type=int, default=64)
     ap.add_argument("--clusters", type=int, default=256)

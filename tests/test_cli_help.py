@@ -1,0 +1,56 @@
+"""Every repro.launch CLI must answer `--help` with exit code 0, and the
+build/serve help text must be the single source of truth for the flags it
+documents (the PR-3 flags drifted out of the old epilogs once — this
+pins them)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+CLIS = ["repro.launch.build_index", "repro.launch.serve",
+        "repro.launch.update_index", "repro.launch.train",
+        "repro.launch.dryrun"]
+
+
+def _help_output(module):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", module, "--help"],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT, timeout=300)
+    assert proc.returncode == 0, \
+        f"{module} --help exited {proc.returncode}:\n{proc.stderr[-2000:]}"
+    return proc.stdout
+
+
+@pytest.mark.parametrize("module", CLIS)
+def test_cli_help_exits_zero(module):
+    out = _help_output(module)
+    assert "usage:" in out
+
+
+def test_build_index_help_documents_current_flags():
+    out = _help_output("repro.launch.build_index")
+    for flag in ("--format-version", "--memmap", "--chunk-docs", "--pq-nsub",
+                 "--shards", "--kmeans-iters"):
+        assert flag in out, f"build_index --help no longer documents {flag}"
+
+
+def test_serve_help_documents_current_flags():
+    out = _help_output("repro.launch.serve")
+    for flag in ("--index-dir", "--verify", "--check-parity",
+                 "--parity-mrr-tol", "--cache-blocks", "--no-prefetch"):
+        assert flag in out, f"serve --help no longer documents {flag}"
+
+
+def test_update_index_help_documents_current_flags():
+    out = _help_output("repro.launch.update_index")
+    for flag in ("--upserts", "--deletes", "--compact", "--check-parity",
+                 "--serve-queries", "--recluster-overflow"):
+        assert flag in out, f"update_index --help no longer documents {flag}"
