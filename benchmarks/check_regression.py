@@ -1,12 +1,17 @@
 """Benchmark regression guard: compare freshly generated BENCH_serve.json /
-BENCH_index.json against the committed baseline and fail on
+BENCH_index.json / BENCH_train.json against the committed baseline and
+fail on
 
   * >20% serving latency regression (p50 batch ms, per backend row) or
     >20% steady-QPS drop,
   * index-size growth of >20% without a format-version bump
     (`max_format_version` in BENCH_index.json is the bump signal),
   * MRR@10 drift beyond 0.02 on any matched serve row (quality is part of
-    the contract, not just speed).
+    the contract, not just speed),
+  * calibrated selector recall@budget (BENCH_train.json) dropping more
+    than 0.02 below the baseline — recall is hardware-independent, so
+    like the MRR gate it stays active across host-stamp mismatches
+    (geometry must still match).
 
 Intended CI wiring (see .github/workflows/ci.yml) — the baseline comes
 from the PR's MERGE BASE, not HEAD, so a PR that restamps its own BENCH
@@ -45,6 +50,30 @@ def _load(path):
 
 def _rows_by_backend(serve):
     return {r["backend"]: r for r in serve.get("rows", [])}
+
+
+def check_train(baseline_train, fresh_train, recall_tol=0.02):
+    """BENCH_train.json gate: calibrated recall@budget must not drift more
+    than `recall_tol` below the merge-base baseline. Skipped (with a note)
+    when either side lacks the file/field — a new row is informational,
+    same as a new serve backend. Same host-stamp rule as MRR: recall is
+    hardware-independent, so only a geometry change skips the gate."""
+    bad = []
+    base = (baseline_train or {}).get("recall_at_budget")
+    fresh = (fresh_train or {}).get("recall_at_budget")
+    if base is None or fresh is None:
+        print("note: BENCH_train.json missing on one side; "
+              "recall@budget gate skipped")
+        return bad
+    if (baseline_train or {}).get("config") != \
+            (fresh_train or {}).get("config"):
+        print("note: train bench geometry changed; recall@budget gate "
+              "skipped")
+        return bad
+    if fresh < base - recall_tol:
+        bad.append(f"[train] recall@budget {fresh:.4f} < "
+                   f"{base:.4f} - {recall_tol}")
+    return bad
 
 
 def check(baseline_serve, fresh_serve, baseline_index, fresh_index,
@@ -121,14 +150,29 @@ def check(baseline_serve, fresh_serve, baseline_index, fresh_index,
     return bad
 
 
+def _load_optional(path):
+    if not path or not os.path.isfile(path):
+        return {}
+    try:
+        return _load(path)
+    except (OSError, ValueError):
+        return {}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-serve", required=True)
     ap.add_argument("--baseline-index", required=True)
+    ap.add_argument("--baseline-train", default=None,
+                    help="merge-base BENCH_train.json (optional: the gate "
+                         "skips when absent/empty, so the first PR landing "
+                         "the train bench passes)")
     ap.add_argument("--fresh-serve",
                     default=os.path.join(REPO_ROOT, "BENCH_serve.json"))
     ap.add_argument("--fresh-index",
                     default=os.path.join(REPO_ROOT, "BENCH_index.json"))
+    ap.add_argument("--fresh-train",
+                    default=os.path.join(REPO_ROOT, "BENCH_train.json"))
     ap.add_argument("--tol", type=float,
                     default=float(os.environ.get("BENCH_REGRESSION_TOL",
                                                  "0.20")),
@@ -142,6 +186,9 @@ def main(argv=None):
     bad = check(_load(args.baseline_serve), _load(args.fresh_serve),
                 _load(args.baseline_index), _load(args.fresh_index),
                 tol=args.tol, mrr_tol=args.mrr_tol, size_tol=args.size_tol)
+    bad += check_train(_load_optional(args.baseline_train),
+                       _load_optional(args.fresh_train),
+                       recall_tol=args.mrr_tol)
     if bad:
         print("BENCH REGRESSION:")
         for line in bad:

@@ -1,0 +1,221 @@
+"""Selector-training benchmark: streaming label generation, bucketed
+training, calibration, and publish/hot-reload — measured end to end
+against a built on-disk index.
+
+What the repro.train subsystem buys: the seed trainer needed the whole
+embedding matrix in RAM to label queries (`full_dense_topk`); streaming
+label generation computes the exact same supervision through the index's
+own sharded block store with every read bounded — so selector training
+runs in the same corpus regime as the PR-2/3 builds (np.memmap, corpus >
+RAM). Calibration then turns the trained selector into an operating point
+(theta, cluster budget) hit on held-out queries instead of a hand-picked
+threshold.
+
+Writes BENCH_train.json at the repo root (stamped with git SHA + config;
+every field is documented in docs/BENCHMARKS.md):
+  label_gen           streaming wall/throughput, blocks + bytes read,
+                      in-RAM reference wall, parity_exact (asserted)
+  train               wall, optimizer steps, steps/s, bucket lengths,
+                      final loss, effective pos_weight
+  calibration         chosen operating point (theta, budget) for the
+                      recall target + the default point's recall
+  recall_at_budget    top-level copy — the CI regression gate fails on
+                      >0.02 drift vs the merge-base baseline
+  serve               MRR@10 served by a live engine before the publish
+                      (untrained fallback), with the trained selector at
+                      the default theta/budget, and at the calibrated
+                      point after a reload_selector() hot swap;
+                      failed_requests across the swap (asserted 0)
+
+Standalone: PYTHONPATH=src python -m benchmarks.train_selector
+"""
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro import index as index_lib
+from repro import train as train_lib
+from repro.core import train_lstm as tl
+from repro.data import mrr_at, synth_queries
+from repro.engine import InMemoryStore, pipeline as pipe_lib
+
+N_SHARDS = 8
+CHUNK_CLUSTERS = 32
+N_HOLDOUT = 256
+BATCH = 32
+TARGET_RECALL = 0.90
+THETAS = (0.01, 0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.7)
+
+
+def main():
+    cfg, corpus, index = C.corpus_and_index()
+    emb = np.asarray(corpus.embeddings)
+    out = os.path.join(tempfile.mkdtemp(), "bench_train_idx")
+    index_lib.write_index(out, cfg, index, emb, n_shards=N_SHARDS)
+    reader = index_lib.IndexReader.open(out)
+    lcfg, lindex = reader.load_index()
+    store = reader.open_store(cluster_docs=lindex.cluster_docs)
+
+    train_q = synth_queries(1, corpus, cfg.train_queries)
+    hold_q = C.test_queries(corpus, N_HOLDOUT)
+    nq_hold = int(np.asarray(hold_q.q_dense).shape[0])
+
+    # -- 1. label generation: streamed vs in-RAM ---------------------------
+    t0 = time.perf_counter()
+    cand_r, feats_r, labels_r = tl.make_labels(
+        cfg, index, train_q.q_dense, train_q.q_terms, train_q.q_weights)
+    jax.block_until_ready(labels_r)
+    inram_wall = time.perf_counter() - t0
+
+    label_cfg = train_lib.LabelConfig(chunk_clusters=CHUNK_CLUSTERS)
+    t0 = time.perf_counter()
+    ls = train_lib.make_labels_streaming(
+        lcfg, lindex, store, train_q.q_dense, train_q.q_terms,
+        train_q.q_weights, label_cfg=label_cfg)
+    stream_wall = time.perf_counter() - t0
+    parity = (np.array_equal(np.asarray(cand_r), ls.cand)
+              and np.array_equal(np.asarray(feats_r), ls.feats)
+              and np.array_equal(np.asarray(labels_r), ls.labels))
+    assert parity, "streaming labels diverged from the in-RAM oracle"
+    label_gen = {
+        "n_queries": ls.n_queries,
+        "chunk_clusters": CHUNK_CLUSTERS,
+        "wall_s": round(stream_wall, 3),
+        "queries_per_s": round(ls.n_queries / stream_wall, 1),
+        "blocks_read": ls.stats.blocks_read,
+        "bytes_read": ls.stats.bytes_read,
+        "n_fetches": ls.stats.n_fetches,
+        "inram_wall_s": round(inram_wall, 3),
+        "pos_rate": round(ls.pos_rate, 4),
+        "parity_exact": bool(parity),
+    }
+    print(f"label_gen: {label_gen}", flush=True)
+
+    # -- 2. bucketed training ----------------------------------------------
+    trainer = train_lib.SelectorTrainer(
+        cfg, train_lib.SelectorTrainConfig(use_kernel=False))
+    t0 = time.perf_counter()
+    params, hist = trainer.fit(jax.random.key(2), ls.feats, ls.labels)
+    train_wall = time.perf_counter() - t0
+    buckets = train_lib.bucket_lengths(cfg, ls.feats, ls.labels)
+    steps = train_lib.n_batches_per_epoch(buckets, 256) * cfg.epochs
+    train_stats = {
+        "wall_s": round(train_wall, 3),
+        "steps": steps,
+        "steps_per_s": round(steps / train_wall, 1),
+        "epochs": cfg.epochs,
+        "bucket_lengths": sorted(int(b) for b in np.unique(buckets)),
+        "final_loss": round(hist[-1], 4),
+        "pos_weight": trainer.pos_weight,
+    }
+    print(f"train: {train_stats}", flush=True)
+
+    # -- 3. calibration on held-out queries --------------------------------
+    hold_ls = train_lib.make_labels_streaming(
+        lcfg, lindex, store, hold_q.q_dense, hold_q.q_terms,
+        hold_q.q_weights, label_cfg=label_cfg)
+    probs = train_lib.selector_probs(params, hold_ls.feats)
+    budgets = [b for b in (4, 8, 16, 32, 64) if b <= cfg.n_candidates]
+    table = train_lib.calibration_table(
+        hold_ls, probs, np.asarray(lindex.doc_cluster),
+        thetas=sorted(set(THETAS) | {cfg.theta}), budgets=budgets,
+        block_bytes=store.block_bytes)
+    op = train_lib.choose_operating_point(table,
+                                          target_recall=TARGET_RECALL)
+    pos_clusters = np.asarray(lindex.doc_cluster)[hold_ls.dense_ids]
+    default_recall, default_sel = train_lib.recall_at_budget(
+        hold_ls.cand, probs, pos_clusters, cfg.theta, cfg.max_selected)
+    # recall if every stage-1 candidate were selected: the Stage-II
+    # selector can only choose among them, so this bounds any operating
+    # point — recall_frac_of_ceiling is the selector's own quality
+    ceiling, _ = train_lib.recall_at_budget(
+        hold_ls.cand, probs, pos_clusters, -np.inf, cfg.n_candidates)
+    calibration = {
+        "target_recall": TARGET_RECALL,
+        "theta": op["theta"],
+        "budget": op["budget"],
+        "recall_at_budget": op["recall"],
+        "avg_selected": op["avg_selected"],
+        "est_read_bytes": op["est_read_bytes"],
+        "target_met": op["target_met"],
+        "stage1_ceiling": round(ceiling, 4),
+        "recall_frac_of_ceiling": round(op["recall"] / max(ceiling, 1e-9),
+                                        4),
+        "default": {"theta": cfg.theta, "budget": cfg.max_selected,
+                    "recall": round(default_recall, 4),
+                    "avg_selected": round(default_sel, 2)},
+    }
+    print(f"calibration: {calibration}", flush=True)
+
+    # -- 4. publish + live hot-reload serving ------------------------------
+    engine = reader.engine(max_batch=BATCH)
+    failed = 0
+
+    def serve_ids():
+        nonlocal failed
+        out_ids = []
+        for lo in range(0, nq_hold, BATCH):
+            try:
+                ids, _ = engine.retrieve(hold_q.q_dense[lo:lo + BATCH],
+                                         hold_q.q_terms[lo:lo + BATCH],
+                                         hold_q.q_weights[lo:lo + BATCH])
+                out_ids.append(np.asarray(ids))
+            except Exception:
+                failed += 1
+                raise
+        return np.concatenate(out_ids)
+
+    mrr_untrained = mrr_at(serve_ids(), hold_q.rel_doc)
+
+    # trained selector at the DEFAULT operating point (in-memory pipeline:
+    # numerically identical to v1 on-disk serving)
+    mem = InMemoryStore(corpus.embeddings, lindex.cluster_docs)
+    ids_def, _, _ = pipe_lib.retrieve(
+        cfg, lindex, mem, hold_q.q_dense, hold_q.q_terms, hold_q.q_weights,
+        selector_params=params)
+    mrr_default = mrr_at(np.asarray(ids_def), hold_q.rel_doc)
+
+    report = train_lib.publish_selector(
+        out, params, theta=op["theta"], budget=op["budget"],
+        calibration=table, label_config={"chunk_clusters": CHUNK_CLUSTERS},
+        train_meta=train_stats)
+    gen = engine.reload_selector()
+    assert gen == report["generation"] == 1, (gen, report)
+    mrr_calibrated = mrr_at(serve_ids(), hold_q.rel_doc)
+    engine.close()
+    assert failed == 0, f"{failed} retrieve calls failed across the swap"
+    serve = {
+        "MRR@10_untrained": round(mrr_untrained, 4),
+        "MRR@10_default": round(mrr_default, 4),
+        "MRR@10_calibrated": round(mrr_calibrated, 4),
+        "generation": gen,
+        "selector_reloads": engine.stats()["selector_reloads"],
+        "failed_requests": failed,
+    }
+    print(f"serve: {serve}", flush=True)
+
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_train.json")
+    payload = {
+        **C.bench_meta(cfg),
+        "label_gen": label_gen,
+        "train": train_stats,
+        "calibration": calibration,
+        "recall_at_budget": calibration["recall_at_budget"],
+        "serve": serve,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

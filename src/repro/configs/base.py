@@ -142,6 +142,9 @@ class CluSDConfig:
     train_queries: int = 5000
     epochs: int = 150
     lr: float = 1e-3
+    # BCE positive-class weight for selector training; None = derive from
+    # the observed positive rate of the label set (repro.train.trainer)
+    pos_weight: Optional[float] = 4.0
     dtype: str = "float32"
     impl: str = "shard_map"          # shard_map (optimized) | pjit (naive)
     serve_batch: int = 256

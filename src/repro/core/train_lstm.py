@@ -1,85 +1,27 @@
-"""LSTM selector training (paper §2.3 "Training of LSTM"):
+"""LSTM selector training (paper §2.3) — thin compatibility wrapper.
 
-For each training query, a candidate cluster is POSITIVE iff it contains at
-least one of the query's top-10 *full dense retrieval* results. BCE over the
-stage-1 candidate sequence, Adam, cfg.epochs epochs over cfg.train_queries
-sampled queries.
+The implementation moved to the `repro.train` subsystem, which adds what
+this module never had: streaming index-backed label generation (exact
+full-dense top-k off a built on-disk index, bounded reads), bucketed
+training with checkpoints and mid-epoch resume, threshold/budget
+calibration, and atomic publishing of a trained selector into an index
+generation. See src/repro/train/README.md.
+
+The seed API re-exported here is unchanged and in-RAM:
+
+  make_labels(cfg, index, ...)   needs a materialized index.embeddings —
+                                 fine offline/small-corpus; corpus-scale
+                                 callers use
+                                 repro.train.make_labels_streaming
+  train_selector(cfg, rng, ...)  one-shot trainer; the BCE positive
+                                 weight now comes from cfg.pos_weight
+                                 (default 4.0 = the old hardcoded value;
+                                 None derives it from the label set)
+  selection_quality(...)         label-level precision/recall at theta
 """
 
-import jax
-import jax.numpy as jnp
+from repro.train.calibrate import selection_quality  # noqa: F401
+from repro.train.labels import make_labels  # noqa: F401
+from repro.train.trainer import train_selector  # noqa: F401
 
-from repro.core import clusd as clusd_lib
-from repro.core import fusion as fusion_lib
-from repro.core import sparse as sparse_lib
-from repro.core.lstm import SELECTORS
-from repro.optim import adamw_init, adamw_update
-
-
-def make_labels(cfg, index, q_dense, q_terms, q_weights, top_dense=10,
-                stage1="overlap"):
-    """Returns (cand (B, n), feats (B, n, F), labels (B, n))."""
-    sparse_ids, sparse_scores = sparse_lib.sparse_retrieve_topk(
-        index.sparse_index, q_terms, q_weights, cfg.k_sparse)
-    sel = clusd_lib.select_clusters(
-        cfg, index, q_dense, sparse_ids, sparse_scores,
-        selector_params=None, stage1=stage1)
-    cand, feats = sel["cand"], sel["feats"]
-    dense_ids, _ = clusd_lib.full_dense_topk(index.embeddings, q_dense,
-                                             top_dense)
-    pos_clusters = jnp.take(index.doc_cluster, dense_ids, axis=0)  # (B, 10)
-    labels = jnp.any(cand[:, :, None] == pos_clusters[:, None, :], axis=-1)
-    return cand, feats, labels.astype(jnp.float32)
-
-
-def train_selector(cfg, rng, feats, labels, selector="lstm", epochs=None,
-                   lr=None, batch_size=256, log_every=0):
-    """Train a stage-2 selector on precomputed (feats, labels)."""
-    epochs = epochs or cfg.epochs
-    lr = lr or cfg.lr
-    init_fn, apply_fn = SELECTORS[selector]
-    params = init_fn(rng, feats.shape[-1], cfg.lstm_hidden)
-    opt = adamw_init(params)
-
-    def loss_fn(p, f, y):
-        probs = apply_fn(p, f)
-        probs = jnp.clip(probs, 1e-6, 1 - 1e-6)
-        # class-balance: positives are rare in the candidate sequence
-        w_pos = 4.0
-        bce = -(w_pos * y * jnp.log(probs) + (1 - y) * jnp.log(1 - probs))
-        return jnp.mean(bce)
-
-    @jax.jit
-    def step(p, o, f, y):
-        loss, grads = jax.value_and_grad(loss_fn)(p, f, y)
-        p, o, _ = adamw_update(grads, o, p, lr=lr, weight_decay=0.0)
-        return p, o, loss
-
-    nq = feats.shape[0]
-    rngs = jax.random.split(jax.random.fold_in(rng, 1), epochs)
-    history = []
-    for e in range(epochs):
-        perm = jax.random.permutation(rngs[e], nq)
-        f_sh, y_sh = feats[perm], labels[perm]
-        losses = []
-        for i in range(0, nq - batch_size + 1, batch_size) or [0]:
-            fb, yb = f_sh[i:i + batch_size], y_sh[i:i + batch_size]
-            params, opt, loss = step(params, opt, fb, yb)
-            losses.append(float(loss))
-        if nq < batch_size:
-            params, opt, loss = step(params, opt, f_sh, y_sh)
-            losses.append(float(loss))
-        history.append(sum(losses) / max(len(losses), 1))
-        if log_every and (e + 1) % log_every == 0:
-            print(f"epoch {e+1}/{epochs} loss={history[-1]:.4f}", flush=True)
-    return params, history
-
-
-def selection_quality(probs, labels, theta):
-    """Precision / recall / avg #selected at threshold theta."""
-    sel = probs >= theta
-    tp = jnp.sum(sel * labels)
-    prec = tp / jnp.maximum(jnp.sum(sel), 1)
-    rec = tp / jnp.maximum(jnp.sum(labels), 1)
-    return {"precision": prec, "recall": rec,
-            "avg_selected": jnp.mean(jnp.sum(sel, axis=1))}
+__all__ = ["make_labels", "selection_quality", "train_selector"]

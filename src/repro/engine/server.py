@@ -19,7 +19,10 @@ the store/arrays are rebuilt from the reader, compiled buckets and the
 block cache are invalidated (geometry may have changed), and the prefetch
 worker is quiesced across the swap so no stale block can repopulate the
 fresh cache. In-flight batches finish on the old generation; no request
-ever fails.
+ever fails. When only the Stage-II selector moved (repro.train publishes
+weights + calibrated thresholds as a generation that rewrites zero corpus
+bytes), `reload_selector()` swaps just the LSTM params and theta/budget —
+Stage-I compilations, the block cache, and the prefetch worker survive.
 
 Usage:
     engine = RetrievalEngine(cfg, index)                  # in-memory / PQ
@@ -80,6 +83,7 @@ class ServeStats:
     prefetch_enqueued: int = 0
     prefetch_errors: int = 0
     reloads: int = 0
+    selector_reloads: int = 0
 
     def record(self, size, bucket, compiled, ms):
         self.n_queries += size
@@ -141,15 +145,27 @@ class RetrievalEngine:
             if (self.is_host and cache_capacity) else None
         # prefetch candidates a bit past the selection budget: Stage-II
         # mostly keeps high-ranked Stage-I candidates, so this covers the
-        # selection without reading the whole candidate list.
+        # selection without reading the whole candidate list. An explicit
+        # depth is pinned; the default tracks cfg.max_selected across
+        # reloads (a calibrated publish may raise the budget).
+        self._explicit_prefetch_depth = prefetch_depth
         self.prefetch_depth = prefetch_depth if prefetch_depth is not None \
-            else min(cfg.n_candidates, cfg.max_selected + cfg.max_selected // 2)
+            else self._default_prefetch_depth(cfg)
         self._fns: Dict[Any, Any] = {}          # (kind, bucket) -> jitted fn
         self._pf_q = None
         self._pf_thread = None
         self._start_prefetch()
 
     # -- lifecycle ----------------------------------------------------------
+
+    @staticmethod
+    def _default_prefetch_depth(cfg):
+        return min(cfg.n_candidates,
+                   cfg.max_selected + cfg.max_selected // 2)
+
+    def _refresh_prefetch_depth(self, cfg):
+        if self._explicit_prefetch_depth is None:
+            self.prefetch_depth = self._default_prefetch_depth(cfg)
 
     def _start_prefetch(self):
         if self._prefetch_enabled and self.is_host and self.cache is not None:
@@ -200,6 +216,7 @@ class RetrievalEngine:
         with self._swap_lock:
             self.cfg, self.index, self.store = cfg, index, store
             self.reader = reader
+            self._refresh_prefetch_depth(cfg)
             self._fns.clear()           # bucket shapes/geometry changed
             if self.cache is not None:
                 self.cache.clear()      # block ids now name new-gen blocks
@@ -207,6 +224,49 @@ class RetrievalEngine:
         self._pf_drop = False
         if restart:
             self._start_prefetch()
+        return reader.generation
+
+    def reload_selector(self, reader=None, *, verify="none"):
+        """Hot-swap ONLY the Stage-II selector: adopt a newer committed
+        generation's LSTM weights + calibrated theta/budget (published by
+        repro.train.publish_selector) without touching the store, the
+        block cache, the prefetch worker, or the compiled Stage-I
+        buckets. Far cheaper than `reload_index()` — selector publishes
+        rewrite zero corpus bytes, so corpus-derived state stays valid.
+
+        If the refreshed manifest shows the corpus itself moved too
+        (arrays/block shards differ — e.g. a delta landed between
+        publishes), this falls back to a full `reload_index()`. Returns
+        the generation now being served."""
+        reader = reader if reader is not None else self.reader
+        if reader is None:
+            raise ValueError("reload_selector needs an IndexReader "
+                             "(construct the engine via IndexReader.engine, "
+                             "or pass reader=)")
+        before = (reader.manifest.get("arrays"),
+                  reader.manifest.get("block_shards"))
+        reader.refresh(verify=verify)
+        after = (reader.manifest.get("arrays"),
+                 reader.manifest.get("block_shards"))
+        if before != after:
+            return self.reload_index(reader, verify="none")
+        cfg = reader.config()
+        params = reader.lstm_params()
+        with self._swap_lock:
+            self.cfg = cfg
+            self.index.lstm_params = params
+            self.reader = reader
+            # the calibrated budget may exceed the old one: keep the
+            # prefetch window covering the selection
+            self._refresh_prefetch_depth(cfg)
+            # only selector-dependent compilations are stale: stage2
+            # closes over (params, theta, max_selected); the fused device
+            # path closes over the whole config. Stage-I buckets and the
+            # block cache survive — the corpus didn't move.
+            for key in [k for k in self._fns
+                        if k[0] in ("stage2", "device")]:
+                del self._fns[key]
+            self.serve_stats.selector_reloads += 1
         return reader.generation
 
     def __enter__(self):
@@ -361,6 +421,7 @@ class RetrievalEngine:
                "prefetch_enqueued": self.serve_stats.prefetch_enqueued,
                "prefetch_errors": self.serve_stats.prefetch_errors,
                "reloads": self.serve_stats.reloads,
+               "selector_reloads": self.serve_stats.selector_reloads,
                **self.serve_stats.latency_percentiles()}
         if self.reader is not None:
             out["generation"] = self.reader.generation

@@ -58,6 +58,20 @@ Generations (incremental updates, repro.index.update):
   update_stats      : bookkeeping of the last delta commit (bytes
                       rewritten, shards touched, upsert/delete counts)
 
+Selector publishes (repro.train.publish_selector) are generations too:
+trained LSTM weights land as `lstm.g<G>/` (the `lstm` key moves with
+them), the calibrated operating point is written straight into
+`config.theta` / `config.max_selected` (so every reader serves it with no
+extra wiring), and an ADDITIVE `selector` key records the bookkeeping:
+
+  selector          : {selector, published_generation, theta, budget,
+                      calibration: [{theta, budget, recall, avg_selected,
+                      est_read_bytes}, ...], label_config, train} | absent
+                      for indexes whose selector came from the offline
+                      build. Dropped by compaction (weights + calibrated
+                      config survive — they live in the checkpoint and
+                      `config`).
+
   Delta commits never mutate existing artifact files. New/changed
   artifacts get generation-suffixed names (`centroids.g3.npy`,
   `blocks/shard_00002.g3.bin`); unchanged artifacts are carried by
@@ -157,6 +171,26 @@ def commit_manifest(index_dir, manifest):
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, final)
+
+
+def commit_generation(index_dir, stage, staged, old_manifest, new_manifest):
+    """The shared tail of every generation commit (delta apply, selector
+    publish): move the staged artifact files into place under their
+    generation-suffixed names (never clobbering a file the live manifest
+    references), archive the current manifest so its generation stays
+    readable, atomically flip manifest.json, and drop the stage dir.
+    Keeping this in ONE place keeps the no-torn-state guarantee in one
+    place.
+
+    stage: staging dir holding the new files; staged: their relpaths."""
+    import shutil
+    for rel in staged:
+        dst = os.path.join(index_dir, rel)
+        os.makedirs(os.path.dirname(dst) or index_dir, exist_ok=True)
+        os.replace(os.path.join(stage, rel), dst)
+    archive_manifest(index_dir, old_manifest)
+    commit_manifest(index_dir, new_manifest)
+    shutil.rmtree(stage, ignore_errors=True)
 
 
 def load_manifest(index_dir, supported=SUPPORTED_VERSIONS, generation=None):

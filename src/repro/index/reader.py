@@ -110,6 +110,13 @@ class IndexReader:
         d["bins"] = tuple(d["bins"])
         return CluSDConfig(**d)
 
+    def selector_meta(self):
+        """Selector-publish metadata (repro.train.publish_selector): the
+        calibrated operating point {theta, budget}, the full calibration
+        table, label config, and training stats — or None for indexes
+        whose selector came from the offline build (no publish yet)."""
+        return self.manifest.get("selector")
+
     def lstm_params(self):
         meta = self.manifest["lstm"]
         if meta is None:

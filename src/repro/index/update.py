@@ -712,13 +712,7 @@ def write_index_delta(index_dir, delta: IndexDelta, *, verify="size",
     }
 
     # -- commit: move staged files into place, archive, flip manifest ------
-    for rel in staged:
-        dst = os.path.join(index_dir, rel)
-        os.makedirs(os.path.dirname(dst) or index_dir, exist_ok=True)
-        os.replace(os.path.join(stage, rel), dst)
-    fmt.archive_manifest(index_dir, manifest)
-    fmt.commit_manifest(index_dir, new_manifest)
-    shutil.rmtree(stage, ignore_errors=True)
+    fmt.commit_generation(index_dir, stage, staged, manifest, new_manifest)
 
     return {
         "generation": G,

@@ -27,7 +27,13 @@ from repro.runtime.fault import FailureInjector, restartable_train
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    # __doc__ IS the epilog: the module docstring and --help can never
+    # drift apart (CI smoke-tests --help for every repro.launch CLI)
+    ap = argparse.ArgumentParser(
+        description="Fault-tolerant end-to-end model training driver "
+                    "(LM/recsys/GNN archs; the CluSD selector has its own "
+                    "driver: repro.launch.train_selector).",
+        epilog=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--variant", default="smoke")
     ap.add_argument("--steps", type=int, default=100)

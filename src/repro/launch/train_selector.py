@@ -1,0 +1,294 @@
+"""Selector training CLI: stream labels off a built index, train the
+Stage-II LSTM, calibrate theta/budget on held-out queries, and publish
+the result as a new index generation that a live engine hot-reloads.
+
+  PYTHONPATH=src python -m repro.launch.train_selector \
+      --index-dir /tmp/idx --train-queries 512 --holdout-queries 128 \
+      --epochs 40 --target-recall 0.9 --publish --serve-check 8
+
+Pipeline (src/repro/train/):
+  1. LABELS  — exact full-dense top-k streamed through the index's own
+     ShardedDiskStore/ShardedPQStore, at most --chunk-clusters blocks per
+     read, no materialized embedding matrix; spilled to a reusable label
+     cache (--label-cache, default <index-dir>.labels) keyed by index
+     generation + label config + query set.
+  2. TRAIN   — candidate sequences bucketed to power-of-two lengths,
+     jit-compiled steps (optionally on the fused Pallas LSTM cell via
+     --use-kernel), periodic repro.checkpoint checkpoints
+     (--ckpt-every / --ckpt-dir) with deterministic mid-epoch --resume.
+  3. CALIBRATE — sweep --thetas x --budgets on the held-out label set;
+     pick the cheapest point hitting --target-recall (or the best recall
+     within --target-budget).
+  4. PUBLISH (--publish) — weights + calibrated theta/budget commit as an
+     atomic generation (zero corpus bytes rewritten); --serve-check N
+     serves N queries on a live engine before AND after the commit,
+     hot-swaps via RetrievalEngine.reload_selector(), and parity-checks
+     the hot-reloaded engine against a fresh engine on the new
+     generation (exact top-k ids; exit non-zero on mismatch).
+
+Key flags (full list below / --help):
+  --pos-weight {auto,<float>}  BCE positive-class weight; "auto" derives
+                               it from the observed label positive rate,
+                               default keeps the index config's value
+  --no-bucket                  disable sequence-length bucketing
+  --use-kernel {auto,0,1}      Pallas LSTM cell in the train step
+                               (auto = only on TPU backends)
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro import index as index_lib
+from repro import train as train_lib
+from repro.data import synth_corpus, synth_queries
+
+
+def _parse_pos_weight(s):
+    if s is None:
+        return None, False
+    if s == "auto":
+        return None, True
+    return float(s), False
+
+
+def _parse_use_kernel(s):
+    return "auto" if s == "auto" else bool(int(s))
+
+
+def _floats(s):
+    return [float(x) for x in s.split(",") if x]
+
+
+def _ints(s):
+    return [int(x) for x in s.split(",") if x]
+
+
+def _corpus_queries(reader, args):
+    meta = reader.manifest.get("extra", {}).get("corpus")
+    if meta is None or meta.get("kind") != "synthetic":
+        raise SystemExit("index lacks synthetic-corpus metadata; cannot "
+                         "regenerate training/holdout queries")
+    corpus = synth_corpus(meta["seed"], meta["n_docs"], meta["dim"],
+                          meta["vocab"])
+    train_q = synth_queries(args.seed + 21, corpus, args.train_queries)
+    hold_q = synth_queries(args.seed + 22, corpus, args.holdout_queries)
+    return corpus, train_q, hold_q
+
+
+def _labels(reader, cfg, index, store, qs, label_cfg, cache, tag):
+    key = train_lib.label_cache_key(
+        reader.manifest, cfg, label_cfg,
+        train_lib.query_fingerprint(qs.q_dense, qs.q_terms, qs.q_weights))
+    ls, hit = cache.get_or_build(
+        key, lambda: train_lib.make_labels_streaming(
+            cfg, index, store, qs.q_dense, qs.q_terms, qs.q_weights,
+            label_cfg=label_cfg),
+        extra={"tag": tag, "generation": reader.generation})
+    src = "cache hit" if hit else (
+        f"streamed {ls.stats.blocks_read} blocks / "
+        f"{ls.stats.bytes_read / 2**20:.1f} MiB in "
+        f"{ls.stats.wall_s:.1f}s")
+    print(f"labels[{tag}]: {ls.n_queries} queries, "
+          f"pos_rate={ls.pos_rate:.4f} ({src})", flush=True)
+    return ls
+
+
+def _serve_ids(engine, qs, n, batch):
+    out = []
+    for lo in range(0, n, batch):
+        ids, _ = engine.retrieve(qs.q_dense[lo:lo + batch],
+                                 qs.q_terms[lo:lo + batch],
+                                 qs.q_weights[lo:lo + batch])
+        out.append(np.asarray(ids))
+    return np.concatenate(out)
+
+
+def main(argv=None):
+    # __doc__ IS the epilog: the module docstring and --help can never
+    # drift apart (CI smoke-tests --help for every repro.launch CLI)
+    ap = argparse.ArgumentParser(
+        description="Train, calibrate, and publish a Stage-II selector "
+                    "against a built CluSD index (streaming labels, "
+                    "bucketed training, atomic generation publish).",
+        epilog=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--index-dir", required=True,
+                    help="built index (repro.launch.build_index)")
+    ap.add_argument("--train-queries", type=int, default=512)
+    ap.add_argument("--holdout-queries", type=int, default=128,
+                    help="held-out queries for threshold calibration")
+    ap.add_argument("--epochs", type=int, default=None,
+                    help="default: the index config's epochs")
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--top-dense", type=int, default=10,
+                    help="full-dense top-k that defines a positive cluster")
+    ap.add_argument("--chunk-clusters", type=int, default=64,
+                    help="cluster blocks per streamed label-gen read")
+    ap.add_argument("--label-cache", default=None,
+                    help="label cache dir (default <index-dir>.labels)")
+    ap.add_argument("--pos-weight", default=None,
+                    help="BCE positive weight: float, or 'auto' to derive "
+                         "from the label positive rate (default: index "
+                         "config value)")
+    ap.add_argument("--no-bucket", action="store_true",
+                    help="disable power-of-two sequence-length bucketing")
+    ap.add_argument("--use-kernel", default="auto",
+                    help="Pallas LSTM cell in the train step: auto|0|1")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint dir (default <index-dir>.selector-ckpt)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every N steps (0 = end only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt-dir")
+    ap.add_argument("--thetas", type=_floats,
+                    default="0.01,0.02,0.05,0.1,0.2,0.3,0.5,0.7",
+                    help="comma list of thresholds to sweep")
+    ap.add_argument("--budgets", type=_ints, default=None,
+                    help="comma list of cluster budgets (default: powers "
+                         "of two up to n_candidates)")
+    ap.add_argument("--target-recall", type=float, default=None,
+                    help="calibrate to the cheapest point with recall@k "
+                         ">= this (default 0.9 when no --target-budget)")
+    ap.add_argument("--target-budget", type=int, default=None,
+                    help="calibrate to the best recall within this many "
+                         "selected clusters")
+    ap.add_argument("--publish", action="store_true",
+                    help="commit weights + calibrated thresholds as a new "
+                         "index generation")
+    ap.add_argument("--serve-check", type=int, default=0,
+                    help="with --publish: serve N queries on a live "
+                         "engine across the commit (hot reload_selector) "
+                         "and parity-check vs a fresh engine")
+    ap.add_argument("--verify", default="size",
+                    choices=("none", "size", "full"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if isinstance(args.thetas, str):        # default not routed through type=
+        args.thetas = _floats(args.thetas)
+    if args.target_recall is not None and args.target_budget is not None:
+        ap.error("--target-recall and --target-budget are mutually "
+                 "exclusive calibration targets")
+
+    t0 = time.perf_counter()
+    reader = index_lib.IndexReader.open(args.index_dir, verify=args.verify)
+    cfg, index = reader.load_index()
+    pos_override, pos_auto = _parse_pos_weight(args.pos_weight)
+    if pos_auto:
+        cfg = dataclasses.replace(cfg, pos_weight=None)
+    store = reader.open_store(cluster_docs=index.cluster_docs)
+    print(f"index: {reader.index_dir} (format v{reader.format_version}, "
+          f"generation {reader.generation}, N={cfg.n_clusters}, "
+          f"n_docs={cfg.n_docs})", flush=True)
+    corpus, train_q, hold_q = _corpus_queries(reader, args)
+
+    # -- 1. labels (streamed, cached) --------------------------------------
+    label_cfg = train_lib.LabelConfig(top_dense=args.top_dense,
+                                      chunk_clusters=args.chunk_clusters)
+    cache = train_lib.LabelCache(args.label_cache
+                                 or args.index_dir.rstrip("/") + ".labels")
+    train_ls = _labels(reader, cfg, index, store, train_q, label_cfg, cache,
+                       "train")
+    hold_ls = _labels(reader, cfg, index, store, hold_q, label_cfg, cache,
+                      "holdout")
+
+    # -- 2. train ----------------------------------------------------------
+    tcfg = train_lib.SelectorTrainConfig(
+        epochs=args.epochs, lr=args.lr, batch_size=args.batch_size,
+        pos_weight=pos_override, bucket=not args.no_bucket,
+        use_kernel=_parse_use_kernel(args.use_kernel), seed=args.seed,
+        ckpt_dir=args.ckpt_dir
+        or args.index_dir.rstrip("/") + ".selector-ckpt",
+        ckpt_every_steps=args.ckpt_every)
+    trainer = train_lib.SelectorTrainer(cfg, tcfg)
+    t1 = time.perf_counter()
+    params, hist = trainer.fit(jax.random.key(args.seed + 2),
+                               train_ls.feats, train_ls.labels,
+                               resume=args.resume,
+                               log_every=max(1, (args.epochs or cfg.epochs)
+                                             // 5))
+    train_wall = time.perf_counter() - t1
+    loss_str = (f"loss {hist[0]:.4f} -> {hist[-1]:.4f}" if hist
+                else "no steps left (resumed a finished run)")
+    print(f"trained: {loss_str} in {train_wall:.1f}s "
+          f"(pos_weight={trainer.pos_weight:.2f}, "
+          f"buckets={sorted(trainer._steps)})", flush=True)
+
+    # -- 3. calibrate ------------------------------------------------------
+    budgets = args.budgets or [b for b in (4, 8, 16, 32, 64)
+                               if b <= cfg.n_candidates]
+    # calibrate against SERVING numerics: the engine's stage2_select runs
+    # the reference LSTM path, so the swept probabilities must too (the
+    # kernel forward may differ in low-order bits near a threshold)
+    probs = train_lib.selector_probs(params, hold_ls.feats,
+                                     use_kernel=False)
+    table = train_lib.calibration_table(
+        hold_ls, probs, np.asarray(index.doc_cluster),
+        thetas=sorted(set(args.thetas + [cfg.theta])), budgets=budgets,
+        block_bytes=int(getattr(store, "block_bytes", 0)))
+    target_recall = args.target_recall
+    if target_recall is None and args.target_budget is None:
+        target_recall = 0.9
+    op = train_lib.choose_operating_point(
+        table, target_recall=target_recall,
+        target_budget=args.target_budget)
+    print(f"calibrated: theta={op['theta']} budget={op['budget']} -> "
+          f"recall@{args.top_dense}={op['recall']:.4f} "
+          f"avg_selected={op['avg_selected']} "
+          f"(target_met={op['target_met']})", flush=True)
+
+    if not args.publish:
+        print(json.dumps({"operating_point": op,
+                          "wall_s": round(time.perf_counter() - t0, 1)}))
+        return 0
+
+    # -- 4. publish + live hot-reload check --------------------------------
+    n_check = min(args.serve_check, args.holdout_queries)
+    engine = None
+    if n_check:
+        engine = reader.engine(max_batch=max(8, n_check))
+        _serve_ids(engine, hold_q, n_check, engine.max_batch)  # pre-commit
+
+    report = train_lib.publish_selector(
+        args.index_dir, params, theta=op["theta"], budget=op["budget"],
+        calibration=table, label_config=dataclasses.asdict(label_cfg),
+        train_meta={"n_train_queries": train_ls.n_queries,
+                    "n_holdout_queries": hold_ls.n_queries,
+                    "epochs": args.epochs or cfg.epochs,
+                    "pos_weight": trainer.pos_weight,
+                    "final_loss": round(hist[-1], 6) if hist else None,
+                    "train_wall_s": round(train_wall, 3)},
+        verify=args.verify)
+    print(f"published generation {report['generation']} "
+          f"(+{report['bytes_added']} bytes, {report['wall_s']}s)",
+          flush=True)
+
+    if n_check:
+        gen = engine.reload_selector()
+        assert gen == report["generation"], (gen, report)
+        got = _serve_ids(engine, hold_q, n_check, engine.max_batch)
+        engine.close()
+        fresh_reader = index_lib.IndexReader.open(args.index_dir,
+                                                  verify=args.verify)
+        with fresh_reader.engine(max_batch=max(8, n_check)) as fresh:
+            want = _serve_ids(fresh, hold_q, n_check, fresh.max_batch)
+        if not np.array_equal(got, want):
+            bad = int((got != want).any(axis=1).sum())
+            print(f"PARITY FAIL: {bad}/{n_check} queries differ between "
+                  f"the hot-reloaded engine and a fresh engine on "
+                  f"generation {gen}")
+            return 1
+        print(f"serve check OK: {n_check} queries, hot reload_selector == "
+              f"fresh engine on generation {gen} "
+              f"(selector_reloads={engine.stats()['selector_reloads']})")
+    print(json.dumps({"operating_point": op, "publish": report,
+                      "wall_s": round(time.perf_counter() - t0, 1)}))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

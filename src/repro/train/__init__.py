@@ -1,0 +1,33 @@
+"""Streaming selector-training subsystem: index-backed label generation,
+bucketed LSTM training with checkpoint/resume, threshold/budget
+calibration, and atomic selector publishing into a built index. See
+README.md in this directory for the label pipeline, bucketing, and
+publish flow; `python -m repro.launch.train_selector` drives the whole
+loop against an index built by `repro.launch.build_index`."""
+
+from repro.train.calibrate import (
+    calibration_table, choose_operating_point, recall_at_budget, select_at,
+    selection_quality, selector_probs)
+from repro.train.data import (
+    Batch, bucket_lengths, bucketed_batches, effective_lengths,
+    n_batches_per_epoch)
+from repro.train.labels import (
+    LabelCache, LabelConfig, LabelGenStats, LabelSet, label_cache_key,
+    make_labels, make_labels_streaming, query_fingerprint,
+    streaming_full_dense_topk)
+from repro.train.publish import publish_selector
+from repro.train.trainer import (
+    SelectorTrainConfig, SelectorTrainer, derive_pos_weight,
+    resolve_pos_weight, selector_apply, train_selector)
+
+__all__ = [
+    "Batch", "LabelCache", "LabelConfig", "LabelGenStats", "LabelSet",
+    "SelectorTrainConfig", "SelectorTrainer", "bucket_lengths",
+    "bucketed_batches", "calibration_table", "choose_operating_point",
+    "derive_pos_weight", "effective_lengths", "label_cache_key",
+    "make_labels", "make_labels_streaming", "n_batches_per_epoch",
+    "publish_selector", "query_fingerprint", "recall_at_budget",
+    "resolve_pos_weight", "select_at", "selection_quality",
+    "selector_apply", "selector_probs", "streaming_full_dense_topk",
+    "train_selector",
+]

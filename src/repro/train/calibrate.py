@@ -1,0 +1,136 @@
+"""Threshold/budget calibration on held-out queries.
+
+Serving exposes two knobs: the Stage-II probability threshold theta
+(cfg.theta) and the cluster budget (cfg.max_selected — the static number
+of blocks the engine will read per query). The paper tunes theta to hit a
+target average #selected (Table 8); the hybrid-index line of work
+calibrates its routing threshold against a target recall. This module
+does both: sweep (theta, budget) on a held-out LabelSet, measure
+
+  recall@k      fraction of the query's full-dense top-k documents whose
+                cluster is selected (k = the label config's top_dense) —
+                the quantity selective dense retrieval trades I/O for,
+  avg_selected  mean clusters actually selected (= cluster-block reads),
+  est_read_bytes  avg_selected x the store's per-block byte cost,
+
+and pick an operating point for a target recall (cheapest selection that
+reaches it) or a target I/O budget (best recall within it). Selection
+semantics mirror `core.clusd.stage2_select` exactly (threshold then
+top-budget by probability, lax.top_k tie order), so calibrated numbers
+are what the serving engine will do.
+
+The chosen (theta, budget) and the full table are published into the
+index manifest (train/publish.py) — the engine picks them up on
+`reload_selector()` / `reload_index()` with no restart.
+"""
+
+import numpy as np
+
+from repro.train.trainer import selector_apply
+
+
+def selector_probs(params, feats, *, selector="lstm", use_kernel=False,
+                   batch=1024):
+    """(B, n) selection probabilities, computed in bounded batches.
+
+    Keep use_kernel=False when the probabilities feed calibration: the
+    serving engine's stage2_select runs the reference path, and a kernel
+    forward may differ in low-order bits right at a swept threshold."""
+    import jax.numpy as jnp
+    feats = np.asarray(feats, np.float32)
+    out = []
+    for lo in range(0, feats.shape[0], batch):
+        out.append(np.asarray(selector_apply(
+            params, jnp.asarray(feats[lo:lo + batch]), selector=selector,
+            use_kernel=use_kernel)))
+    return np.concatenate(out, axis=0)
+
+
+def select_at(cand, probs, theta, budget):
+    """stage2_select semantics on the host: picked = probs >= theta, then
+    top-`budget` picked candidates by probability (ties -> lower stage-1
+    rank, matching lax.top_k). Returns (sel_ids, sel_mask) (B, budget)."""
+    cand = np.asarray(cand)
+    probs = np.asarray(probs)
+    budget = min(int(budget), cand.shape[1])
+    picked = probs >= theta
+    masked = np.where(picked, probs, -np.inf)
+    top_i = np.argsort(-masked, axis=1, kind="stable")[:, :budget]
+    sel_mask = np.take_along_axis(picked, top_i, axis=1)
+    sel_ids = np.take_along_axis(cand, top_i, axis=1)
+    return sel_ids, sel_mask
+
+
+def recall_at_budget(cand, probs, pos_clusters, theta, budget):
+    """(recall@k, avg_selected): recall counts the full-dense top-k docs
+    whose cluster made the selection, averaged per query then over
+    queries."""
+    sel_ids, sel_mask = select_at(cand, probs, theta, budget)
+    sel = np.where(sel_mask, sel_ids, -1)
+    covered = (np.asarray(pos_clusters)[:, :, None]
+               == sel[:, None, :]).any(axis=-1)            # (B, k)
+    return float(covered.mean()), float(sel_mask.sum(axis=1).mean())
+
+
+def calibration_table(label_set, probs, doc_cluster, *, thetas, budgets,
+                      block_bytes=0):
+    """Sweep rows sorted by (budget, theta). Every row: theta, budget,
+    recall, avg_selected, est_read_bytes."""
+    pos_clusters = np.asarray(doc_cluster)[np.asarray(label_set.dense_ids)]
+    rows = []
+    for budget in sorted(int(b) for b in budgets):
+        for theta in sorted(float(t) for t in thetas):
+            rec, avg_sel = recall_at_budget(label_set.cand, probs,
+                                            pos_clusters, theta, budget)
+            rows.append({
+                "theta": round(theta, 6),
+                "budget": budget,
+                "recall": round(rec, 4),
+                "avg_selected": round(avg_sel, 2),
+                "est_read_bytes": int(round(avg_sel * block_bytes)),
+            })
+    return rows
+
+
+def choose_operating_point(table, *, target_recall=None, target_budget=None):
+    """Pick a row from a calibration table.
+
+    target_recall: cheapest selection (min avg_selected, then min budget,
+      then max theta) whose recall meets the target; falls back to the
+      best-recall row (flagged "target_met": False) when nothing does.
+    target_budget: best recall among rows with budget <= target (ties ->
+      fewer clusters actually selected).
+    Exactly one target must be given."""
+    if (target_recall is None) == (target_budget is None):
+        raise ValueError("pass exactly one of target_recall/target_budget")
+    table = list(table)
+    if not table:
+        raise ValueError("empty calibration table")
+    if target_recall is not None:
+        ok = [r for r in table if r["recall"] >= target_recall]
+        if ok:
+            pick = min(ok, key=lambda r: (r["avg_selected"], r["budget"],
+                                          -r["theta"]))
+            return dict(pick, target_met=True)
+        pick = max(table, key=lambda r: (r["recall"], -r["avg_selected"]))
+        return dict(pick, target_met=False)
+    ok = [r for r in table if r["budget"] <= target_budget]
+    met = bool(ok)
+    if not ok:                 # nothing fits: flag it, pick the cheapest
+        ok = [min(table, key=lambda r: r["budget"])]
+    pick = max(ok, key=lambda r: (r["recall"], -r["avg_selected"],
+                                  -r["theta"]))
+    return dict(pick, target_met=met)
+
+
+def selection_quality(probs, labels, theta):
+    """Precision / recall / avg #selected at threshold theta (label-level,
+    the seed metric — recall here is over positive *candidates*, not the
+    dense top-k; see recall_at_budget for the serving-facing quantity)."""
+    import jax.numpy as jnp
+    sel = probs >= theta
+    tp = jnp.sum(sel * labels)
+    prec = tp / jnp.maximum(jnp.sum(sel), 1)
+    rec = tp / jnp.maximum(jnp.sum(labels), 1)
+    return {"precision": prec, "recall": rec,
+            "avg_selected": jnp.mean(jnp.sum(sel, axis=1))}

@@ -1,0 +1,90 @@
+"""Bucketed training batches over stage-1 candidate sequences.
+
+The engine pads query *batches* to power-of-two sizes so jit compiles once
+per bucket (engine/server.bucket_size); training reuses the same idiom on
+the *sequence* axis. Most queries' useful supervision lives in a short
+prefix of the n-candidate sequence — trailing candidates have zero sparse
+overlap and no positive label — so each query gets an effective length
+(last live candidate), is bucketed to the next power of two, and training
+steps compile once per bucket length instead of always scanning all n
+steps. Truncation is exact for every selector the repo ships (LSTM/RNN
+scans are causal, the MLP is pointwise): probabilities over the kept
+prefix are bitwise those of the full-length run.
+
+Batches are fixed (batch_size, L, F) shapes — short tails are padded by
+repeating rows with weight 0, so every (bucket, batch_size) pair compiles
+exactly once and padding never contributes loss. The batch stream is a
+pure function of (seed, epoch, buckets): mid-epoch checkpoint resume
+replays the identical schedule (tests/test_train.py pins this).
+"""
+
+import dataclasses
+
+import numpy as np
+
+from repro.engine.server import bucket_size
+
+
+@dataclasses.dataclass
+class Batch:
+    feats: np.ndarray     # (batch_size, L, F) float32
+    labels: np.ndarray    # (batch_size, L) float32
+    weights: np.ndarray   # (batch_size,) float32 — 0 marks padding rows
+    length: int           # bucket (sequence) length L
+    index: int            # step index within the epoch
+
+
+def effective_lengths(cfg, feats, labels, *, min_len=4):
+    """Per-query live prefix: covers every candidate with nonzero sparse
+    overlap (the P/Q feature block) AND every positive label, so no
+    supervision signal is dropped by truncation."""
+    feats = np.asarray(feats)
+    labels = np.asarray(labels)
+    n = feats.shape[1]
+    overlap = np.abs(feats[..., 1 + cfg.u_bins:]).sum(axis=-1) > 0
+    live = overlap | (labels > 0)
+    any_live = live.any(axis=1)
+    last = np.where(any_live, n - 1 - np.argmax(live[:, ::-1], axis=1), 0)
+    return np.clip(last + 1, min(min_len, n), n).astype(np.int64)
+
+
+def bucket_lengths(cfg, feats, labels, *, min_len=4):
+    """Effective lengths rounded up to the engine's power-of-two buckets,
+    capped at the full candidate length n."""
+    n = int(np.asarray(feats).shape[1])
+    eff = effective_lengths(cfg, feats, labels, min_len=min_len)
+    return np.asarray([bucket_size(int(e), n) for e in eff], np.int64)
+
+
+def n_batches_per_epoch(buckets, batch_size):
+    lens, counts = np.unique(np.asarray(buckets), return_counts=True)
+    return int(sum(-(-int(c) // int(batch_size)) for c in counts))
+
+
+def bucketed_batches(feats, labels, buckets, *, batch_size, seed, epoch):
+    """Yield one epoch of Batch objects, deterministic in (seed, epoch).
+
+    Queries are shuffled *within* their bucket; buckets are visited in
+    ascending length order. Every query appears exactly once per epoch;
+    tail batches are padded to batch_size by repeating the final row with
+    weight 0."""
+    feats = np.asarray(feats)
+    labels = np.asarray(labels)
+    buckets = np.asarray(buckets)
+    batch_size = max(1, int(batch_size))
+    rng = np.random.default_rng([int(seed), int(epoch)])
+    step = 0
+    for L in sorted(int(x) for x in np.unique(buckets)):
+        idx = np.flatnonzero(buckets == L)
+        idx = rng.permutation(idx)
+        for lo in range(0, len(idx), batch_size):
+            sel = idx[lo:lo + batch_size]
+            pad = batch_size - len(sel)
+            w = np.ones(batch_size, np.float32)
+            if pad:
+                sel = np.concatenate([sel, np.repeat(sel[-1:], pad)])
+                w[len(w) - pad:] = 0.0
+            yield Batch(feats=feats[sel][:, :L],
+                        labels=labels[sel][:, :L],
+                        weights=w, length=L, index=step)
+            step += 1

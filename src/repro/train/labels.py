@@ -1,0 +1,307 @@
+"""Selector supervision at corpus scale (paper §2.3): a candidate cluster
+is POSITIVE iff it holds at least one of the query's top-`top_dense` *full
+dense retrieval* results.
+
+Two label paths produce bit-identical `(cand, feats, labels)`:
+
+  * `make_labels(cfg, index, ...)` — the seed-era in-RAM path:
+    `full_dense_topk` over a materialized `index.embeddings` matrix. Kept
+    for small corpora and as the parity oracle.
+  * `make_labels_streaming(cfg, index, store, ...)` — the exact same
+    supervision computed against a *built on-disk index*: the full-dense
+    top-k is an exact running merge over cluster blocks streamed through
+    any host `ClusterStore` backend (`ShardedDiskStore`, `ShardedPQStore`,
+    memmap-backed `DiskStore`), at most `chunk_clusters` blocks per fetch.
+    The embedding matrix is never materialized; peak resident rows are
+    `chunk_clusters * cap`.
+
+Exactness: per-chunk scores are the same jnp matmul as `full_dense_topk`
+restricted to the chunk's columns (bitwise-equal on a fixed backend), and
+the running merge ranks by (score desc, doc id asc) — `jax.lax.top_k`'s
+tie rule, since the full-matrix column index IS the doc id. For a v2 (PQ)
+index the streamed blocks are decode-on-fetch reconstructions, so the
+labels match the in-RAM path run on the decoded matrix — i.e. supervision
+is exact w.r.t. what the index actually stores and serves.
+
+Generated labels can be spilled to a reusable on-disk `LabelCache` keyed
+by index generation + artifact checksums + label config + query
+fingerprint, so calibration sweeps and repeated training runs never redo
+the streaming pass.
+"""
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clusd as clusd_lib
+from repro.core import sparse as sparse_lib
+
+_PAD_ID = np.int64(1) << 62      # sorts after every real doc id on ties
+
+
+@dataclasses.dataclass(frozen=True)
+class LabelConfig:
+    """What a label set depends on (besides the index + query set)."""
+
+    top_dense: int = 10          # paper: top-10 full dense results
+    stage1: str = "overlap"      # stage-1 candidate ordering
+    chunk_clusters: int = 64     # cluster blocks per streamed fetch
+    use_kernel: bool = False     # route chunk scoring via cluster_score
+
+
+@dataclasses.dataclass
+class LabelGenStats:
+    n_fetches: int = 0
+    blocks_read: int = 0
+    bytes_read: int = 0
+    stream_wall_s: float = 0.0   # fetch + score + merge time only
+    wall_s: float = 0.0          # whole label pass incl. stage-1 features
+
+    def add(self, n_blocks, n_bytes, wall_s):
+        self.n_fetches += 1
+        self.blocks_read += int(n_blocks)
+        self.bytes_read += int(n_bytes)
+        self.stream_wall_s += float(wall_s)
+
+
+@dataclasses.dataclass
+class LabelSet:
+    """One query set's supervision: stage-1 candidates + features and the
+    positive/negative label per candidate, plus the full-dense top-k ids
+    the labels were derived from (reused by calibration's recall@budget)."""
+
+    cand: np.ndarray         # (B, n) int32 stage-1 candidate cluster ids
+    feats: np.ndarray        # (B, n, F) float32 LSTM input features
+    labels: np.ndarray       # (B, n) float32 in {0, 1}
+    dense_ids: np.ndarray    # (B, top_dense) int32 full-dense top-k doc ids
+    stats: Optional[LabelGenStats] = None
+
+    @property
+    def n_queries(self):
+        return int(self.cand.shape[0])
+
+    @property
+    def pos_rate(self):
+        return float(np.asarray(self.labels).mean())
+
+
+# ---------------------------------------------------------------------------
+# in-RAM path (seed behavior, unchanged — also the parity oracle)
+# ---------------------------------------------------------------------------
+
+def make_labels(cfg, index, q_dense, q_terms, q_weights, top_dense=10,
+                stage1="overlap"):
+    """Returns (cand (B, n), feats (B, n, F), labels (B, n)).
+
+    Requires a materialized `index.embeddings` matrix; for built on-disk
+    indexes use `make_labels_streaming` (same outputs, bounded reads)."""
+    cand, feats, sparse_ids, sparse_scores = _stage1(
+        cfg, index, q_dense, q_terms, q_weights, stage1)
+    dense_ids, _ = clusd_lib.full_dense_topk(index.embeddings, q_dense,
+                                             top_dense)
+    labels = _labels_from_dense(index, cand, dense_ids)
+    return cand, feats, labels
+
+
+def _stage1(cfg, index, q_dense, q_terms, q_weights, stage1):
+    sparse_ids, sparse_scores = sparse_lib.sparse_retrieve_topk(
+        index.sparse_index, q_terms, q_weights, cfg.k_sparse)
+    s1 = clusd_lib.stage1_candidates(cfg, index, q_dense, sparse_ids,
+                                     sparse_scores, stage1=stage1)
+    return s1["cand"], s1["feats"], sparse_ids, sparse_scores
+
+
+def _labels_from_dense(index, cand, dense_ids):
+    pos_clusters = jnp.take(index.doc_cluster, dense_ids, axis=0)  # (B, k)
+    labels = jnp.any(cand[:, :, None] == pos_clusters[:, None, :], axis=-1)
+    return labels.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# streaming full-dense top-k over a ClusterStore
+# ---------------------------------------------------------------------------
+
+def _chunk_scores(q_dense, vecs, use_kernel):
+    """(B, dim) x (U, cap, dim) -> (B, U*cap) float32 dot scores."""
+    U, cap, dim = vecs.shape
+    if use_kernel:
+        from repro.kernels.cluster_score import cluster_score
+        B = q_dense.shape[0]
+        sel = jnp.broadcast_to(jnp.arange(U, dtype=jnp.int32)[None, :],
+                               (B, U))
+        return np.asarray(cluster_score(jnp.asarray(q_dense),
+                                        jnp.asarray(vecs),
+                                        sel)).reshape(B, U * cap)
+    # same matmul as full_dense_topk restricted to this chunk's columns —
+    # bitwise-equal scores on a fixed backend (the parity contract)
+    flat = jnp.asarray(np.ascontiguousarray(vecs).reshape(U * cap, dim))
+    return np.asarray(jnp.asarray(q_dense) @ flat.T)
+
+
+def _merge_topk(best_s, best_i, new_s, new_i, k):
+    """Running (score desc, id asc) top-k merge — lax.top_k's tie rule."""
+    s = np.concatenate([best_s, new_s], axis=1)
+    i = np.concatenate([best_i, new_i], axis=1)
+    order = np.lexsort((i, -s), axis=-1)[:, :k]
+    return (np.take_along_axis(s, order, axis=1),
+            np.take_along_axis(i, order, axis=1))
+
+
+def streaming_full_dense_topk(store, q_dense, k, *, chunk_clusters=64,
+                              use_kernel=False, stats: LabelGenStats = None):
+    """Exact full-dense top-k computed by streaming cluster blocks.
+
+    Every `fetch_blocks` call asks for at most `chunk_clusters` cluster
+    ids (bounded-read contract, enforced by tests/test_train.py); a
+    running per-query top-k merge keeps only (B, k) candidates resident.
+    Returns (ids (B, k) int32, scores (B, k) f32), identical to
+    `full_dense_topk(embeddings, q_dense, k)` over the matrix the store
+    decodes to (exact floats for v1 blocks, PQ reconstructions for v2).
+    """
+    q = np.asarray(q_dense)
+    B = q.shape[0]
+    N = int(store.cluster_docs.shape[0])
+    chunk_clusters = max(1, int(chunk_clusters))
+    best_s = np.full((B, k), -np.inf, np.float32)
+    best_i = np.full((B, k), _PAD_ID, np.int64)
+    block_bytes = int(getattr(store, "block_bytes", 0))
+    for lo in range(0, N, chunk_clusters):
+        ids = np.arange(lo, min(lo + chunk_clusters, N), dtype=np.int64)
+        t0 = time.perf_counter()
+        vecs, docs, valid = store.fetch_blocks(ids)
+        vecs = np.asarray(vecs)
+        docs = np.asarray(docs)
+        valid = np.asarray(valid)
+        scores = _chunk_scores(q, vecs, use_kernel)          # (B, U*cap)
+        flat_docs = docs.reshape(-1).astype(np.int64)
+        flat_valid = valid.reshape(-1)
+        # mask padded / tombstoned slots out of the merge entirely
+        scores = np.where(flat_valid[None, :], scores, -np.inf)
+        ids_row = np.where(flat_valid, flat_docs, _PAD_ID)
+        best_s, best_i = _merge_topk(
+            best_s, best_i, scores.astype(np.float32),
+            np.broadcast_to(ids_row[None, :], scores.shape), k)
+        if stats is not None:
+            stats.add(len(ids), len(ids) * block_bytes,
+                      time.perf_counter() - t0)
+    if np.any(best_i >= _PAD_ID):
+        raise ValueError(f"corpus holds fewer than k={k} live documents")
+    return best_i.astype(np.int32), best_s
+
+
+def make_labels_streaming(cfg, index, store, q_dense, q_terms, q_weights, *,
+                          label_cfg: LabelConfig = LabelConfig()):
+    """Index-backed `make_labels`: identical `(cand, feats, labels)` with
+    the full-dense pass streamed through `store` (bounded reads, no
+    materialized embedding matrix). Returns a LabelSet."""
+    stats = LabelGenStats()
+    t0 = time.perf_counter()
+    cand, feats, _, _ = _stage1(cfg, index, q_dense, q_terms, q_weights,
+                                label_cfg.stage1)
+    dense_ids, _ = streaming_full_dense_topk(
+        store, q_dense, label_cfg.top_dense,
+        chunk_clusters=label_cfg.chunk_clusters,
+        use_kernel=label_cfg.use_kernel, stats=stats)
+    labels = _labels_from_dense(index, cand, jnp.asarray(dense_ids))
+    stats.wall_s = time.perf_counter() - t0
+    return LabelSet(cand=np.asarray(cand), feats=np.asarray(feats),
+                    labels=np.asarray(labels), dense_ids=dense_ids,
+                    stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# reusable on-disk label cache
+# ---------------------------------------------------------------------------
+
+def query_fingerprint(q_dense, q_terms, q_weights):
+    h = hashlib.sha256()
+    for a in (q_dense, q_terms, q_weights):
+        a = np.ascontiguousarray(np.asarray(a))
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+# config fields the labels actually depend on: sparse retrieval + stage-1
+# candidate ordering + features. Selector-side fields (theta, max_selected,
+# pos_weight, lr, ...) deliberately excluded — a selector publish bumps the
+# index generation without touching the corpus, and must not invalidate
+# cached labels.
+_LABEL_CFG_FIELDS = ("n_docs", "dim", "n_clusters", "vocab", "max_postings",
+                     "k_sparse", "bins", "n_candidates", "n_neighbors",
+                     "u_bins")
+
+
+def label_cache_key(manifest, cfg, label_cfg: LabelConfig, q_fingerprint):
+    """Cache key: per-artifact content hashes (every non-selector file —
+    any corpus delta rewrites arrays/shards, so their sha256s pin the
+    exact documents) + the label-relevant config + label config + the
+    query-set fingerprint. Selector-only generations (publishes) reuse
+    the cache; over-keying is safe, staleness is not."""
+    ident = {
+        "format_version": manifest["format_version"],
+        "geometry": manifest["geometry"],
+        "files": {rel: e["sha256"]
+                  for rel, e in (manifest.get("files") or {}).items()
+                  if not rel.startswith("lstm")},   # selector never feeds labels
+        "config": {f: getattr(cfg, f) for f in _LABEL_CFG_FIELDS},
+        "label_config": dataclasses.asdict(label_cfg),
+        "queries": q_fingerprint,
+    }
+    blob = json.dumps(ident, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+class LabelCache:
+    """Directory of spilled LabelSets, one `<key>.npz` + `<key>.json` pair
+    per (index generation, label config, query set). Writes are atomic
+    (tmp + os.replace), so a crashed run never leaves a torn entry."""
+
+    def __init__(self, cache_dir):
+        self.dir = os.path.abspath(cache_dir)
+        os.makedirs(self.dir, exist_ok=True)
+
+    def _paths(self, key):
+        return (os.path.join(self.dir, f"{key}.npz"),
+                os.path.join(self.dir, f"{key}.json"))
+
+    def load(self, key) -> Optional[LabelSet]:
+        npz, meta = self._paths(key)
+        if not (os.path.isfile(npz) and os.path.isfile(meta)):
+            return None
+        with np.load(npz) as z:
+            return LabelSet(cand=z["cand"], feats=z["feats"],
+                            labels=z["labels"], dense_ids=z["dense_ids"])
+
+    def save(self, key, ls: LabelSet, extra: Any = None):
+        npz, meta = self._paths(key)
+        tmp = npz + ".tmp"
+        with open(tmp, "wb") as f:      # file handle: savez must not append
+            np.savez(f, cand=ls.cand, feats=ls.feats, labels=ls.labels,
+                     dense_ids=ls.dense_ids)     # .npz to the tmp name
+        os.replace(tmp, npz)
+        info = {"n_queries": ls.n_queries, "pos_rate": ls.pos_rate,
+                "extra": extra or {}}
+        if ls.stats is not None:
+            info["gen_stats"] = dataclasses.asdict(ls.stats)
+        tmp = meta + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(info, f, indent=1, sort_keys=True)
+        os.replace(tmp, meta)
+        return npz
+
+    def get_or_build(self, key, build_fn, extra=None):
+        """Returns (LabelSet, cache_hit)."""
+        ls = self.load(key)
+        if ls is not None:
+            return ls, True
+        ls = build_fn()
+        self.save(key, ls, extra=extra)
+        return ls, False

@@ -1,0 +1,131 @@
+"""Atomic selector publishing: commit trained weights + calibrated
+thresholds into a built index as a new generation.
+
+Reuses the PR-4 generation protocol (repro.index.update): new artifacts
+are staged under `<index_dir>/.stage-g<G>` with generation-suffixed names
+(`lstm.g<G>/step_0/...`), moved into place without clobbering anything
+the live manifest references, the current manifest is archived to
+`manifests/manifest.g<g>.json`, and the new manifest atomically replaces
+`manifest.json`. A reader racing the commit sees either generation, never
+a torn index; a serving engine adopts the new selector between batches
+via `RetrievalEngine.reload_selector()` (or a full `reload_index()`) with
+no failed requests.
+
+What a publish changes in the manifest:
+
+  generation / parent_generation   bumped / set to the previous generation
+  lstm                             points at the new `lstm.g<G>` checkpoint
+  config.theta / config.max_selected   the calibrated operating point —
+                                   readers serve it with no extra wiring
+  selector                         metadata block: operating point, the
+                                   full calibration table, label config,
+                                   and training stats (see format.py)
+
+Cluster blocks, arrays, and postings are carried by reference — a publish
+rewrites zero corpus bytes. `compact_index` keeps the weights and the
+calibrated config (it serializes what the reader loads) but drops the
+auxiliary `selector` metadata block, like any non-layout bookkeeping.
+"""
+
+import copy
+import os
+import shutil
+import time
+
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.index import format as fmt
+
+
+def _stage_relpaths(stage):
+    out = []
+    for dirpath, _, names in os.walk(stage):
+        for name in sorted(names):
+            out.append(os.path.relpath(os.path.join(dirpath, name), stage))
+    return sorted(out)
+
+
+def publish_selector(index_dir, params, *, theta=None, budget=None,
+                     calibration=None, label_config=None, train_meta=None,
+                     selector="lstm", verify="size"):
+    """Commit `params` (+ calibrated theta/budget) to the index at
+    `index_dir` as generation G = current + 1. Returns a report dict.
+
+    Only the paper's LSTM selector round-trips through the manifest's
+    `lstm` checkpoint schema; other selector kinds must extend it first.
+    """
+    if selector != "lstm":
+        raise ValueError(f"publish supports the lstm selector (manifest "
+                         f"schema), got {selector!r}")
+    t0 = time.perf_counter()
+    manifest = fmt.load_manifest(index_dir)
+    fmt.verify_files(index_dir, manifest, level=verify)
+    g = fmt.manifest_generation(manifest)
+    G = g + 1
+
+    host = {k: np.asarray(v) for k, v in params.items()}
+    for key in ("wx", "wh", "b", "head_w", "head_b"):
+        if key not in host:
+            raise ValueError(f"lstm params missing leaf {key!r}")
+    feat_dim = int(host["wx"].shape[0])
+    hidden = int(host["wh"].shape[0])
+
+    # -- stage the new checkpoint under a generation-suffixed dir ----------
+    stage = os.path.join(index_dir, f".stage-g{G}")
+    if os.path.exists(stage):
+        shutil.rmtree(stage)
+    os.makedirs(stage)
+    lstm_dir = f"lstm.g{G}"
+    lstm_meta = {"dir": lstm_dir, "step": 0, "selector": selector,
+                 "feat_dim": feat_dim, "hidden": hidden}
+    save_checkpoint(os.path.join(stage, lstm_dir), 0, host,
+                    extra={k: lstm_meta[k]
+                           for k in ("selector", "feat_dim", "hidden")})
+    staged = _stage_relpaths(stage)
+
+    # -- manifest for generation G -----------------------------------------
+    new_manifest = copy.deepcopy(manifest)
+    new_manifest["generation"] = G
+    new_manifest["parent_generation"] = g
+    new_manifest["lstm"] = lstm_meta
+    cfg_d = new_manifest["config"]
+    if theta is not None:
+        cfg_d["theta"] = float(theta)
+    if budget is not None:
+        cfg_d["max_selected"] = int(budget)
+    new_manifest["selector"] = {
+        "selector": selector,
+        "published_generation": G,
+        "theta": cfg_d["theta"],
+        "budget": cfg_d["max_selected"],
+        "calibration": list(calibration or []),
+        "label_config": dict(label_config or {}),
+        "train": dict(train_meta or {}),
+    }
+
+    old_lstm = (manifest.get("lstm") or {}).get("dir")
+    files = {rel: e for rel, e in manifest["files"].items()
+             if not (old_lstm and (rel == old_lstm
+                                   or rel.startswith(old_lstm + "/")
+                                   or rel.startswith(old_lstm + os.sep)))}
+    for rel in staged:
+        full = os.path.join(stage, rel)
+        files[rel] = {"bytes": os.path.getsize(full),
+                      "sha256": fmt.file_sha256(full)}
+    new_manifest["files"] = files
+    new_manifest["total_bytes"] = sum(e["bytes"] for e in files.values())
+
+    # -- commit: the shared generation protocol (index/format.py) ----------
+    fmt.commit_generation(index_dir, stage, staged, manifest, new_manifest)
+
+    return {
+        "generation": G,
+        "parent_generation": g,
+        "lstm_dir": lstm_dir,
+        "theta": cfg_d["theta"],
+        "budget": cfg_d["max_selected"],
+        "n_files_added": len(staged),
+        "bytes_added": sum(files[rel]["bytes"] for rel in staged),
+        "wall_s": round(time.perf_counter() - t0, 3),
+    }

@@ -1,0 +1,300 @@
+"""Selector training: the legacy one-shot `train_selector` (seed API,
+now config-driven) and the production `SelectorTrainer` — bucketed
+batches, jit-compiled steps on the fused Pallas LSTM cell, periodic
+`repro.checkpoint` checkpoints, and deterministic mid-epoch resume.
+
+Loss: class-balanced BCE over the candidate sequence. The positive weight
+comes from `cfg.pos_weight` (default 4.0, the historical constant); when
+the config sets it to None the trainer derives it from the observed
+positive rate of the label set (w = (1-p)/p, clipped), so rebalancing
+tracks the corpus instead of a hardcoded guess.
+
+Kernel path: with `use_kernel` (default "auto" = on TPU), the forward
+hidden sequence runs through the fused `repro.kernels.lstm` Pallas cell;
+the backward pass is a `jax.custom_vjp` that differentiates the jnp
+reference scan (same math, so gradients are exact for the kernel's
+function). On CPU the interpret-mode kernel is slower than the scan, so
+"auto" keeps the reference path there.
+
+Checkpoint layout (`repro.checkpoint`): tree {params, opt}, extra
+{epoch, batch, pos_weight, selector}. The batch stream is a pure function
+of (seed, epoch) — see train/data.py — so restoring a mid-epoch
+checkpoint and skipping the consumed batches replays the exact schedule:
+train N steps == train k steps, resume, train N-k (property-tested).
+"""
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.lstm import SELECTORS
+from repro.kernels.lstm import ops as lstm_ops
+from repro.kernels.lstm.ref import lstm_sequence_ref
+from repro.optim import adamw_init, adamw_update
+from repro.train import data as data_lib
+
+_DERIVED_POS_WEIGHT_MAX = 100.0
+
+
+def derive_pos_weight(labels, lo=1.0, hi=_DERIVED_POS_WEIGHT_MAX):
+    """Class-balance weight from the observed positive rate: w = (1-p)/p
+    (each positive weighted like the negatives it is outnumbered by),
+    clipped to [lo, hi] so a near-empty label set cannot explode the
+    loss."""
+    p = float(np.asarray(labels).mean())
+    if p <= 0.0:
+        return float(hi)
+    return float(np.clip((1.0 - p) / p, lo, hi))
+
+
+def resolve_pos_weight(cfg, labels, override=None):
+    """Effective positive weight: explicit override > cfg.pos_weight >
+    derived-from-labels (when the config value is None)."""
+    w = override if override is not None else getattr(cfg, "pos_weight", 4.0)
+    if w is None:
+        return derive_pos_weight(labels)
+    return float(w)
+
+
+# ---------------------------------------------------------------------------
+# kernel-forward LSTM with exact custom backward
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _lstm_hseq_kernel(feats, wx, wh, b):
+    return lstm_ops.lstm_sequence(feats, wx, wh, b)
+
+
+def _lstm_hseq_fwd(feats, wx, wh, b):
+    return _lstm_hseq_kernel(feats, wx, wh, b), (feats, wx, wh, b)
+
+
+def _lstm_hseq_bwd(residuals, g):
+    # recompute-through-reference: the jnp scan computes the same function
+    # as the fused kernel, so its VJP is the kernel's exact gradient
+    _, vjp = jax.vjp(lstm_sequence_ref, *residuals)
+    return vjp(g)
+
+
+_lstm_hseq_kernel.defvjp(_lstm_hseq_fwd, _lstm_hseq_bwd)
+
+
+def selector_apply(params, feats, *, selector="lstm", use_kernel=False):
+    """Selection probabilities (B, n); `use_kernel` routes the LSTM
+    forward through the fused Pallas cell (differentiable via the
+    custom VJP above)."""
+    if selector == "lstm" and use_kernel:
+        h_seq = _lstm_hseq_kernel(feats, params["wx"], params["wh"],
+                                  params["b"])
+        logits = (h_seq @ params["head_w"] + params["head_b"])[..., 0]
+        return jax.nn.sigmoid(logits)
+    _, apply = SELECTORS[selector]
+    return apply(params, feats)
+
+
+def _resolve_use_kernel(use_kernel):
+    if use_kernel == "auto":
+        return jax.default_backend() == "tpu"
+    return bool(use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# legacy one-shot API (seed behavior; core.train_lstm wraps this)
+# ---------------------------------------------------------------------------
+
+def train_selector(cfg, rng, feats, labels, selector="lstm", epochs=None,
+                   lr=None, batch_size=256, log_every=0, pos_weight=None):
+    """Train a stage-2 selector on precomputed (feats, labels).
+
+    The seed trainer, kept as the simple path (whole label set in memory,
+    no bucketing/checkpoints). pos_weight: None defers to cfg.pos_weight
+    (and derives from the label positive rate when that is None too)."""
+    epochs = epochs or cfg.epochs
+    lr = lr or cfg.lr
+    init_fn, apply_fn = SELECTORS[selector]
+    params = init_fn(rng, feats.shape[-1], cfg.lstm_hidden)
+    opt = adamw_init(params)
+    w_pos = resolve_pos_weight(cfg, labels, pos_weight)
+
+    def loss_fn(p, f, y):
+        probs = apply_fn(p, f)
+        probs = jnp.clip(probs, 1e-6, 1 - 1e-6)
+        # class-balance: positives are rare in the candidate sequence
+        bce = -(w_pos * y * jnp.log(probs) + (1 - y) * jnp.log(1 - probs))
+        return jnp.mean(bce)
+
+    @jax.jit
+    def step(p, o, f, y):
+        loss, grads = jax.value_and_grad(loss_fn)(p, f, y)
+        p, o, _ = adamw_update(grads, o, p, lr=lr, weight_decay=0.0)
+        return p, o, loss
+
+    nq = feats.shape[0]
+    rngs = jax.random.split(jax.random.fold_in(rng, 1), epochs)
+    history = []
+    for e in range(epochs):
+        perm = jax.random.permutation(rngs[e], nq)
+        f_sh, y_sh = feats[perm], labels[perm]
+        losses = []
+        for i in range(0, nq - batch_size + 1, batch_size) or [0]:
+            fb, yb = f_sh[i:i + batch_size], y_sh[i:i + batch_size]
+            params, opt, loss = step(params, opt, fb, yb)
+            losses.append(float(loss))
+        if nq < batch_size:
+            params, opt, loss = step(params, opt, f_sh, y_sh)
+            losses.append(float(loss))
+        history.append(sum(losses) / max(len(losses), 1))
+        if log_every and (e + 1) % log_every == 0:
+            print(f"epoch {e+1}/{epochs} loss={history[-1]:.4f}", flush=True)
+    return params, history
+
+
+# ---------------------------------------------------------------------------
+# production trainer: buckets + checkpoints + resume
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SelectorTrainConfig:
+    """Knobs of the streaming trainer (None defers to the CluSDConfig)."""
+
+    selector: str = "lstm"
+    epochs: Optional[int] = None        # None -> cfg.epochs
+    lr: Optional[float] = None          # None -> cfg.lr
+    batch_size: int = 256
+    pos_weight: Optional[float] = None  # None -> cfg.pos_weight / derived
+    bucket: bool = True                 # power-of-two sequence buckets
+    min_len: int = 4
+    use_kernel: Union[bool, str] = "auto"   # Pallas LSTM cell forward
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every_steps: int = 0           # 0 = checkpoint only at the end
+    keep_ckpts: int = 3
+    max_steps: int = 0                  # stop (and checkpoint) after N
+                                        # optimizer steps; 0 = unlimited
+
+
+class SelectorTrainer:
+    """Bucketed, checkpointed selector training over a LabelSet."""
+
+    def __init__(self, cfg, tcfg: SelectorTrainConfig = SelectorTrainConfig()):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.use_kernel = _resolve_use_kernel(tcfg.use_kernel)
+        self._steps = {}                    # bucket length L -> jitted step
+        self.pos_weight = None              # resolved by fit()
+
+    # -- compiled step per bucket length -----------------------------------
+
+    def _step_fn(self, L):
+        fn = self._steps.get(L)
+        if fn is not None:
+            return fn
+        selector = self.tcfg.selector
+        use_kernel = self.use_kernel
+        lr = self.tcfg.lr or self.cfg.lr
+
+        def loss_fn(p, f, y, w, pos_w):
+            probs = selector_apply(p, f, selector=selector,
+                                   use_kernel=use_kernel)
+            probs = jnp.clip(probs, 1e-6, 1 - 1e-6)
+            bce = -(pos_w * y * jnp.log(probs)
+                    + (1 - y) * jnp.log(1 - probs))         # (B, L)
+            per_row = jnp.mean(bce, axis=1)
+            return jnp.sum(per_row * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+        def step(p, o, f, y, w, pos_w):
+            loss, grads = jax.value_and_grad(loss_fn)(p, f, y, w, pos_w)
+            p, o, _ = adamw_update(grads, o, p, lr=lr, weight_decay=0.0)
+            return p, o, loss
+
+        fn = jax.jit(step)
+        self._steps[L] = fn
+        return fn
+
+    # -- training ----------------------------------------------------------
+
+    def init_params(self, rng, feat_dim):
+        init_fn, _ = SELECTORS[self.tcfg.selector]
+        return init_fn(rng, feat_dim, self.cfg.lstm_hidden)
+
+    def fit(self, rng, feats, labels, *, resume=False, log_every=0):
+        """Train; returns (params, history). With tcfg.ckpt_dir set,
+        checkpoints land every ckpt_every_steps steps (and at the end);
+        resume=True restores the latest checkpoint and replays the
+        deterministic batch schedule from right after it."""
+        feats = np.asarray(feats, np.float32)
+        labels = np.asarray(labels, np.float32)
+        tc = self.tcfg
+        epochs = tc.epochs or self.cfg.epochs
+        self.pos_weight = resolve_pos_weight(self.cfg, labels, tc.pos_weight)
+        pos_w = jnp.float32(self.pos_weight)
+        if tc.bucket:
+            buckets = data_lib.bucket_lengths(self.cfg, feats, labels,
+                                              min_len=tc.min_len)
+        else:
+            buckets = np.full(feats.shape[0], feats.shape[1], np.int64)
+        per_epoch = data_lib.n_batches_per_epoch(buckets, tc.batch_size)
+
+        params = self.init_params(rng, feats.shape[-1])
+        opt = adamw_init(params)
+        start_epoch = start_batch = global_step = 0
+        mgr = None
+        if tc.ckpt_dir:
+            mgr = CheckpointManager(tc.ckpt_dir, keep=tc.keep_ckpts)
+            if resume:
+                step0, tree, extra = mgr.restore_latest(
+                    {"params": params, "opt": opt})
+                if step0 is not None:
+                    params, opt = tree["params"], tree["opt"]
+                    global_step = int(step0)
+                    start_epoch = int(extra.get("epoch", 0))
+                    start_batch = int(extra.get("batch", 0))
+                    if start_batch >= per_epoch:    # epoch boundary ckpt
+                        start_epoch, start_batch = start_epoch + 1, 0
+
+        def save(epoch, batch):
+            if mgr is not None:
+                mgr.save(global_step,
+                         {"params": params, "opt": opt},
+                         extra={"epoch": epoch, "batch": batch,
+                                "selector": tc.selector,
+                                "pos_weight": self.pos_weight})
+
+        history = []
+        for e in range(start_epoch, epochs):
+            losses = []
+            for batch in data_lib.bucketed_batches(
+                    feats, labels, buckets, batch_size=tc.batch_size,
+                    seed=tc.seed, epoch=e):
+                if e == start_epoch and batch.index < start_batch:
+                    continue
+                step = self._step_fn(batch.length)
+                params, opt, loss = step(
+                    params, opt, jnp.asarray(batch.feats),
+                    jnp.asarray(batch.labels), jnp.asarray(batch.weights),
+                    pos_w)
+                global_step += 1
+                losses.append(float(loss))
+                if tc.ckpt_every_steps and \
+                        global_step % tc.ckpt_every_steps == 0:
+                    save(e, batch.index + 1)
+                if tc.max_steps and global_step >= tc.max_steps:
+                    save(e, batch.index + 1)    # resumable stop point
+                    if losses:
+                        history.append(sum(losses) / len(losses))
+                    if mgr is not None:
+                        mgr.wait()
+                    return params, history
+            if losses:
+                history.append(sum(losses) / len(losses))
+            if log_every and (e + 1) % log_every == 0:
+                print(f"epoch {e+1}/{epochs} loss={history[-1]:.4f} "
+                      f"(pos_weight={self.pos_weight:.2f})", flush=True)
+        save(epochs, 0)
+        if mgr is not None:
+            mgr.wait()
+        return params, history

@@ -13,7 +13,7 @@ REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 CLIS = ["repro.launch.build_index", "repro.launch.serve",
         "repro.launch.update_index", "repro.launch.train",
-        "repro.launch.dryrun"]
+        "repro.launch.train_selector", "repro.launch.dryrun"]
 
 
 def _help_output(module):
@@ -54,3 +54,27 @@ def test_update_index_help_documents_current_flags():
     for flag in ("--upserts", "--deletes", "--compact", "--check-parity",
                  "--serve-queries", "--recluster-overflow"):
         assert flag in out, f"update_index --help no longer documents {flag}"
+
+
+def test_train_selector_help_documents_current_flags():
+    out = _help_output("repro.launch.train_selector")
+    for flag in ("--index-dir", "--train-queries", "--holdout-queries",
+                 "--chunk-clusters", "--label-cache", "--pos-weight",
+                 "--no-bucket", "--use-kernel", "--ckpt-every", "--resume",
+                 "--thetas", "--budgets", "--target-recall",
+                 "--target-budget", "--publish", "--serve-check"):
+        assert flag in out, \
+            f"train_selector --help no longer documents {flag}"
+    # the epilog is the module docstring: the four pipeline stages must be
+    # documented in help verbatim
+    for word in ("LABELS", "TRAIN", "CALIBRATE", "PUBLISH"):
+        assert word in out
+
+
+def test_train_help_is_docstring_backed():
+    out = _help_output("repro.launch.train")
+    for flag in ("--arch", "--variant", "--steps", "--ckpt-every",
+                 "--fail-at"):
+        assert flag in out, f"train --help no longer documents {flag}"
+    # epilog = module docstring (the restartable-loop description)
+    assert "fault-tolerant" in out or "restartable" in out

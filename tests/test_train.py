@@ -1,0 +1,443 @@
+"""Selector-training subsystem tests (src/repro/train/):
+
+  * streaming index-backed label generation is bit-identical to the
+    in-RAM `make_labels` path on the same corpus/geometry — for v1 float
+    shards (vs the raw embeddings) and v2 PQ shards (vs the decoded
+    matrix the index actually stores) — at ANY chunk budget (property
+    test), with every streamed read bounded (CappedFetch wrapper) and no
+    embedding matrix materialized
+  * label cache round trip + key sensitivity to generation/config/queries
+  * checkpoint-resume determinism: train N steps == train k, resume,
+    train N-k — bitwise-equal parameters
+  * config-driven BCE positive weight (cfg.pos_weight, derived when None)
+  * power-of-two sequence bucketing: exact per-epoch coverage, weighted
+    padding, and truncation-exactness of the causal selectors
+  * calibration sweep semantics + operating-point choice
+  * publish-as-generation: manifest/selector metadata, full-verify
+    integrity, live-engine reload_selector parity vs a fresh engine
+  * Pallas-LSTM-cell training step: kernel-forward gradients match the
+    reference scan
+"""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # fall back to deterministic sweeps
+    from _hypothesis_stub import given, settings
+    from _hypothesis_stub import strategies as st
+
+from repro import index as index_lib
+from repro import train as train_lib
+from repro.configs import get_config
+from repro.core import clusd as cl
+from repro.core import train_lstm as tl
+from repro.data import synth_corpus, synth_queries
+
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        get_config("clusd-msmarco", "smoke"),
+        n_docs=512, dim=16, n_clusters=32, vocab=256, max_postings=128,
+        k_sparse=64, bins=(5, 15, 30, 64), n_candidates=8, max_selected=4,
+        n_neighbors=8, u_bins=4, k_final=32, train_queries=24, epochs=2)
+
+
+class CappedFetchStore:
+    """ClusterStore wrapper that fails the test if any single fetch asks
+    for more than `max_blocks` cluster blocks — the bounded-read contract
+    of streaming label generation, enforced."""
+
+    is_host = True
+
+    def __init__(self, store, max_blocks):
+        self._store = store
+        self.max_blocks = int(max_blocks)
+        self.peak = 0
+
+    @property
+    def cluster_docs(self):
+        return self._store.cluster_docs
+
+    @property
+    def block_bytes(self):
+        return self._store.block_bytes
+
+    def fetch_blocks(self, cluster_ids):
+        n = len(np.asarray(cluster_ids).reshape(-1))
+        self.peak = max(self.peak, n)
+        assert n <= self.max_blocks, \
+            f"fetched {n} blocks in one read (cap {self.max_blocks})"
+        return self._store.fetch_blocks(cluster_ids)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """Tiny corpus serialized as BOTH on-disk formats + a label query set."""
+    cfg = _tiny_cfg()
+    corpus = synth_corpus(0, cfg.n_docs, cfg.dim, cfg.vocab)
+    index = cl.build_index(cfg, jax.random.key(0), corpus.embeddings,
+                           corpus.doc_terms, corpus.doc_weights)
+    root = tmp_path_factory.mktemp("train_idx")
+    out_v1 = str(root / "v1")
+    out_v2 = str(root / "v2")
+    emb = np.asarray(corpus.embeddings)
+    index_lib.write_index(out_v1, cfg, index, emb, n_shards=3)
+    index_lib.write_index(out_v2, cfg, index, emb, n_shards=3,
+                          format_version=2, pq_nsub=4)
+    qs = synth_queries(3, corpus, 24)
+    return cfg, corpus, index, out_v1, out_v2, qs
+
+
+def _open(out):
+    reader = index_lib.IndexReader.open(out)
+    cfg, lindex = reader.load_index()
+    store = reader.open_store(cluster_docs=lindex.cluster_docs)
+    return reader, cfg, lindex, store
+
+
+def _decoded_matrix(store, n_docs, dim):
+    """The (D, dim) float matrix a store's shards decode to."""
+    dec = np.zeros((n_docs, dim), np.float32)
+    vecs, docs, valid = store.fetch_blocks(np.arange(store.n_clusters))
+    dec[np.asarray(docs)[np.asarray(valid)]] = \
+        np.asarray(vecs)[np.asarray(valid)]
+    return dec
+
+
+# ---------------------------------------------------------------------------
+# streaming label parity
+# ---------------------------------------------------------------------------
+
+def test_streaming_labels_bitwise_match_inram_v1(built):
+    cfg, corpus, index, out_v1, _, qs = built
+    reader, lcfg, lindex, store = _open(out_v1)
+    assert lindex.embeddings is None     # never materialized
+    cand, feats, labels = tl.make_labels(cfg, index, qs.q_dense, qs.q_terms,
+                                         qs.q_weights)
+    ls = train_lib.make_labels_streaming(
+        lcfg, lindex, store, qs.q_dense, qs.q_terms, qs.q_weights,
+        label_cfg=train_lib.LabelConfig(chunk_clusters=5))
+    np.testing.assert_array_equal(np.asarray(cand), ls.cand)
+    np.testing.assert_array_equal(np.asarray(feats), ls.feats)
+    np.testing.assert_array_equal(np.asarray(labels), ls.labels)
+    ref_ids, _ = cl.full_dense_topk(corpus.embeddings, qs.q_dense, 10)
+    np.testing.assert_array_equal(np.asarray(ref_ids), ls.dense_ids)
+
+
+def test_streaming_labels_bitwise_match_inram_v2(built):
+    """v2 supervision is exact w.r.t. what the PQ index stores: streaming
+    off the code shards == in-RAM make_labels on the decoded matrix."""
+    cfg, _, _, _, out_v2, qs = built
+    reader, lcfg, lindex, store = _open(out_v2)
+    dec = _decoded_matrix(store, cfg.n_docs, cfg.dim)
+    lindex.embeddings = jnp.asarray(dec)
+    cand, feats, labels = tl.make_labels(lcfg, lindex, qs.q_dense,
+                                         qs.q_terms, qs.q_weights)
+    lindex.embeddings = None
+    ls = train_lib.make_labels_streaming(
+        lcfg, lindex, store, qs.q_dense, qs.q_terms, qs.q_weights,
+        label_cfg=train_lib.LabelConfig(chunk_clusters=7))
+    np.testing.assert_array_equal(np.asarray(cand), ls.cand)
+    np.testing.assert_array_equal(np.asarray(feats), ls.feats)
+    np.testing.assert_array_equal(np.asarray(labels), ls.labels)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 32))
+def test_streaming_topk_exact_and_bounded_any_chunk(built, chunk):
+    """Property: at ANY chunk budget the streamed top-k equals the full
+    matmul top-k bitwise, and no single read exceeds the budget."""
+    cfg, corpus, _, out_v1, _, qs = built
+    _, _, _, store = _open(out_v1)
+    capped = CappedFetchStore(store, chunk)
+    ids, scores = train_lib.streaming_full_dense_topk(
+        capped, qs.q_dense, 10, chunk_clusters=chunk)
+    ref_ids, ref_scores = cl.full_dense_topk(corpus.embeddings,
+                                             qs.q_dense, 10)
+    np.testing.assert_array_equal(np.asarray(ref_ids), ids)
+    np.testing.assert_array_equal(np.asarray(ref_scores), scores)
+    assert 0 < capped.peak <= chunk
+
+
+def test_label_cache_roundtrip_and_key_sensitivity(built, tmp_path):
+    cfg, _, _, out_v1, _, qs = built
+    reader, lcfg, lindex, store = _open(out_v1)
+    label_cfg = train_lib.LabelConfig(chunk_clusters=5)
+    fp = train_lib.query_fingerprint(qs.q_dense, qs.q_terms, qs.q_weights)
+    key = train_lib.label_cache_key(reader.manifest, lcfg, label_cfg, fp)
+    cache = train_lib.LabelCache(str(tmp_path / "labels"))
+    assert cache.load(key) is None
+    calls = []
+    ls, hit = cache.get_or_build(key, lambda: (calls.append(1) or
+        train_lib.make_labels_streaming(lcfg, lindex, store, qs.q_dense,
+                                        qs.q_terms, qs.q_weights,
+                                        label_cfg=label_cfg)))
+    assert not hit and calls == [1]
+    ls2, hit2 = cache.get_or_build(key, lambda: calls.append(2))
+    assert hit2 and calls == [1]          # second call never rebuilds
+    for attr in ("cand", "feats", "labels", "dense_ids"):
+        np.testing.assert_array_equal(getattr(ls, attr), getattr(ls2, attr))
+    # any input the labels depend on changes the key ...
+    import json as json_lib
+    assert key != train_lib.label_cache_key(
+        reader.manifest, lcfg, train_lib.LabelConfig(chunk_clusters=5,
+                                                     top_dense=20), fp)
+    mutated = json_lib.loads(json_lib.dumps(reader.manifest))
+    shard = next(r for r in mutated["files"] if r.startswith("blocks"))
+    mutated["files"][shard]["sha256"] = "0" * 64     # corpus bytes moved
+    assert key != train_lib.label_cache_key(mutated, lcfg, label_cfg, fp)
+    assert key != train_lib.label_cache_key(
+        reader.manifest, lcfg, label_cfg,
+        train_lib.query_fingerprint(qs.q_dense[:8], qs.q_terms[:8],
+                                    qs.q_weights[:8]))
+    # ... but a selector-only publish (new generation, lstm files, theta)
+    # reuses the cache: labels never depended on the selector
+    published = json_lib.loads(json_lib.dumps(reader.manifest))
+    published["generation"] = 3
+    published["config"]["theta"] = 0.42
+    published["files"]["lstm.g3/step_0/manifest.json"] = \
+        {"bytes": 1, "sha256": "a" * 64}
+    assert key == train_lib.label_cache_key(published, lcfg, label_cfg, fp)
+
+
+# ---------------------------------------------------------------------------
+# trainer: pos_weight, bucketing, checkpoint resume
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def label_set(built):
+    cfg, _, _, out_v1, _, qs = built
+    _, lcfg, lindex, store = _open(out_v1)
+    return train_lib.make_labels_streaming(
+        lcfg, lindex, store, qs.q_dense, qs.q_terms, qs.q_weights,
+        label_cfg=train_lib.LabelConfig(chunk_clusters=8))
+
+
+def test_pos_weight_config_driven(built, label_set):
+    cfg = built[0]
+    labels = label_set.labels
+    # default: the historical constant rides along in the config
+    assert cfg.pos_weight == 4.0
+    assert train_lib.resolve_pos_weight(cfg, labels) == 4.0
+    # explicit override wins
+    assert train_lib.resolve_pos_weight(cfg, labels, 7.5) == 7.5
+    # None derives from the observed positive rate
+    derived = train_lib.resolve_pos_weight(
+        dataclasses.replace(cfg, pos_weight=None), labels)
+    p = float(np.asarray(labels).mean())
+    assert derived == pytest.approx((1 - p) / p)
+    trainer = train_lib.SelectorTrainer(
+        dataclasses.replace(cfg, pos_weight=None),
+        train_lib.SelectorTrainConfig(epochs=1, batch_size=8,
+                                      use_kernel=False))
+    trainer.fit(jax.random.key(0), label_set.feats, label_set.labels)
+    assert trainer.pos_weight == pytest.approx(derived)
+    # an all-negative label set cannot explode the weight
+    assert train_lib.derive_pos_weight(np.zeros((4, 8))) == 100.0
+
+
+def test_bucketing_coverage_and_truncation_exactness(built, label_set):
+    cfg = built[0]
+    feats, labels = label_set.feats, label_set.labels
+    buckets = train_lib.bucket_lengths(cfg, feats, labels, min_len=2)
+    n = feats.shape[1]
+    eff = train_lib.effective_lengths(cfg, feats, labels, min_len=2)
+    assert np.all(buckets >= eff) and np.all(buckets <= n)
+    assert np.all((buckets & (buckets - 1)) == 0)        # powers of two
+    # every query exactly once per epoch; padded rows carry weight 0
+    seen = []
+    for batch in train_lib.bucketed_batches(feats, labels, buckets,
+                                            batch_size=5, seed=1, epoch=0):
+        assert batch.feats.shape == (5, batch.length, feats.shape[-1])
+        real = int(batch.weights.sum())
+        seen.extend([None] * real)
+        assert np.all(batch.weights[real:] == 0)
+    assert len(seen) == feats.shape[0]
+    assert train_lib.n_batches_per_epoch(buckets, 5) >= 1
+    # deterministic in (seed, epoch)
+    a = [b.feats for b in train_lib.bucketed_batches(
+        feats, labels, buckets, batch_size=5, seed=1, epoch=3)]
+    b = [b.feats for b in train_lib.bucketed_batches(
+        feats, labels, buckets, batch_size=5, seed=1, epoch=3)]
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    # causal selectors: prefix probabilities are bitwise the full run's
+    params = train_lib.SelectorTrainer(cfg).init_params(
+        jax.random.key(5), feats.shape[-1])
+    full = np.asarray(train_lib.selector_apply(params, jnp.asarray(feats)))
+    for L in sorted(set(int(x) for x in buckets)):
+        trunc = np.asarray(train_lib.selector_apply(
+            params, jnp.asarray(feats[:, :L])))
+        np.testing.assert_array_equal(full[:, :L], trunc)
+
+
+def test_checkpoint_resume_determinism(built, label_set, tmp_path):
+    """train N steps == train k, resume, train N-k (bitwise params)."""
+    cfg = built[0]
+    feats, labels = label_set.feats, label_set.labels
+    kw = dict(epochs=3, batch_size=5, seed=7, use_kernel=False)
+    full = train_lib.SelectorTrainer(
+        cfg, train_lib.SelectorTrainConfig(**kw))
+    p_full, h_full = full.fit(jax.random.key(1), feats, labels)
+    per_epoch = train_lib.n_batches_per_epoch(
+        train_lib.bucket_lengths(cfg, feats, labels), 5)
+    k = per_epoch + max(1, per_epoch // 2)        # stop mid-epoch 2
+    part = train_lib.SelectorTrainer(cfg, train_lib.SelectorTrainConfig(
+        ckpt_dir=str(tmp_path / "ck"), max_steps=k, **kw))
+    part.fit(jax.random.key(1), feats, labels)
+    resumed = train_lib.SelectorTrainer(cfg, train_lib.SelectorTrainConfig(
+        ckpt_dir=str(tmp_path / "ck"), **kw))
+    p_res, _ = resumed.fit(jax.random.key(1), feats, labels, resume=True)
+    for key in p_full:
+        np.testing.assert_array_equal(np.asarray(p_full[key]),
+                                      np.asarray(p_res[key]), err_msg=key)
+
+
+def test_kernel_forward_grads_match_reference(built, label_set):
+    """The fused Pallas LSTM cell trains with exact gradients: custom-VJP
+    kernel path vs the jnp reference scan."""
+    cfg = built[0]
+    feats = jnp.asarray(label_set.feats[:6])
+    labels = jnp.asarray(label_set.labels[:6])
+    params = train_lib.SelectorTrainer(cfg).init_params(
+        jax.random.key(3), feats.shape[-1])
+
+    def loss(p, use_kernel):
+        probs = train_lib.selector_apply(p, feats, use_kernel=use_kernel)
+        probs = jnp.clip(probs, 1e-6, 1 - 1e-6)
+        return -jnp.mean(4.0 * labels * jnp.log(probs)
+                         + (1 - labels) * jnp.log(1 - probs))
+
+    g_ref = jax.grad(lambda p: loss(p, False))(params)
+    g_ker = jax.grad(lambda p: loss(p, True))(params)
+    for key in g_ref:
+        np.testing.assert_allclose(np.asarray(g_ker[key]),
+                                   np.asarray(g_ref[key]),
+                                   rtol=1e-5, atol=1e-6, err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+def test_calibration_table_and_operating_point(built, label_set):
+    cfg = built[0]
+    _, _, lindex, store = _open(built[3])
+    params, _ = train_lib.train_selector(cfg, jax.random.key(2),
+                                         label_set.feats, label_set.labels,
+                                         epochs=3)
+    probs = train_lib.selector_probs(params, label_set.feats)
+    table = train_lib.calibration_table(
+        label_set, probs, np.asarray(lindex.doc_cluster),
+        thetas=[0.02, 0.2, 0.5], budgets=[2, 4, 8],
+        block_bytes=store.block_bytes)
+    assert len(table) == 9
+    by = {(r["theta"], r["budget"]): r for r in table}
+    for theta in (0.02, 0.2, 0.5):
+        # more budget never hurts recall at fixed theta
+        assert by[(theta, 2)]["recall"] <= by[(theta, 4)]["recall"] \
+            <= by[(theta, 8)]["recall"]
+    for budget in (2, 4, 8):
+        # higher theta never selects more clusters at fixed budget
+        assert by[(0.02, budget)]["avg_selected"] >= \
+            by[(0.5, budget)]["avg_selected"]
+    for r in table:
+        # avg_selected is rounded for the table; the byte estimate is
+        # computed from the unrounded value
+        assert abs(r["est_read_bytes"]
+                   - r["avg_selected"] * store.block_bytes) \
+            <= 0.01 * store.block_bytes
+    best = max(t["recall"] for t in table)
+    op = train_lib.choose_operating_point(table, target_recall=best)
+    assert op["target_met"] and op["recall"] >= best
+    cheap = train_lib.choose_operating_point(table, target_budget=4)
+    assert cheap["budget"] <= 4 and cheap["target_met"]
+    # an unmeetable budget must be FLAGGED, not silently satisfied by the
+    # cheapest row
+    over = train_lib.choose_operating_point(table, target_budget=1)
+    assert not over["target_met"] and over["budget"] == 2
+    unreachable = train_lib.choose_operating_point(table, target_recall=1.1)
+    assert not unreachable["target_met"] and unreachable["recall"] == best
+    with pytest.raises(ValueError):
+        train_lib.choose_operating_point(table)
+    # selection semantics mirror stage2_select exactly
+    sel_ids, sel_mask = train_lib.select_at(label_set.cand, probs, 0.2, 4)
+    s2 = cl.stage2_select(dataclasses.replace(cfg, max_selected=4), lindex,
+                          jnp.asarray(label_set.cand),
+                          jnp.asarray(label_set.feats), theta=0.2,
+                          selector_params=params)
+    np.testing.assert_array_equal(np.asarray(s2["sel_mask"]), sel_mask)
+    np.testing.assert_array_equal(
+        np.where(np.asarray(s2["sel_mask"]), np.asarray(s2["sel_ids"]), -1),
+        np.where(sel_mask, sel_ids, -1))
+
+
+# ---------------------------------------------------------------------------
+# publish + live hot reload
+# ---------------------------------------------------------------------------
+
+def test_publish_generation_and_hot_reload_parity(built, label_set,
+                                                  tmp_path):
+    cfg, corpus, index, out_v1, _, qs = built
+    work = str(tmp_path / "pubidx")
+    import shutil
+    shutil.copytree(out_v1, work)
+    reader = index_lib.IndexReader.open(work, verify="full")
+    assert reader.generation == 0 and reader.selector_meta() is None
+    params, _ = train_lib.train_selector(cfg, jax.random.key(2),
+                                         label_set.feats, label_set.labels,
+                                         epochs=3)
+    engine = reader.engine(max_batch=8)
+    engine.retrieve(qs.q_dense[:8], qs.q_terms[:8], qs.q_weights[:8])
+
+    report = train_lib.publish_selector(
+        work, params, theta=0.11, budget=4,
+        calibration=[{"theta": 0.11, "budget": 4, "recall": 0.5,
+                      "avg_selected": 3.0, "est_read_bytes": 0}],
+        label_config={"top_dense": 10}, train_meta={"epochs": 3})
+    assert report["generation"] == 1
+
+    gen = engine.reload_selector()
+    assert gen == 1
+    assert engine.cfg.theta == 0.11 and engine.cfg.max_selected == 4
+    got, _ = engine.retrieve(qs.q_dense[:8], qs.q_terms[:8],
+                             qs.q_weights[:8])
+    engine.close()
+    assert engine.stats()["selector_reloads"] == 1
+
+    fresh = index_lib.IndexReader.open(work, verify="full")  # checksums OK
+    assert fresh.generation == 1
+    meta = fresh.selector_meta()
+    assert meta["theta"] == 0.11 and meta["budget"] == 4
+    assert fresh.config().theta == 0.11
+    assert fresh.config().max_selected == 4
+    for key in params:
+        np.testing.assert_array_equal(np.asarray(fresh.lstm_params()[key]),
+                                      np.asarray(params[key]), err_msg=key)
+    with fresh.engine(max_batch=8) as fe:
+        want, _ = fe.retrieve(qs.q_dense[:8], qs.q_terms[:8],
+                              qs.q_weights[:8])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the old generation's manifest stays readable (archived)
+    old = index_lib.load_manifest(work, generation=0)
+    assert index_lib.manifest_generation(old) == 0
+
+
+def test_publish_rejects_non_lstm_and_bad_params(built, tmp_path):
+    cfg, _, _, out_v1, _, _ = built
+    import shutil
+    work = str(tmp_path / "pub2")
+    shutil.copytree(out_v1, work)
+    with pytest.raises(ValueError):
+        train_lib.publish_selector(work, {"w1": np.zeros((3, 3))},
+                                   selector="mlp")
+    with pytest.raises(ValueError):
+        train_lib.publish_selector(work, {"wx": np.zeros((3, 12))})
