@@ -11,7 +11,12 @@ fail on
   * calibrated selector recall@budget (BENCH_train.json) dropping more
     than 0.02 below the baseline — recall is hardware-independent, so
     like the MRR gate it stays active across host-stamp mismatches
-    (geometry must still match).
+    (geometry must still match),
+  * the intra-file ADC invariant: within the FRESH BENCH_serve.json the
+    pq-sharded (ADC-served) p50 must stay below the in-memory p50. Both
+    rows come from the same run on the same host, so this gate never
+    skips on host/geometry mismatch — it guards the point of the
+    ADC+fused-tail serving path absolutely, not relative to a baseline.
 
 Intended CI wiring (see .github/workflows/ci.yml) — the baseline comes
 from the PR's MERGE BASE, not HEAD, so a PR that restamps its own BENCH
@@ -73,6 +78,33 @@ def check_train(baseline_train, fresh_train, recall_tol=0.02):
     if fresh < base - recall_tol:
         bad.append(f"[train] recall@budget {fresh:.4f} < "
                    f"{base:.4f} - {recall_tol}")
+    return bad
+
+
+def check_intra_serve(fresh_serve):
+    """Baseline-free invariants over the fresh serve table alone. The
+    pq-sharded backend is served via in-kernel ADC + the fused
+    score->fuse->top-k tail; if it cannot beat the in-memory float
+    backend measured in the SAME run, the fast path has regressed no
+    matter what the merge-base says. Skipped only when either row is
+    absent (older BENCH files)."""
+    bad = []
+    rows = _rows_by_backend(fresh_serve)
+    pq, mem = rows.get("pq-sharded (v2 index)"), rows.get("in-memory")
+    if not pq or not mem:
+        print("note: pq-sharded/in-memory row missing; intra-serve ADC "
+              "gate skipped")
+        return bad
+    pp50, mp50 = pq.get("p50_batch_ms"), mem.get("p50_batch_ms")
+    if pp50 and mp50 and pp50 >= mp50:
+        bad.append(f"[serve:intra] pq-sharded p50 {pp50:.2f}ms >= "
+                   f"in-memory p50 {mp50:.2f}ms (ADC fast path must win)")
+    if pq.get("use_adc") is False:
+        bad.append("[serve:intra] pq-sharded row served without ADC")
+    dm = pq.get("decode_ms")
+    if dm is not None and dm != 0.0:
+        bad.append(f"[serve:intra] ADC path decoded floats on the host "
+                   f"(decode_ms={dm})")
     return bad
 
 
@@ -189,6 +221,7 @@ def main(argv=None):
     bad += check_train(_load_optional(args.baseline_train),
                        _load_optional(args.fresh_train),
                        recall_tol=args.mrr_tol)
+    bad += check_intra_serve(_load(args.fresh_serve))
     if bad:
         print("BENCH REGRESSION:")
         for line in bad:

@@ -2,9 +2,17 @@
 percentiles + QPS through bucketed batching (in-memory backend), I/O
 accounting for the on-disk backend (batch-dedup + LRU cache + Stage-I
 prefetch) vs the seed per-query read loop (one block read per
-(query, selected cluster) pair), and the format-v2 PQ code-shard backend —
-same engine, 4*dim/nsub fewer bytes off disk, MRR@10 within 0.02 of the
-float32 in-memory backend (asserted).
+(query, selected cluster) pair), the format-v2 PQ code-shard backend
+served via in-kernel ADC (raw codes -> LUT scoring inside the fused
+score->fuse->top-k tail; zero host decode), and the reduced-precision v1
+shard dtypes (bfloat16, int8).
+
+Asserted invariants: every lossy backend stays within 0.02 MRR@10 of the
+float32 in-memory backend; the ADC path's MRR is IDENTICAL to the
+decode-then-score path over the same v2 index; and the pq-sharded p50
+batch latency beats the in-memory p50 (the point of the ADC+fused-tail
+serving path). A cache-budget sweep records the hit-rate gain from
+caching codes instead of float blocks at the same byte budget.
 
 Writes BENCH_serve.json at the repo root so later PRs have a perf
 trajectory to beat. Standalone: PYTHONPATH=src python -m benchmarks.serve_engine
@@ -147,13 +155,89 @@ def run():
         "mb_read": round(pio["bytes"] / 2**20, 2),
         "code_byte_reduction": round(io["bytes"] / max(pio["bytes"], 1), 1),
         "cache_hit_rate": pcache["hit_rate"],
+        # ADC serving: raw codes scored in-kernel, zero host decode
+        "use_adc": ps["use_adc"],
+        "adc_ms": ps.get("adc_ms", 0.0),
+        "lut_build_ms": ps.get("lut_build_ms", 0.0),
+        "decode_ms": ps.get("decode_ms", 0.0),
     }
     rows.append(pq_row)
     assert pq_row["mrr_delta_vs_inmemory"] <= 0.02, \
         f"PQ serving MRR {mrr_pq} vs in-memory {mem_row['MRR@10']}"
+    assert ps["use_adc"], "v2 code shards should auto-enable ADC serving"
+    assert pq_row["decode_ms"] == 0.0, \
+        f"ADC path decoded floats on the host: decode_ms={pq_row['decode_ms']}"
+
+    # ---- decode-then-score over the SAME v2 index: MRR must be identical
+    with reader.engine(max_batch=MAX_BATCH, cache_capacity=cfg.n_clusters,
+                       use_adc=False) as qeng:
+        ids_q, _, _ = _serve(qeng, qs, N_QUERIES, (MAX_BATCH,))
+    dst = qeng.stats()
+    mrr_decode = round(mrr_at(ids_q, qs.rel_doc), 4)
+    assert mrr_decode == mrr_pq, \
+        f"ADC MRR {mrr_pq} != decode-then-score MRR {mrr_decode}"
+    pq_row["mrr_decode_path"] = mrr_decode
+    pq_row["decode_path_decode_ms"] = dst.get("decode_ms", 0.0)
+    pq_row["decode_path_p50_batch_ms"] = dst["p50_ms"]
+
+    # acceptance: code shards off disk now serve FASTER than the in-memory
+    # float backend (ADC LUT scoring + fused tail beat the dense einsum)
+    assert pq_row["p50_batch_ms"] < mem_row["p50_batch_ms"], \
+        (f"pq-sharded p50 {pq_row['p50_batch_ms']}ms not under in-memory "
+         f"p50 {mem_row['p50_batch_ms']}ms")
+
+    # ---- reduced-precision v1 shard dtypes ------------------------------
+    for dt in ("bfloat16", "int8"):
+        vdir = os.path.join(tmp, f"index_{dt}")
+        index_lib.write_index(vdir, cfg, index, emb, n_shards=8,
+                              block_dtype=dt)
+        vrd = index_lib.IndexReader.open(vdir, verify="size")
+        with vrd.engine(max_batch=MAX_BATCH,
+                        cache_capacity=cfg.n_clusters) as veng:
+            ids_v, _, wall_v = _serve(veng, qs, N_QUERIES, (MAX_BATCH,))
+        vs = veng.stats()
+        mrr_v = round(mrr_at(ids_v, qs.rel_doc), 4)
+        v_row = {
+            "backend": f"sharded-{dt} (v1 index)",
+            "MRR@10": mrr_v,
+            "mrr_delta_vs_inmemory": round(abs(mrr_v - mem_row["MRR@10"]), 4),
+            "p50_batch_ms": vs["p50_ms"], "p99_batch_ms": vs["p99_ms"],
+            "qps_total": round(N_QUERIES / wall_v, 1),
+            "bytes_read": vs["io"]["bytes"],
+            "byte_reduction_vs_float32": round(
+                io["bytes"] / max(vs["io"]["bytes"], 1), 1),
+            "decode_ms": vs.get("decode_ms", 0.0),
+            "cache_hit_rate": vs["cache"]["hit_rate"],
+        }
+        rows.append(v_row)
+        assert v_row["mrr_delta_vs_inmemory"] <= 0.02, \
+            f"{dt} serving MRR {mrr_v} vs in-memory {mem_row['MRR@10']}"
+
+    # ---- cache-budget sweep: codes vs floats at the same byte budget ----
+    # budgets are in float32-block equivalents (cap*dim*4 bytes each); the
+    # code-backed engine fits 4*dim/nsub more clusters in the same bytes,
+    # so its hit rate climbs far sooner.
+    sweep = []
+    n_sweep = 128
+    for budget in (cfg.n_clusters // 16, cfg.n_clusters // 8,
+                   cfg.n_clusters // 4):
+        with RetrievalEngine(cfg, index,
+                             store=DiskStore(blocks, index.cluster_docs),
+                             max_batch=MAX_BATCH, cache_capacity=budget,
+                             prefetch=False) as feng:
+            _serve(feng, qs, n_sweep, (MAX_BATCH,))
+        with reader.engine(max_batch=MAX_BATCH, cache_capacity=budget,
+                           prefetch=False) as ceng:
+            _serve(ceng, qs, n_sweep, (MAX_BATCH,))
+        f_hit = feng.stats()["cache"]["hit_rate"]
+        c_hit = ceng.stats()["cache"]["hit_rate"]
+        sweep.append({"budget_float_blocks": budget,
+                      "float_hit_rate": f_hit, "code_hit_rate": c_hit,
+                      "hit_rate_gain": round(c_hit - f_hit, 4)})
 
     result = {"table": "serve_engine", "n_docs": N_DOCS,
-              "n_queries": N_QUERIES, **C.bench_meta(cfg), "rows": rows}
+              "n_queries": N_QUERIES, **C.bench_meta(cfg),
+              "cache_sweep": sweep, "rows": rows}
     out = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "BENCH_serve.json"))
     with open(out, "w") as f:

@@ -35,18 +35,26 @@ class IOStats:
         self.wall_ms += wall
 
 
-def pack_blocks(embeddings, cluster_docs, dtype=np.float32):
+def pack_blocks(embeddings, cluster_docs, dtype=np.float32, scale=None):
     """Materialize the (n, cap, dim) cluster-block tensor for a doc table.
 
     `embeddings` may be any row-indexable (D, dim) array (np.memmap is fine:
     only member rows are read); `cluster_docs` is a (n, cap) padded table —
     pass a slice of the full table to pack one shard at a time.
+
+    `scale` quantizes: rows are divided by it, rounded, clipped to the
+    target dtype's range (int8 shards; decode multiplies back).
     """
     cd = np.asarray(cluster_docs)
     dim = embeddings.shape[1]
     blocks = np.zeros(cd.shape + (dim,), dtype)
     mask = cd >= 0
-    blocks[mask] = np.asarray(embeddings[cd[mask]], dtype)
+    rows = np.asarray(embeddings[cd[mask]], np.float32)
+    if scale is not None:
+        info = np.iinfo(dtype)
+        rows = np.clip(np.round(rows / np.float32(scale)),
+                       info.min + 1, info.max)
+    blocks[mask] = rows.astype(dtype)
     return blocks
 
 

@@ -3,6 +3,21 @@
 Thread-safe: the serving thread and the background prefetcher share one
 instance. Tracks hit/miss/eviction counts so benchmarks can report cache
 effectiveness (BENCH_serve.json `cache_hit_rate`).
+
+Two capacity modes:
+
+  * entry count (`capacity`) — the original bound: at most N blocks,
+    whatever their size.
+  * byte budget (`capacity_bytes`) — bounds the ACTUAL bytes stored
+    (`block.nbytes`), so what fits depends on what is cached: a PQ code
+    block (cap x nsub uint8) is ~4*dim/nsub times smaller than its float
+    block, and a byte-budgeted cache holds that many more clusters. The
+    engine sizes the budget in float32-block equivalents, which keeps
+    float-store behavior identical while code-backed stores gain the
+    density win. `cached_bytes` in stats() reports the live total.
+
+Exactly one bound must be set; with both modes' counters exposed the
+benchmarks can compare hit rates at a fixed byte budget across formats.
 """
 
 import collections
@@ -10,13 +25,22 @@ import threading
 
 
 class BlockCache:
-    def __init__(self, capacity):
-        if capacity < 1:
+    def __init__(self, capacity=None, capacity_bytes=None):
+        if capacity is None and capacity_bytes is None:
+            raise ValueError("need capacity (entries) or capacity_bytes")
+        if capacity is not None and capacity_bytes is not None:
+            raise ValueError("pass capacity OR capacity_bytes, not both")
+        if capacity is not None and capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if capacity_bytes is not None and capacity_bytes < 1:
+            raise ValueError(
+                f"capacity_bytes must be >= 1, got {capacity_bytes}")
         self.capacity = capacity
-        self._blocks = collections.OrderedDict()   # cid -> (cap, dim) array
+        self.capacity_bytes = capacity_bytes
+        self._blocks = collections.OrderedDict()   # cid -> block array
         self._lock = threading.Lock()
         self._fetch_lock = threading.Lock()        # single-flight miss fills
+        self.cached_bytes = 0    # actual stored bytes (sum of block.nbytes)
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -52,7 +76,7 @@ class BlockCache:
 
     def get_or_fetch_many(self, cids, fetch_fn, record=True):
         """{cid: block} for every cid; misses are filled via
-        `fetch_fn(list_of_cids) -> (n, cap, dim) array` under a
+        `fetch_fn(list_of_cids) -> (n, ...) array` under a
         single-flight lock, so a concurrent prefetcher and the serving
         thread never read the same cold block twice. `record=False`
         skips hit/miss accounting (prefetch path)."""
@@ -86,12 +110,26 @@ class BlockCache:
                         self.put(c, out[c])
         return out
 
+    @staticmethod
+    def _nbytes(block):
+        return int(getattr(block, "nbytes", 0))
+
+    def _over_budget(self):
+        if self.capacity is not None and len(self._blocks) > self.capacity:
+            return True
+        return self.capacity_bytes is not None \
+            and self.cached_bytes > self.capacity_bytes
+
     def put(self, cid, block):
         with self._lock:
-            self._blocks.pop(cid, None)      # re-insert at most-recent end
+            old = self._blocks.pop(cid, None)    # re-insert at most-recent end
+            if old is not None:
+                self.cached_bytes -= self._nbytes(old)
             self._blocks[cid] = block
-            while len(self._blocks) > self.capacity:
-                self._blocks.popitem(last=False)
+            self.cached_bytes += self._nbytes(block)
+            while self._over_budget() and len(self._blocks) > 1:
+                _, evicted = self._blocks.popitem(last=False)
+                self.cached_bytes -= self._nbytes(evicted)
                 self.evictions += 1
 
     def keys(self):
@@ -106,8 +144,10 @@ class BlockCache:
     def stats(self):
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "clears": self.clears,
-                "size": len(self),
-                "capacity": self.capacity, "hit_rate": round(self.hit_rate(), 4)}
+                "size": len(self), "cached_bytes": self.cached_bytes,
+                "capacity": self.capacity,
+                "capacity_bytes": self.capacity_bytes,
+                "hit_rate": round(self.hit_rate(), 4)}
 
     def clear(self):
         """Drop every cached block (cluster ids name different blocks after
@@ -116,4 +156,5 @@ class BlockCache:
         records the invalidation."""
         with self._lock:
             self._blocks.clear()
+            self.cached_bytes = 0
             self.clears += 1

@@ -17,14 +17,25 @@ Scoring has two shapes:
   * host stores (DiskStore): selection still runs batched on device; block
     I/O is ONE deduplicated fetch for the whole query batch (optionally
     through a BlockCache), replacing the old per-query read loop.
+
+The serving engine (engine/server.py) drives host stores through the
+FUSED path instead of eager `score_and_fuse`: `dedup_selected` +
+`fetch_unique_blocks`/`fetch_unique_code_blocks` stay on the host, and
+`build_fused_scorer` compiles score -> mask -> fuse -> top-k into ONE
+jitted pass per request bucket (unique-block count padded to power-of-two
+so compilations stay bounded). For code-backed stores (`is_coded`) the
+fused pass scores raw PQ codes via ADC lookup tables
+(repro.kernels.adc) — floats are never decoded on the host.
 """
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import clusd as clusd_lib
 from repro.core import fusion as fusion_lib
 from repro.core import sparse as sparse_lib
+from repro.kernels import adc as adc_ops
 
 
 # ---------------------------------------------------------------------------
@@ -61,6 +72,69 @@ def fetch_unique_blocks(store, uniq, cache=None):
     got = cache.get_or_fetch_many(
         uniq, lambda cids: np.asarray(store.fetch_blocks(np.asarray(cids))[0]))
     return np.stack([got[int(c)] for c in uniq])
+
+
+def fetch_unique_code_blocks(store, uniq, cache=None):
+    """Raw-code sibling of `fetch_unique_blocks` for code-backed stores:
+    returns (U, cap, nsub) uint8 — no decode happens anywhere on this
+    path, and the cache holds CODE blocks (4*dim/nsub more clusters per
+    cache byte than float blocks under a byte budget)."""
+    if cache is None:
+        codes, _, _ = store.fetch_code_blocks(uniq)
+        return np.asarray(codes)
+    got = cache.get_or_fetch_many(
+        uniq,
+        lambda cids: np.asarray(store.fetch_code_blocks(np.asarray(cids))[0]))
+    return np.stack([got[int(c)] for c in uniq])
+
+
+def dedup_selected(sel_ids, sel_mask):
+    """Host-side dedup of the batch's selected clusters.
+
+    -> (uniq (U,) int64 sorted unique cluster ids — never empty: an
+    all-masked selection yields a single placeholder id 0 so downstream
+    shapes stay static — and pos (B, S) positions into uniq; masked slots
+    point at uniq[0] and are dropped by the validity mask later)."""
+    sel = np.asarray(sel_ids)
+    mask = np.asarray(sel_mask)
+    if mask.any():
+        uniq = np.unique(sel[mask])
+    else:
+        uniq = np.zeros((1,), np.int64)
+    pos = np.searchsorted(uniq, np.where(mask, sel, uniq[0]))
+    return uniq, pos.astype(np.int32)
+
+
+def build_fused_scorer(cfg, index, store, *, k, mode):
+    """Compile score -> mask -> fuse -> top-k into one jitted pass.
+
+    mode "adc":  blocks are (U, cap, nsub) uint8 PQ codes and q_or_lut is
+                 the (B, nsub, 256) ADC lookup table (adc_tables, built
+                 once per batch — the OPQ rotation is already folded in).
+    mode "dot":  blocks are (U, cap, dim) float and q_or_lut is (B, dim).
+
+    The returned fn(q_or_lut, sid, ss, sel_ids, sel_mask, blocks, pos)
+    -> (ids, scores) closes over cfg/cluster_docs, so the engine must drop
+    it on index reloads (and on selector reloads: cfg is re-read)."""
+    n_docs, alpha = index.n_docs, cfg.alpha
+    cluster_docs = index.cluster_docs
+
+    def run(q_or_lut, sid, ss, sel_ids, sel_mask, blocks, pos):
+        docs = jnp.take(cluster_docs, sel_ids, axis=0)         # (B, S, cap)
+        B, S, cap = docs.shape
+        valid = (docs >= 0) & sel_mask[:, :, None]
+        if mode == "adc":
+            scores3 = adc_ops.adc_score_blocks(q_or_lut, blocks, pos)
+        else:
+            vecs = jnp.take(blocks, pos, axis=0)               # (B,S,cap,dim)
+            scores3 = jnp.einsum("bd,bscd->bsc", q_or_lut, vecs)
+        vf = valid.reshape(B, S * cap)
+        dscore = jnp.where(vf, scores3.reshape(B, S * cap), 0.0)
+        did = jnp.where(valid, docs, 0).reshape(B, S * cap).astype(jnp.int32)
+        return fusion_lib.fuse_topk(sid, ss, did, dscore, vf,
+                                    n_docs, alpha, k)
+
+    return jax.jit(run)
 
 
 def score_selected_host(store, q_dense, sel_ids, sel_mask, cache=None,

@@ -1,17 +1,29 @@
 """RetrievalEngine: the serving front-end over the unified pipeline.
 
-Three serving optimizations on top of engine/pipeline.py:
+Serving optimizations on top of engine/pipeline.py:
 
   * bucketed batching — incoming query batches are padded to power-of-two
     sizes (capped at `max_batch`), so `jax.jit` compiles once per bucket
     instead of once per ragged tail size. Oversize batches are chunked.
   * LRU block cache — for host (disk) stores, fetched cluster blocks land
-    in a bounded BlockCache keyed by cluster id; hot clusters are served
-    from memory.
+    in a byte-budgeted BlockCache keyed by cluster id; hot clusters are
+    served from memory. The budget is sized in float32-block equivalents
+    (`cache_capacity * cap * dim * 4` bytes), so a float store caches
+    exactly `cache_capacity` blocks while a code-backed store fits
+    ~4*dim/nsub times more clusters in the same budget.
   * async prefetch — a background thread pulls Stage-I candidate cluster
     blocks from disk into the cache while the Stage-II LSTM selection is
     still running, so by the time the selection lands, most selected
     blocks are already cache hits.
+  * fused tail — for host stores the whole score -> fuse -> top-k tail
+    runs as ONE jitted pass per (batch bucket, unique-block bucket)
+    (pipeline.build_fused_scorer) instead of eager per-stage dispatch.
+  * ADC serving (`use_adc`, auto-on for code-backed stores): raw PQ codes
+    flow disk -> cache -> device and are scored against per-query ADC
+    lookup tables (repro.kernels.adc) inside the fused pass — the host
+    never decodes a float block; the LUT is built right after Stage I so
+    it overlaps the Stage-II selection. Timings surface in stats() as
+    `lut_build_ms` / `adc_ms` (and `decode_ms` stays 0 on this path).
 
 Plus zero-downtime index swaps: `reload_index()` hops a serving engine to
 a newer committed index generation (repro.index.update) between batches —
@@ -48,6 +60,7 @@ from repro.core import sparse as sparse_lib
 from repro.engine import pipeline as pipe_lib
 from repro.engine import stores as stores_lib
 from repro.engine.cache import BlockCache
+from repro.kernels import adc as adc_ops
 
 
 def bucket_size(n, max_batch):
@@ -128,7 +141,7 @@ class RetrievalEngine:
 
     def __init__(self, cfg, index, store=None, *, max_batch=256,
                  cache_capacity=512, prefetch=True, prefetch_depth=None,
-                 k=None, reader=None):
+                 k=None, reader=None, use_adc=None):
         self.cfg = cfg
         self.index = index
         self.store = store if store is not None \
@@ -137,11 +150,19 @@ class RetrievalEngine:
         self.max_batch = max(1, max_batch)
         self.k = k or cfg.k_final
         self.reader = reader            # IndexReader backing reload_index()
+        # ADC serving: score raw PQ codes against per-query LUTs on the
+        # host path. None = auto (on exactly when the store is code-backed);
+        # True demands a code-backed store; False forces decode-then-score.
+        self._explicit_use_adc = use_adc
+        self.use_adc = self._resolve_use_adc(self.store)
+        self.adc_ms = 0.0           # fused ADC score+fuse+topk device time
+        self.lut_build_ms = 0.0     # per-batch ADC LUT builds
         self._prefetch_enabled = bool(prefetch)
         self._swap_lock = threading.RLock()   # serving vs reload_index
         self._pf_drop = False           # quiesce flag across index swaps
         self.serve_stats = ServeStats()
-        self.cache = BlockCache(cache_capacity) \
+        self._cache_capacity = cache_capacity
+        self.cache = self._make_cache(self.store) \
             if (self.is_host and cache_capacity) else None
         # prefetch candidates a bit past the selection budget: Stage-II
         # mostly keeps high-ranked Stage-I candidates, so this covers the
@@ -157,6 +178,28 @@ class RetrievalEngine:
         self._start_prefetch()
 
     # -- lifecycle ----------------------------------------------------------
+
+    def _resolve_use_adc(self, store):
+        coded = bool(getattr(store, "is_coded", False))
+        if self._explicit_use_adc is None:
+            return self.is_host and coded
+        if self._explicit_use_adc and not coded:
+            raise ValueError("use_adc=True needs a code-backed store "
+                             "(is_coded); this store serves float blocks")
+        return bool(self._explicit_use_adc) and self.is_host
+
+    def _make_cache(self, store):
+        """Byte-budgeted cache sized in float32-block equivalents when the
+        store's geometry is known (identical behavior to the old
+        entry-count bound for float stores; ~4*dim/nsub more clusters for
+        code-backed stores), else the legacy entry-count bound."""
+        cap = getattr(store, "cap", None)
+        dim = getattr(store, "dim", None)
+        if cap and dim:
+            return BlockCache(
+                capacity_bytes=int(self._cache_capacity) * int(cap)
+                * int(dim) * 4)
+        return BlockCache(self._cache_capacity)
 
     @staticmethod
     def _default_prefetch_depth(cfg):
@@ -216,10 +259,19 @@ class RetrievalEngine:
         with self._swap_lock:
             self.cfg, self.index, self.store = cfg, index, store
             self.reader = reader
+            self.use_adc = self._resolve_use_adc(store)
             self._refresh_prefetch_depth(cfg)
             self._fns.clear()           # bucket shapes/geometry changed
             if self.cache is not None:
-                self.cache.clear()      # block ids now name new-gen blocks
+                # block ids now name new-gen blocks, and the new geometry
+                # may change the byte budget (cap/dim moved): replace the
+                # cache but carry the lifetime counters — a swap IS a
+                # clear, stats() must not lose history across generations
+                old = self.cache
+                new = self._make_cache(store)
+                new.hits, new.misses = old.hits, old.misses
+                new.evictions, new.clears = old.evictions, old.clears + 1
+                self.cache = new
             self.serve_stats.reloads += 1
         self._pf_drop = False
         if restart:
@@ -261,10 +313,11 @@ class RetrievalEngine:
             self._refresh_prefetch_depth(cfg)
             # only selector-dependent compilations are stale: stage2
             # closes over (params, theta, max_selected); the fused device
-            # path closes over the whole config. Stage-I buckets and the
-            # block cache survive — the corpus didn't move.
+            # path and the fused host tails close over the whole (re-read)
+            # config. Stage-I buckets, the LUT builder (codebooks only),
+            # and the block cache survive — the corpus didn't move.
             for key in [k for k in self._fns
-                        if k[0] in ("stage2", "device")]:
+                        if k[0] in ("stage2", "device", "adc", "dot")]:
                 del self._fns[key]
             self.serve_stats.selector_reloads += 1
         return reader.generation
@@ -277,6 +330,17 @@ class RetrievalEngine:
         return False
 
     # -- prefetch -----------------------------------------------------------
+
+    def _cache_fill_fn(self):
+        """What a cache miss fetches: raw CODE blocks under ADC serving
+        (the cache must hold one consistent record type per generation —
+        the fused scorer consumes whatever the prefetcher cached), float
+        blocks otherwise."""
+        store = self.store
+        if self.use_adc:
+            return lambda c: np.asarray(
+                store.fetch_code_blocks(np.asarray(c))[0])
+        return lambda c: np.asarray(store.fetch_blocks(np.asarray(c))[0])
 
     def _prefetch_worker(self):
         while True:
@@ -291,12 +355,10 @@ class RetrievalEngine:
                 # from re-reading blocks this fetch is already pulling.
                 # Fetch in small chunks so the serving thread never waits
                 # behind the whole candidate set for its selected blocks.
+                fill = self._cache_fill_fn()
                 for i in range(0, len(cids), self._PF_CHUNK):
                     self.cache.get_or_fetch_many(
-                        cids[i:i + self._PF_CHUNK],
-                        lambda c: np.asarray(
-                            self.store.fetch_blocks(np.asarray(c))[0]),
-                        record=False)
+                        cids[i:i + self._PF_CHUNK], fill, record=False)
             except Exception:       # prefetch is best-effort; never kill serving
                 self.serve_stats.prefetch_errors += 1
 
@@ -323,11 +385,8 @@ class RetrievalEngine:
         if fn is None:
             fn = builder()
             self._fns[key] = fn
+            self._built_fn = True     # this batch pays a compile somewhere
         return fn
-
-    def _bucket_is_cold(self, bucket):
-        key = ("stage1" if self.is_host else "device", bucket)
-        return key not in self._fns
 
     def _device_fn(self, bucket):
         def build():
@@ -356,6 +415,26 @@ class RetrievalEngine:
                 return s2["sel_ids"], s2["sel_mask"]
             return jax.jit(run)
         return self._fn("stage2", bucket, build)
+
+    def _lut_fn(self, bucket):
+        """Per-query ADC LUT build (rotation folded in). Keyed per bucket
+        only — survives selector reloads (closes over codebooks alone)."""
+        def build():
+            codebooks = jnp.asarray(self.store.codebooks)
+            rotation = None if self.store.rotation is None \
+                else jnp.asarray(self.store.rotation)
+            return jax.jit(lambda qd: adc_ops.adc_tables(
+                qd, codebooks, rotation))
+        return self._fn("lut", bucket, build)
+
+    def _fused_fn(self, kind, bucket, ubucket):
+        """One compiled score->fuse->top-k tail per (mode, batch bucket,
+        unique-block bucket)."""
+        def build():
+            return pipe_lib.build_fused_scorer(self.cfg, self.index,
+                                               self.store, k=self.k,
+                                               mode=kind)
+        return self._fn(kind, (bucket, ubucket), build)
 
     # -- serving ------------------------------------------------------------
 
@@ -386,7 +465,7 @@ class RetrievalEngine:
         with self._swap_lock:
             n = int(np.asarray(q_dense).shape[0])
             bucket = bucket_size(n, self.max_batch)
-            compiled = self._bucket_is_cold(bucket)
+            self._built_fn = False
             pad = bucket - n
             qd = jnp.asarray(_pad_rows(q_dense, pad))
             qt = jnp.asarray(_pad_rows(q_terms, pad))
@@ -397,18 +476,61 @@ class RetrievalEngine:
             else:
                 ids, scores, _ = self._device_fn(bucket)(qd, qt, qw)
             ids.block_until_ready()
-            self.serve_stats.record(n, bucket, compiled,
+            # a batch "compiled" if ANY stage built a new jitted fn for it
+            # (stage buckets, but also a first-seen unique-block bucket of
+            # the fused tail) — steady-state latency stats exclude those
+            self.serve_stats.record(n, bucket, self._built_fn,
                                     (time.perf_counter() - t0) * 1e3)
             return ids[:n], scores[:n]
+
+    @staticmethod
+    def _pow2(n):
+        b = 1
+        while b < n:
+            b *= 2
+        return b
 
     def _serve_host(self, bucket, qd, qt, qw):
         sid, ss, cand, feats = self._stage1_fn(bucket)(qd, qt, qw)
         # overlap: start pulling candidate blocks while Stage II runs
         self._enqueue_prefetch(np.asarray(cand))
+        lut = None
+        if self.use_adc:
+            # the LUT depends only on the queries — build it while the
+            # prefetcher is pulling candidate code blocks
+            t0 = time.perf_counter()
+            lut = self._lut_fn(bucket)(qd)
+            lut.block_until_ready()
+            if not self._built_fn:     # steady-state only (no compile skew)
+                self.lut_build_ms += (time.perf_counter() - t0) * 1e3
         sel_ids, sel_mask = self._stage2_fn(bucket)(cand, feats)
-        ids, scores, _ = pipe_lib.score_and_fuse(
-            self.cfg, self.index, self.store, qd, sid, ss, sel_ids, sel_mask,
-            k=self.k, cache=self.cache)
+        uniq, pos = pipe_lib.dedup_selected(sel_ids, sel_mask)
+        if bool(np.asarray(sel_mask).any()):
+            fetch = pipe_lib.fetch_unique_code_blocks if self.use_adc \
+                else pipe_lib.fetch_unique_blocks
+            blocks = fetch(self.store, uniq, self.cache)
+        else:       # nothing selected: zero placeholder, no I/O
+            blocks = np.zeros(
+                (1, self.store.cap,
+                 self.store.nsub if self.use_adc else self.store.dim),
+                np.uint8 if self.use_adc else np.float32)
+        # pad the unique-block axis to a power of two so fused-tail
+        # compilations stay bounded (pos only ever indexes real rows)
+        ub = self._pow2(blocks.shape[0])
+        if ub > blocks.shape[0]:
+            blocks = np.concatenate(
+                [blocks, np.zeros((ub - blocks.shape[0],) + blocks.shape[1:],
+                                  blocks.dtype)])
+        kind = "adc" if self.use_adc else "dot"
+        fn = self._fused_fn(kind, bucket, ub)
+        t0 = time.perf_counter()
+        ids, scores = fn(lut if self.use_adc else qd, sid, ss,
+                         sel_ids, sel_mask, jnp.asarray(blocks),
+                         jnp.asarray(pos))
+        if self.use_adc:
+            ids.block_until_ready()
+            if not self._built_fn:     # steady-state only (no compile skew)
+                self.adc_ms += (time.perf_counter() - t0) * 1e3
         return ids, scores
 
     # -- introspection ------------------------------------------------------
@@ -432,4 +554,12 @@ class RetrievalEngine:
             out["io"] = {"n_ops": io.n_ops, "bytes": io.bytes,
                          "wall_ms": round(io.wall_ms, 2),
                          "model_ms": round(io.model_ms(), 2)}
+        if self.is_host:
+            out["use_adc"] = self.use_adc
+            decode_ms = getattr(self.store, "decode_ms", None)
+            if decode_ms is not None:
+                out["decode_ms"] = round(decode_ms, 2)
+            if self.use_adc:
+                out["adc_ms"] = round(self.adc_ms, 2)
+                out["lut_build_ms"] = round(self.lut_build_ms, 2)
         return out

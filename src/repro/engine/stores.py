@@ -16,6 +16,12 @@ Backends additionally expose:
   is_host      : True when fetch_blocks does host I/O (not jit-traceable);
                  the pipeline then batches selection on device and fetches
                  deduplicated blocks on the host.
+  is_coded     : True when the backend's native records are PQ codes; it
+                 then also exposes `fetch_code_blocks(cluster_ids) ->
+                 (codes, docs, valid)` returning RAW (..., cap, nsub)
+                 uint8 code blocks plus `codebooks`/`rotation`/`nsub`, so
+                 the pipeline can score codes directly via ADC lookup
+                 tables (repro.kernels.adc) without ever decoding floats.
   score_docs(q_dense, doc_ids) [optional] : backend-native scoring kernel
                  (dense gather+dot, PQ ADC); the pipeline prefers it on the
                  device path so numerics match the pre-engine code exactly.
@@ -53,6 +59,7 @@ class InMemoryStore:
     """Device-resident embeddings; fetch is a jit-friendly gather."""
 
     is_host = False
+    is_coded = False
 
     def __init__(self, embeddings, cluster_docs):
         self.embeddings = embeddings          # (D, dim)
@@ -73,13 +80,38 @@ class InMemoryStore:
 
 class PQStore:
     """Product-quantized embeddings; scoring via ADC lookup tables,
-    block fetch via codebook reconstruction (identical scores up to fp)."""
+    block fetch via codebook reconstruction (identical scores up to fp).
+
+    Code-backed (`is_coded`): `fetch_code_blocks` gathers raw per-cluster
+    code blocks so the jit'd pipeline can score codes in-kernel, never
+    reconstructing float embeddings on the scoring path."""
 
     is_host = False
+    is_coded = True
 
     def __init__(self, pq, cluster_docs):
         self.pq = pq
         self.cluster_docs = cluster_docs
+
+    @property
+    def codebooks(self):
+        return self.pq.codebooks
+
+    @property
+    def rotation(self):
+        return self.pq.rotation
+
+    @property
+    def nsub(self):
+        return self.pq.nsub
+
+    def fetch_code_blocks(self, cluster_ids):
+        """-> (codes, docs, valid): (..., cap, nsub) code blocks, padded
+        slots coded as doc 0 but masked by valid. Jit-traceable."""
+        docs = jnp.take(self.cluster_docs, cluster_ids, axis=0)
+        valid = docs >= 0
+        codes = jnp.take(self.pq.codes, jnp.where(valid, docs, 0), axis=0)
+        return codes, docs, valid
 
     def fetch_blocks(self, cluster_ids):
         docs = jnp.take(self.cluster_docs, cluster_ids, axis=0)
@@ -104,6 +136,7 @@ class DiskStore:
     """
 
     is_host = True
+    is_coded = False
 
     def __init__(self, block_store: DiskClusterStore, cluster_docs,
                  stats: IOStats = None):
@@ -122,6 +155,14 @@ class DiskStore:
     @property
     def block_bytes(self):
         return self.blocks.block_bytes
+
+    @property
+    def cap(self):
+        return self.blocks.cap
+
+    @property
+    def dim(self):
+        return self.blocks.dim
 
     def fetch_blocks(self, cluster_ids):
         cluster_ids = np.asarray(cluster_ids, np.int64).reshape(-1)

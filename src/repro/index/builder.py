@@ -17,7 +17,10 @@ Two layers:
     versioned layout of `index/format.py`. Two on-disk formats:
 
       format_version=1 — float blocks: per-shard raw (hi-lo, cap, dim)
-        cluster-block tensors, packed `chunk_docs` rows at a time.
+        cluster-block tensors, packed `chunk_docs` rows at a time. The
+        shard dtype may be float32, bfloat16, or int8 (format-additive;
+        int8 stamps a global `block_scale` into the manifest geometry and
+        readers decode `record * block_scale` at fetch).
       format_version=2 — PQ code shards: per-shard raw (hi-lo, cap, nsub)
         uint8 code tensors plus the (nsub, 256, dsub) codebooks, and sparse
         postings compacted to CSR (lossless; readers re-pad at load). The
@@ -149,15 +152,29 @@ def _cluster_fill_stats(cluster_docs):
             "empty": int((fill == 0).sum())}
 
 
-def _write_float_blocks(path, embeddings, cd, block_dtype, chunk_docs):
+def _write_float_blocks(path, embeddings, cd, block_dtype, chunk_docs,
+                        scale=None):
     """Stream one shard's (n, cap, dim) float blocks to `path`, reading at
-    most ~chunk_docs embedding rows per fancy-index gather."""
+    most ~chunk_docs embedding rows per fancy-index gather. `scale`
+    quantizes (int8 shards; see pack_blocks)."""
     cap = cd.shape[1]
     group = max(1, int(chunk_docs) // max(1, cap))
     with open(path, "wb") as f:
         for lo in range(0, cd.shape[0], group):
             disk_lib.pack_blocks(embeddings, cd[lo:lo + group],
-                                 block_dtype).tofile(f)
+                                 block_dtype, scale=scale).tofile(f)
+
+
+def _block_scale(embeddings, chunk_docs):
+    """Global int8 dequantization scale max|emb|/127, computed in bounded
+    chunk_docs-row reads (memmap-safe)."""
+    amax = 0.0
+    D = int(embeddings.shape[0])
+    for lo in range(0, D, int(chunk_docs)):
+        chunk = np.asarray(embeddings[lo:lo + int(chunk_docs)], np.float32)
+        if chunk.size:
+            amax = max(amax, float(np.abs(chunk).max()))
+    return (amax / 127.0) if amax > 0 else 1.0
 
 
 def _write_code_blocks(path, codes, cd):
@@ -260,7 +277,7 @@ def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
         raise ValueError(f"format_version {format_version} not in "
                          f"{fmt.SUPPORTED_VERSIONS}")
     t0 = time.perf_counter()
-    block_dtype = np.dtype(block_dtype)
+    block_dtype = fmt.resolve_block_dtype(block_dtype)
     cd = np.asarray(index.cluster_docs)
     n_clusters, cap = cd.shape
     dim = int(embeddings.shape[1])
@@ -315,10 +332,15 @@ def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
             block_shards.append({"file": rel, "cluster_lo": lo,
                                  "cluster_hi": hi})
     else:
+        scale = None
+        if block_dtype == np.int8:
+            scale = _block_scale(embeddings, chunk_docs)
+            geometry["block_scale"] = scale
         for s, (lo, hi) in enumerate(ranges):
             rel = os.path.join("blocks", f"shard_{s:05d}.bin")
             _write_float_blocks(os.path.join(tmp, rel), embeddings,
-                                cd[lo:hi], block_dtype, chunk_docs)
+                                cd[lo:hi], block_dtype, chunk_docs,
+                                scale=scale)
             block_shards.append({"file": rel, "cluster_lo": lo,
                                  "cluster_hi": hi})
         # v1 keeps the PR-2 layout byte-for-byte, including optional full

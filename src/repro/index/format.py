@@ -44,6 +44,21 @@ store and the sparse-postings encoding:
 v1 readers (format PR 2) reject v2 manifests up front via the
 format_version check; pass supported=(1,) to load_manifest to emulate one.
 
+Reduced-precision v1 float shards (format-ADDITIVE — the version stays 1):
+
+  geometry.block_dtype : may also be "bfloat16" or "int8" (beyond the
+                         original "float32"); shards hold that dtype's raw
+                         (hi-lo, cap, dim) records and readers decode to
+                         float32 at fetch time (see ShardedDiskStore)
+  geometry.block_scale : REQUIRED when block_dtype == "int8": the global
+                         dequantization scale (max|emb| / 127 at build
+                         time); decode is `record * block_scale`. Absent
+                         for other dtypes.
+
+Additive per the compat rules above: a reader that predates these dtypes
+never sees them unless an index was built with them, and then fails
+loudly at dtype resolution rather than misreading bytes.
+
 Generations (incremental updates, repro.index.update):
 
   generation        : int — 0 for a fresh `write_index` build; each
@@ -101,6 +116,29 @@ SUPPORTED_VERSIONS = (FORMAT_VERSION, FORMAT_VERSION_PQ)
 MANIFEST_NAME = "manifest.json"
 MANIFEST_HISTORY_DIR = "manifests"
 VERIFY_LEVELS = ("none", "size", "full")
+
+# v1 float-shard record dtypes this reader/builder speaks (format-additive;
+# see module docstring). "bfloat16" resolves through ml_dtypes (bundled
+# with jax); "int8" additionally needs geometry.block_scale to decode.
+BLOCK_DTYPES_V1 = ("float32", "bfloat16", "int8")
+
+
+def resolve_block_dtype(name):
+    """geometry.block_dtype -> np.dtype, for the v1 shard dtypes.
+
+    Rejects names outside BLOCK_DTYPES_V1 loudly — an unknown dtype means
+    an index newer than this reader, and misreading raw shard bytes under
+    the wrong itemsize would be silent corruption."""
+    import numpy as np
+    name = np.dtype(name).name if not isinstance(name, str) else name
+    if name not in BLOCK_DTYPES_V1:
+        raise IndexFormatError(
+            f"block_dtype {name!r} unsupported (reader speaks "
+            f"{BLOCK_DTYPES_V1}); upgrade the reader")
+    if name == "bfloat16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(name)
 
 
 class IndexFormatError(ValueError):

@@ -230,7 +230,8 @@ class IndexReader:
                 stats=stats)
         return ShardedDiskStore(
             paths, ranges, g["cap"], g["dim"], cluster_docs,
-            dtype=np.dtype(g["block_dtype"]), tombstones=tomb, stats=stats)
+            dtype=fmt.resolve_block_dtype(g["block_dtype"]),
+            block_scale=g.get("block_scale"), tombstones=tomb, stats=stats)
 
     def engine(self, cfg=None, index=None, **engine_kw):
         """RetrievalEngine serving this index through the sharded store.

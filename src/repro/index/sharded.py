@@ -13,11 +13,21 @@ Two record encodings behind the same routing:
   * ShardedDiskStore — raw float blocks (format v1): one (cap, dim) tensor
     per cluster, returned as read.
   * ShardedPQStore — PQ code blocks (format v2): one (cap, nsub) uint8
-    tensor per cluster, decoded through the (nsub, 256, dsub) codebooks at
-    fetch time. dot(q, decode(codes)) equals the ADC lookup-table score
-    exactly (same per-subspace terms), so serving this store through the
-    engine pipeline IS asymmetric-distance scoring — while the bytes that
-    cross the disk boundary shrink by 4*dim/nsub vs float32 blocks.
+    tensor per cluster. Two fetch paths: `fetch_blocks` decodes through
+    the (nsub, 256, dsub) codebooks on the host (the legacy
+    decode-then-score path, still used by label streaming), while
+    `fetch_code_blocks` returns the RAW uint8 codes (`is_coded=True`) so
+    the engine can cache codes (16x more clusters per cache byte) and
+    score them in-kernel via ADC lookup tables (repro.kernels.adc) —
+    the same per-subspace dot terms as dot(q, decode(codes)), summed in
+    the documented ascending-subspace order, with no float block ever
+    materialized on the host. Either way the bytes that cross the disk
+    boundary shrink by 4*dim/nsub vs float32 blocks.
+
+ShardedDiskStore additionally speaks the reduced-precision v1 shard
+dtypes (format-additive): bfloat16 records decode to float32 on fetch,
+int8 records decode as `record * block_scale` with the per-index scale
+from the manifest geometry.
 
 Both plug into `repro.engine` exactly like `DiskStore` (is_host backends):
 selection runs batched on device; the pipeline fetches deduplicated,
@@ -41,6 +51,9 @@ class _ShardedBlockFiles:
     a batch of raw records decodes into float embedding blocks."""
 
     is_host = True
+    # True on subclasses whose raw records are PQ codes the engine may
+    # fetch undecoded (fetch_code_blocks) and score via ADC LUTs.
+    is_coded = False
 
     def __init__(self, shard_paths, shard_ranges, record_shape, record_dtype,
                  cluster_docs, tombstones=None, stats: IOStats = None):
@@ -94,14 +107,17 @@ class _ShardedBlockFiles:
 
     # -- fetch --------------------------------------------------------------
 
-    def fetch_blocks(self, cluster_ids):
-        """1-D host sequence of cluster ids -> (vecs, docs, valid)."""
+    def _fetch_records(self, cluster_ids):
+        """1-D host sequence of cluster ids -> (raw records, docs, valid).
+
+        Does the shard routing + run-coalesced reads and charges IOStats;
+        returns records UNDECODED (decode accounting is the caller's)."""
         ids = np.asarray(cluster_ids, np.int64).reshape(-1)
         docs = self.cluster_docs_np[ids]
         valid = docs >= 0
         n = len(ids)
         if n == 0:
-            return self._decode(self._empty_blocks()), docs, valid
+            return self._empty_blocks(), docs, valid
         t0 = time.perf_counter()
         out = np.empty((n,) + self.record_shape, self.record_dtype)
         sid = np.searchsorted(self._hi, ids, side="right")
@@ -115,13 +131,20 @@ class _ShardedBlockFiles:
             _, runs = read_blocks_coalesced(self._mms[s], local, out,
                                             out_offset=int(lo))
             n_ops += runs
+        with self._lock:
+            self.stats.add(n_ops, n * self.block_bytes,
+                           (time.perf_counter() - t0) * 1e3)
+        return out, docs, valid
+
+    def fetch_blocks(self, cluster_ids):
+        """1-D host sequence of cluster ids -> (vecs, docs, valid)."""
+        records, docs, valid = self._fetch_records(cluster_ids)
         t1 = time.perf_counter()
-        vecs = self._decode(out)
+        vecs = self._decode(records)
         # IOStats.wall_ms measures only the disk reads; decode is host
         # compute and accounted separately so format v1/v2 I/O stays
         # comparable in the BENCH trajectory
         with self._lock:
-            self.stats.add(n_ops, n * self.block_bytes, (t1 - t0) * 1e3)
             self.decode_ms += (time.perf_counter() - t1) * 1e3
         return vecs, docs, valid
 
@@ -139,10 +162,17 @@ class _ShardedBlockFiles:
 
 
 class ShardedDiskStore(_ShardedBlockFiles):
-    """Format-v1 backend: raw float cluster blocks, returned as read."""
+    """Format-v1 backend: raw cluster blocks in float32, bfloat16 or int8.
+
+    float32 records are returned as read. The reduced-precision dtypes
+    (format-additive, see index README) decode to float32 on fetch:
+    bfloat16 by widening, int8 by `record * block_scale` with the
+    per-index scale stamped in the manifest geometry at build time.
+    """
 
     def __init__(self, shard_paths, shard_ranges, cap, dim, cluster_docs,
-                 dtype=np.float32, tombstones=None, stats: IOStats = None):
+                 dtype=np.float32, block_scale=None, tombstones=None,
+                 stats: IOStats = None):
         """shard_paths[i] holds clusters [shard_ranges[i][0], shard_ranges[i][1])
         as a raw (hi-lo, cap, dim) block tensor."""
         super().__init__(shard_paths, shard_ranges, (int(cap), int(dim)),
@@ -150,6 +180,20 @@ class ShardedDiskStore(_ShardedBlockFiles):
                          stats=stats)
         self.cap, self.dim = int(cap), int(dim)
         self.dtype = self.record_dtype
+        if self.record_dtype == np.int8:
+            if block_scale is None:
+                raise ValueError("int8 shards need the manifest geometry's "
+                                 "block_scale to decode")
+            self.block_scale = float(block_scale)
+        else:
+            self.block_scale = None
+
+    def _decode(self, records):
+        if self.record_dtype == np.float32:
+            return records
+        if self.record_dtype == np.int8:
+            return records.astype(np.float32) * np.float32(self.block_scale)
+        return records.astype(np.float32)      # bfloat16 and friends: widen
 
 
 class ShardedPQStore(_ShardedBlockFiles):
@@ -179,6 +223,8 @@ class ShardedPQStore(_ShardedBlockFiles):
         self.dim = int(self.nsub * self.codebooks.shape[2])
         self.dtype = np.dtype(out_dtype)
 
+    is_coded = True
+
     def _decode(self, records):
         return decode_code_blocks(self.codebooks, records,
                                   self.rotation).astype(self.dtype,
@@ -186,3 +232,10 @@ class ShardedPQStore(_ShardedBlockFiles):
 
     def _empty_blocks(self):
         return np.zeros((0, self.cap, self.nsub), np.uint8)
+
+    def fetch_code_blocks(self, cluster_ids):
+        """Like fetch_blocks but returns the RAW (n, cap, nsub) uint8 code
+        records — no host decode (decode_ms untouched). The engine caches
+        these (16x more clusters per cache byte than float blocks) and
+        scores them via ADC lookup tables (repro.kernels.adc)."""
+        return self._fetch_records(cluster_ids)

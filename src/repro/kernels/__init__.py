@@ -9,7 +9,12 @@ Kernels:
   lstm          — fused LSTM-selector sequence (paper Stage II hot loop)
   cluster_score — selected-cluster block gather + dot + running top-k
                   (paper Step 3: partial dense retrieval)
+  adc           — PQ asymmetric-distance scoring: per-query LUT build +
+                  uint8 code-block gather/accumulate (v2 serving fast path)
   topk          — blocked top-k merge over score tiles
   embedding_bag — recsys gather+pool (JAX has no native EmbeddingBag)
   bin_overlap   — P/Q sparse-result x cluster overlap features (Stage I)
+
+See README.md in this directory for the per-kernel contracts (ADC LUT
+layout and the accumulation-order guarantee live there).
 """

@@ -1,0 +1,103 @@
+"""ADC (asymmetric distance computation) Pallas kernels — the PQ serving
+fast path: build per-query lookup tables once, then accumulate scores
+directly over uint8 codes, never reconstructing float embeddings.
+
+Two kernels:
+
+  * adc_tables_pallas — LUT build. Grid (B, nsub); each cell is one
+    (K, dsub) x (dsub,) MXU matvec: lut[b, j] = codebooks[j] @ q_sub.
+    The OPQ rotation is folded in BEFORE the kernel (ops.py rotates q
+    once), so the kernel sees only the rotated query.
+
+  * adc_score_blocks_pallas — code scoring. Like cluster_score, sel_ids
+    is scalar-prefetched and drives the code-block BlockSpec index_map:
+    the (cap, nsub) uint8 block of cluster sel_ids[b, s] is DMA'd into
+    VMEM (16x fewer bytes than the float block), then scores accumulate
+    in-register in ascending subspace order (ref.py contract): per
+    subspace a (cap, K) one-hot of the code column hits the (K,) LUT row
+    on the MXU — a gather-free formulation that lowers on TPU.
+
+Output is float32 and matches dot(q, decode(codes)) up to the documented
+reassociation of the dim-length sum into nsub partial dots.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tables_kernel(q_ref, books_ref, out_ref):
+    # q_ref: (1, dsub); books_ref: (1, K, dsub); out_ref: (1, 1, K)
+    out_ref[0, 0, :] = jnp.dot(books_ref[0], q_ref[0, :],
+                               preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def adc_tables_pallas(q, codebooks, *, interpret=True):
+    """q: (B, dim) float32 (already rotated); codebooks: (nsub, K, dsub).
+
+    Returns LUT (B, nsub, K) float32.
+    """
+    B, dim = q.shape
+    nsub, K, dsub = codebooks.shape
+    return pl.pallas_call(
+        _tables_kernel,
+        grid=(B, nsub),
+        in_specs=[
+            pl.BlockSpec((1, dsub), lambda b, j: (b, j)),
+            pl.BlockSpec((1, K, dsub), lambda b, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, K), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nsub, K), jnp.float32),
+        interpret=interpret,
+    )(q.astype(jnp.float32), jnp.asarray(codebooks, jnp.float32))
+
+
+def _score_kernel(sel_ref, lut_ref, codes_ref, out_ref, *, nsub, K):
+    # lut_ref: (1, nsub, K); codes_ref: (1, cap, nsub); out_ref: (1, 1, cap)
+    codes = codes_ref[0].astype(jnp.int32)                 # (cap, nsub)
+    lut = lut_ref[0]                                       # (nsub, K)
+    cap = codes.shape[0]
+    lanes = jax.lax.iota(jnp.int32, K)[None, :]            # (1, K)
+
+    def body(j, acc):
+        # one-hot(codes[:, j]) @ lut[j]: an MXU-friendly gather of K-wide
+        # LUT rows; ascending j is the documented accumulation order
+        col = jax.lax.dynamic_slice(codes, (0, j), (cap, 1))   # (cap, 1)
+        onehot = (col == lanes).astype(jnp.float32)            # (cap, K)
+        row = jax.lax.dynamic_slice(lut, (j, 0), (1, K))[0]    # (K,)
+        return acc + jnp.dot(onehot, row,
+                             preferred_element_type=jnp.float32)
+
+    out_ref[0, 0, :] = jax.lax.fori_loop(
+        0, nsub, body, jnp.zeros((cap,), jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def adc_score_blocks_pallas(lut, code_blocks, sel_ids, *, interpret=True):
+    """lut: (B, nsub, K); code_blocks: (N, cap, nsub) uint8;
+    sel_ids: (B, S) int32. Returns scores (B, S, cap) float32.
+    """
+    B, nsub, K = lut.shape
+    N, cap, _ = code_blocks.shape
+    S = sel_ids.shape[1]
+
+    from jax.experimental.pallas import tpu as pltpu
+    kernel = pl.pallas_call(
+        functools.partial(_score_kernel, nsub=nsub, K=K),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, S),
+            in_specs=[
+                pl.BlockSpec((1, nsub, K), lambda b, s, sel: (b, 0, 0)),
+                pl.BlockSpec((1, cap, nsub),
+                             lambda b, s, sel: (sel[b, s], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, cap), lambda b, s, sel: (b, s, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, S, cap), jnp.float32),
+        interpret=interpret,
+    )
+    return kernel(sel_ids, lut.astype(jnp.float32), code_blocks)

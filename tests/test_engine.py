@@ -245,6 +245,45 @@ def test_block_cache_get_or_fetch_many_single_flight():
 def test_block_cache_rejects_bad_capacity():
     with pytest.raises(ValueError):
         BlockCache(0)
+    with pytest.raises(ValueError):
+        BlockCache()                              # no bound at all
+    with pytest.raises(ValueError):
+        BlockCache(4, capacity_bytes=1024)        # ambiguous double bound
+    with pytest.raises(ValueError):
+        BlockCache(capacity_bytes=0)
+
+
+def test_block_cache_byte_budget_accounting():
+    """capacity_bytes bounds the ACTUAL stored bytes: replacing a block
+    re-charges it, eviction refunds it, and stats reports the live total."""
+    blk = lambda n: np.zeros(n, np.uint8)         # nbytes == n
+    c = BlockCache(capacity_bytes=100)
+    c.put(1, blk(40))
+    c.put(2, blk(40))
+    assert c.cached_bytes == 80 and c.evictions == 0
+    c.put(1, blk(10))                             # replace: 40 -> 10
+    assert c.cached_bytes == 50 and len(c) == 2
+    c.put(3, blk(60))                             # 110 > 100: evict LRU (2)
+    assert 2 not in c and c.cached_bytes == 70 and c.evictions == 1
+    st = c.stats()
+    assert st["cached_bytes"] == 70
+    assert st["capacity_bytes"] == 100 and st["capacity"] is None
+
+
+def test_block_cache_byte_budget_density():
+    """The point of code-caching: a byte budget sized for F float blocks
+    holds ~4*dim/nsub times more (smaller) code blocks."""
+    cap, dim, nsub = 8, 32, 8
+    budget = 4 * cap * dim * 4                    # 4 float32 blocks
+    floats = BlockCache(capacity_bytes=budget)
+    for i in range(10):
+        floats.put(i, np.zeros((cap, dim), np.float32))
+    assert len(floats) == 4
+    codes = BlockCache(capacity_bytes=budget)
+    for i in range(100):
+        codes.put(i, np.zeros((cap, nsub), np.uint8))
+    assert len(codes) == 4 * (4 * dim // nsub)    # 16x more clusters
+    assert codes.cached_bytes <= budget
 
 
 # ---------------------------------------------------------------------------
@@ -324,3 +363,78 @@ def test_engine_host_dedups_and_caches(tiny):
     # the second pass was served without growing serving-path reads beyond
     # the unique-cluster set (prefetch may add candidate blocks, n <= N)
     assert st["io"]["n_ops"] <= index.n_clusters + ops_first
+
+
+# ---------------------------------------------------------------------------
+# ADC serving: code-backed stores through the fused engine tail
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def v2_reader(tiny, tmp_path_factory):
+    """A format-v2 (PQ code shard) index over the tiny corpus, with an OPQ
+    rotation so the LUT folding is exercised."""
+    from repro import index as index_lib
+    cfg, corpus, index, _ = tiny
+    pq = quant_lib.train_pq(jax.random.key(1), corpus.embeddings, nsub=8,
+                            rotate=True)
+    out = str(tmp_path_factory.mktemp("adc") / "v2")
+    index_lib.write_index(out, cfg, index, np.asarray(corpus.embeddings),
+                          n_shards=3,
+                          format_version=index_lib.FORMAT_VERSION_PQ, pq=pq)
+    return index_lib.IndexReader.open(out, verify="full")
+
+
+def test_engine_adc_matches_decode_path(tiny, v2_reader):
+    """Backend parity for the code path: the ADC engine (raw codes ->
+    LUT scoring, zero host decode) returns the SAME fused top-k as the
+    decode-then-score engine over the same v2 index — scores included."""
+    _, _, _, qs = tiny
+    res = {}
+    for use_adc in (True, False):
+        with v2_reader.engine(max_batch=16, cache_capacity=32,
+                              use_adc=use_adc) as eng:
+            ids, scores = eng.retrieve(qs.q_dense, qs.q_terms, qs.q_weights)
+            st = eng.stats()
+        res[use_adc] = (np.asarray(ids), np.asarray(scores), st)
+    ids_adc, sc_adc, st_adc = res[True]
+    ids_dec, sc_dec, st_dec = res[False]
+    np.testing.assert_array_equal(ids_adc, ids_dec)
+    np.testing.assert_allclose(sc_adc, sc_dec, rtol=1e-5, atol=1e-5)
+    # the ADC path never decoded a float block on the host
+    assert st_adc["use_adc"] and st_adc["decode_ms"] == 0.0
+    assert "adc_ms" in st_adc and "lut_build_ms" in st_adc
+    assert not st_dec["use_adc"] and st_dec["decode_ms"] > 0.0
+    # both paths read CODE bytes off disk (same shards)
+    assert st_adc["io"]["bytes"] > 0
+    # the cache holds code blocks under its byte budget
+    assert 0 < st_adc["cache"]["cached_bytes"] \
+        <= st_adc["cache"]["capacity_bytes"]
+
+
+def test_engine_adc_auto_detection_and_validation(tiny, v2_reader):
+    """use_adc=None auto-enables exactly for code-backed host stores;
+    use_adc=True on a float store is a loud error."""
+    cfg, corpus, index, _ = tiny
+    with v2_reader.engine(max_batch=16) as eng:
+        assert eng.use_adc                        # auto: v2 store is coded
+    from repro.core import disk as dk
+    with tempfile.TemporaryDirectory() as d:
+        blocks = dk.DiskClusterStore(os.path.join(d, "b.bin"),
+                                     corpus.embeddings, index.cluster_docs)
+        store = DiskStore(blocks, index.cluster_docs)
+        with RetrievalEngine(cfg, index, store=store, max_batch=16) as eng:
+            assert not eng.use_adc
+        with pytest.raises(ValueError):
+            RetrievalEngine(cfg, index, store=store, use_adc=True)
+
+
+def test_engine_adc_empty_selection(tiny, v2_reader):
+    """All-padding sparse input (nothing selected) serves cleanly through
+    the fused ADC tail with zero block I/O for scoring."""
+    _, _, _, qs = tiny
+    qt = np.full_like(np.asarray(qs.q_terms), -1)
+    qw = np.zeros_like(np.asarray(qs.q_weights))
+    with v2_reader.engine(max_batch=16, prefetch=False) as eng:
+        ids, scores = eng.retrieve(qs.q_dense, qt, qw)
+    assert np.asarray(ids).shape == (len(np.asarray(qs.q_dense)), eng.k)
+    assert not np.isnan(np.asarray(scores)).any()

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.adc import (
+    adc_score_blocks, adc_score_blocks_ref, adc_tables, adc_tables_ref)
 from repro.kernels.bin_overlap import bin_overlap, bin_overlap_ref
 from repro.kernels.cluster_score import cluster_score, cluster_score_ref
 from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref
@@ -122,6 +124,138 @@ def test_topk_nonaligned_shapes(B, D, k, block, rng):
     v1, i1 = topk_pallas(x, k, block_d=block, interpret=True)
     v2, i2 = topk_ref(x, k)
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+# ---------------------------------------------------------------------------
+# ADC (PQ asymmetric-distance) kernels: LUT build + code-block scoring.
+# use_kernel=True pins the Pallas bodies (interpret mode on CPU); the
+# parity target is both the jnp oracle AND decode-then-dot, per the
+# accumulation-order contract in kernels/adc/ref.py.
+# ---------------------------------------------------------------------------
+
+def _decode_np(codebooks, codes, rotation=None):
+    books = np.asarray(codebooks, np.float32)
+    vecs = books[np.arange(books.shape[0]), np.asarray(codes, np.int64)]
+    flat = vecs.reshape(codes.shape[:-1] + (-1,))
+    if rotation is not None:
+        flat = flat @ np.asarray(rotation, np.float32).T
+    return flat
+
+
+@pytest.mark.parametrize("B,nsub,dsub,K", [
+    (2, 8, 6, 256),          # standard K, nothing lane-aligned
+    (1, 3, 5, 17),           # tiny odd K
+    (4, 12, 4, 256),         # the serving geometry's nsub
+    (3, 1, 7, 9),            # single subspace
+])
+@pytest.mark.parametrize("rotate", [False, True])
+def test_adc_tables_matrix(B, nsub, dsub, K, rotate, rng):
+    dim = nsub * dsub
+    q = jnp.asarray(rng.standard_normal((B, dim)), jnp.float32)
+    books = jnp.asarray(rng.standard_normal((nsub, K, dsub)), jnp.float32)
+    rot = jnp.asarray(np.linalg.qr(rng.standard_normal((dim, dim)))[0],
+                      jnp.float32) if rotate else None
+    out = adc_tables(q, books, rot, use_kernel=True)
+    ref = adc_tables_ref(q, books, rot)
+    assert out.shape == (B, nsub, K)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,nsub,dsub,N,cap,S", [
+    (2, 3, 5, 4, 7, 3),      # nothing a power of two or lane-aligned
+    (1, 5, 2, 1, 9, 4),      # single cluster, every slot the same block
+    (3, 4, 4, 2, 1, 2),      # cap = 1 blocks
+    (2, 12, 4, 6, 13, 9),    # serving nsub, odd cap, S > N (repeats)
+])
+def test_adc_score_blocks_matrix(B, nsub, dsub, N, cap, S, rng):
+    """Kernel == oracle == dot(q, decode(codes)) on ragged geometries."""
+    K = 256
+    dim = nsub * dsub
+    q = jnp.asarray(rng.standard_normal((B, dim)), jnp.float32)
+    books = jnp.asarray(rng.standard_normal((nsub, K, dsub)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, K, (N, cap, nsub)), jnp.uint8)
+    sel = jnp.asarray(rng.integers(0, N, (B, S)), jnp.int32)
+    lut = adc_tables(q, books, use_kernel=True)
+    out = adc_score_blocks(lut, codes, sel, use_kernel=True)
+    ref = adc_score_blocks_ref(adc_tables_ref(q, books), codes, sel)
+    assert out.shape == (B, S, cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # the documented contract: ADC == dot against the decoded vectors
+    dec = _decode_np(books, np.asarray(codes))          # (N, cap, dim)
+    dot = np.einsum("bd,bscd->bsc", np.asarray(q),
+                    dec[np.asarray(sel)])
+    np.testing.assert_allclose(np.asarray(out), dot, rtol=1e-4, atol=1e-4)
+
+
+def test_adc_rotation_folding(rng):
+    """OPQ rotation folds into the query: scoring rotation-free codes with
+    a rotated-q LUT equals dot(q, decode-with-unrotation(codes))."""
+    B, nsub, dsub, N, cap, S, K = 2, 4, 3, 5, 6, 3, 32
+    dim = nsub * dsub
+    q = rng.standard_normal((B, dim)).astype(np.float32)
+    books = rng.standard_normal((nsub, K, dsub)).astype(np.float32)
+    rot = np.linalg.qr(rng.standard_normal((dim, dim)))[0].astype(np.float32)
+    codes = rng.integers(0, K, (N, cap, nsub)).astype(np.uint8)
+    sel = rng.integers(0, N, (B, S)).astype(np.int32)
+    lut = adc_tables(jnp.asarray(q), jnp.asarray(books), jnp.asarray(rot),
+                     use_kernel=True)
+    out = adc_score_blocks(lut, jnp.asarray(codes), jnp.asarray(sel),
+                           use_kernel=True)
+    dec = _decode_np(books, codes, rot)
+    dot = np.einsum("bd,bscd->bsc", q, dec[sel])
+    np.testing.assert_allclose(np.asarray(out), dot, rtol=1e-4, atol=1e-4)
+
+
+def test_adc_empty_selection_and_empty_fetch(rng):
+    """S == 0 (nothing selected) and N == 0 (empty fetch) both return the
+    contract-shaped zeros without invoking a zero-size kernel grid."""
+    lut = jnp.asarray(rng.standard_normal((2, 4, 16)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, 16, (3, 5, 4)), jnp.uint8)
+    out = adc_score_blocks(lut, codes, jnp.zeros((2, 0), jnp.int32),
+                           use_kernel=True)
+    assert out.shape == (2, 0, 5) and not np.asarray(out).size
+    out = adc_score_blocks(lut, jnp.zeros((0, 5, 4), jnp.uint8),
+                           jnp.zeros((2, 3), jnp.int32), use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((2, 3, 5)))
+
+
+def test_adc_tombstone_slot_independence(rng):
+    """Garbage codes in tombstone-masked slots must not perturb any live
+    slot's score — each slot accumulates only its own LUT rows (the engine
+    drops masked slots via the validity mask AFTER scoring)."""
+    B, nsub, N, cap, S, K = 2, 4, 3, 6, 4, 32
+    lut = jnp.asarray(rng.standard_normal((B, nsub, K)), jnp.float32)
+    codes = rng.integers(0, K, (N, cap, nsub)).astype(np.uint8)
+    sel = jnp.asarray(rng.integers(0, N, (B, S)), jnp.int32)
+    base = np.asarray(adc_score_blocks(lut, jnp.asarray(codes), sel,
+                                       use_kernel=True))
+    tomb = codes.copy()
+    tomb[:, 2, :] = 255                      # "deleted" slot: garbage codes
+    got = np.asarray(adc_score_blocks(lut, jnp.asarray(tomb), sel,
+                                      use_kernel=True))
+    live = np.ones(cap, bool)
+    live[2] = False
+    np.testing.assert_array_equal(got[:, :, live], base[:, :, live])
+
+
+def test_adc_tie_determinism_vs_lax_topk(rng):
+    """Kernel scores are BITWISE equal to the oracle's (same ascending-
+    subspace accumulation of identical f32 terms), so a downstream
+    lax.top_k resolves ties identically on either path — even with many
+    exactly-equal scores (integer-valued LUT, repeated codes)."""
+    B, nsub, N, cap, S, K = 2, 4, 4, 8, 3, 16
+    lut = jnp.asarray(rng.integers(-3, 4, (B, nsub, K)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, 4, (N, cap, nsub)), jnp.uint8)
+    sel = jnp.asarray(rng.integers(0, N, (B, S)), jnp.int32)
+    out = adc_score_blocks(lut, codes, sel, use_kernel=True)
+    ref = adc_score_blocks_ref(lut, codes, sel)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    k = 5
+    _, i1 = jax.lax.top_k(out.reshape(B, S * cap), k)
+    _, i2 = jax.lax.top_k(ref.reshape(B, S * cap), k)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
 
 
