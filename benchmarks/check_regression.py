@@ -16,7 +16,11 @@ fail on
     pq-sharded (ADC-served) p50 must stay below the in-memory p50. Both
     rows come from the same run on the same host, so this gate never
     skips on host/geometry mismatch — it guards the point of the
-    ADC+fused-tail serving path absolutely, not relative to a baseline.
+    ADC+fused-tail serving path absolutely, not relative to a baseline,
+  * the intra-file tracing-overhead gate: the tracing-enabled p50 in the
+    pq-sharded row's `trace_overhead` pair must stay within 5% (+0.2ms
+    timer-noise floor) of the tracing-disabled p50 measured by the same
+    engine in the same run (repro.obs spans must stay near-free).
 
 Intended CI wiring (see .github/workflows/ci.yml) — the baseline comes
 from the PR's MERGE BASE, not HEAD, so a PR that restamps its own BENCH
@@ -105,6 +109,20 @@ def check_intra_serve(fresh_serve):
     if dm is not None and dm != 0.0:
         bad.append(f"[serve:intra] ADC path decoded floats on the host "
                    f"(decode_ms={dm})")
+    # tracing-overhead gate: both p50s come from the same engine in the
+    # same run (serve_engine.py passes 1 and 2), so this never skips on a
+    # host mismatch. The 0.2ms absolute floor guards against timer noise
+    # dominating the ratio on sub-millisecond batches.
+    ov = pq.get("trace_overhead")
+    if ov:
+        off, on = ov.get("p50_ms_untraced"), ov.get("p50_ms_traced")
+        if off and on and on > off * 1.05 + 0.2:
+            bad.append(f"[serve:intra] tracing-enabled p50 {on:.2f}ms "
+                       f"exceeds 1.05x untraced p50 {off:.2f}ms (+0.2ms "
+                       f"noise floor): span overhead regressed")
+    else:
+        print("note: trace_overhead missing from pq-sharded row; tracing "
+              "overhead gate skipped")
     return bad
 
 

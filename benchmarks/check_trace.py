@@ -1,0 +1,143 @@
+"""Validate a repro.obs trace export (schema + structural invariants).
+
+Formats (picked by suffix, matching repro.obs.write_trace):
+
+  * `.jsonl` — one span per line:
+      {"trace": int, "trace_name": str, "span": str, "index": int,
+       "parent": int, "depth": int, "t0_ms": float, "dur_ms": float, ...}
+    Checked per trace: span 0 is the root (parent -1, depth 0, t0 0),
+    every other span's parent precedes it, depth == parent depth + 1, and
+    every span lies inside its parent's [t0, t0 + dur] window (0.1 ms
+    slack for rounding).
+  * anything else — Chrome trace JSON: {"traceEvents": [...]} where every
+    event is a complete ("ph": "X") event with name/ts/dur/pid/tid.
+
+Exit 0 = valid, 1 = violations (each printed). CI runs this on the
+serve smoke trace (see .github/workflows/ci.yml):
+
+  PYTHONPATH=src python -m repro.launch.serve --index-dir $IDX \
+      --queries 8 --trace-out /tmp/trace.jsonl
+  python benchmarks/check_trace.py /tmp/trace.jsonl \
+      --require-spans stage1,stage2_select,fused_score_topk
+"""
+
+import argparse
+import json
+import sys
+
+REQUIRED = {"trace": int, "trace_name": str, "span": str, "index": int,
+            "parent": int, "depth": int, "t0_ms": (int, float),
+            "dur_ms": (int, float)}
+SLACK_MS = 0.1          # to_dict rounds to 3 decimals; allow rounding skew
+
+
+def check_jsonl(path):
+    bad = []
+    traces = {}
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError as e:
+                bad.append(f"line {ln}: not valid JSON ({e})")
+                continue
+            for key, typ in REQUIRED.items():
+                if key not in d:
+                    bad.append(f"line {ln}: missing key {key!r}")
+                elif not isinstance(d[key], typ) or isinstance(d[key], bool):
+                    bad.append(f"line {ln}: {key}={d[key]!r} is not "
+                               f"{typ}")
+            if bad and bad[-1].startswith(f"line {ln}"):
+                continue
+            if d["dur_ms"] < 0 or d["t0_ms"] < 0 or d["depth"] < 0:
+                bad.append(f"line {ln}: negative t0/dur/depth: {d}")
+            traces.setdefault(d["trace"], []).append((ln, d))
+    for tid, spans in traces.items():
+        by_index = {d["index"]: d for _, d in spans}
+        root = by_index.get(0)
+        if root is None or root["parent"] != -1 or root["depth"] != 0 \
+                or root["t0_ms"] != 0:
+            bad.append(f"trace {tid}: span 0 is not a well-formed root "
+                       f"({root})")
+            continue
+        for ln, d in spans:
+            if d["index"] == 0:
+                continue
+            parent = by_index.get(d["parent"])
+            if parent is None or d["parent"] >= d["index"]:
+                bad.append(f"line {ln}: parent {d['parent']} does not "
+                           f"precede span {d['index']} in trace {tid}")
+                continue
+            if d["depth"] != parent["depth"] + 1:
+                bad.append(f"line {ln}: depth {d['depth']} != parent "
+                           f"depth {parent['depth']} + 1")
+            if d["t0_ms"] + SLACK_MS < parent["t0_ms"] or \
+                    d["t0_ms"] + d["dur_ms"] > \
+                    parent["t0_ms"] + parent["dur_ms"] + SLACK_MS:
+                bad.append(f"line {ln}: span {d['span']!r} "
+                           f"[{d['t0_ms']}, {d['t0_ms'] + d['dur_ms']}] "
+                           f"escapes parent {parent['span']!r} window")
+    names = {d["span"] for spans in traces.values() for _, d in spans}
+    return bad, len(traces), names
+
+
+def check_chrome(path):
+    bad = []
+    with open(path) as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            return [f"not valid JSON ({e})"], 0, set()
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["top-level 'traceEvents' list missing"], 0, set()
+    names, tids = set(), set()
+    for i, ev in enumerate(events):
+        for key in ("name", "ph", "ts", "dur", "pid", "tid"):
+            if key not in ev:
+                bad.append(f"event {i}: missing {key!r}")
+        if ev.get("ph") != "X":
+            bad.append(f"event {i}: ph={ev.get('ph')!r}, expected complete "
+                       f"event 'X'")
+        if not isinstance(ev.get("ts"), (int, float)) or \
+                not isinstance(ev.get("dur"), (int, float)) or \
+                ev.get("dur", 0) < 0:
+            bad.append(f"event {i}: non-numeric or negative ts/dur")
+        names.add(ev.get("name"))
+        tids.add(ev.get("tid"))
+    return bad, len(tids), names
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Validate a repro.obs trace export.", epilog=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("trace", help="trace file (.jsonl or Chrome JSON)")
+    ap.add_argument("--require-spans", default=None, metavar="A,B,...",
+                    help="comma list of span names that must appear")
+    ap.add_argument("--min-traces", type=int, default=1,
+                    help="minimum number of traces expected (default 1)")
+    args = ap.parse_args(argv)
+
+    checker = check_jsonl if args.trace.endswith(".jsonl") else check_chrome
+    bad, n_traces, names = checker(args.trace)
+    if n_traces < args.min_traces:
+        bad.append(f"only {n_traces} trace(s), expected >= "
+                   f"{args.min_traces}")
+    for want in (args.require_spans or "").split(","):
+        if want and want not in names:
+            bad.append(f"required span {want!r} never appears "
+                       f"(saw: {sorted(n for n in names if n)})")
+    for b in bad:
+        print(f"TRACE INVALID: {b}")
+    if not bad:
+        print(f"trace OK: {args.trace} — {n_traces} trace(s), "
+              f"{len(names)} span name(s)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

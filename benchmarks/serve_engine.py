@@ -14,6 +14,12 @@ batch latency beats the in-memory p50 (the point of the ADC+fused-tail
 serving path). A cache-budget sweep records the hit-rate gain from
 caching codes instead of float blocks at the same byte budget.
 
+The pq-sharded engine additionally runs an untraced and a fully traced
+steady pass (repro.obs stage-span tracing) to emit `stage_breakdown_ms`
+— per-stage totals whose depth-1 spans must cover >=90% of the traced
+batch wall time — and a `trace_overhead` pair; check_regression.py gates
+the traced p50 at 1.05x the untraced p50.
+
 Writes BENCH_serve.json at the repo root so later PRs have a perf
 trajectory to beat. Standalone: PYTHONPATH=src python -m benchmarks.serve_engine
 """
@@ -185,6 +191,43 @@ def run():
     assert pq_row["p50_batch_ms"] < mem_row["p50_batch_ms"], \
         (f"pq-sharded p50 {pq_row['p50_batch_ms']}ms not under in-memory "
          f"p50 {mem_row['p50_batch_ms']}ms")
+
+    # ---- stage breakdown + tracing overhead (pq-sharded engine) ---------
+    # Same engine, two steady passes: pass 1 with tracing off measures the
+    # clean p50; reset_stats + sample_rate=1.0, pass 2 yields the traced
+    # p50 and the per-stage span totals. check_regression.py gates the
+    # traced/untraced p50 ratio at 1.05 (+0.2ms timer-noise floor).
+    from repro.obs import Tracer
+    tracer = Tracer(sample_rate=0.0, capacity=4096)
+    with reader.engine(max_batch=MAX_BATCH, cache_capacity=cfg.n_clusters,
+                       tracer=tracer) as teng:
+        _serve(teng, qs, N_QUERIES, (MAX_BATCH,))        # untraced pass
+        p50_untraced = teng.stats()["p50_ms"]
+        teng.reset_stats()
+        tracer.sample_rate = 1.0
+        _serve(teng, qs, N_QUERIES, (MAX_BATCH,))        # traced pass
+        p50_traced = teng.stats()["p50_ms"]
+    batch_wall = covered = 0.0
+    for t in tracer.traces:
+        if t.name != "batch":
+            continue
+        batch_wall += float(t.spans[0].annot.get("batch_ms", 0.0))
+        # depth-1 stages only (disk_fetch nests under cache_fetch); `pad`
+        # precedes the batch_ms clock, so it is not part of coverage
+        covered += sum(sp.dur_ms or 0.0 for sp in t.spans
+                       if sp.depth == 1 and sp.name != "pad")
+    coverage = round(covered / max(batch_wall, 1e-9), 4)
+    pq_row["stage_breakdown_ms"] = {
+        name: agg["ms"] for name, agg in
+        sorted(tracer.span_totals("batch").items())}
+    pq_row["span_coverage_frac"] = coverage
+    pq_row["trace_overhead"] = {
+        "p50_ms_untraced": p50_untraced, "p50_ms_traced": p50_traced,
+        "frac": round(p50_traced / max(p50_untraced, 1e-9), 4),
+    }
+    assert coverage >= 0.9, \
+        (f"stage spans cover only {coverage:.0%} of traced batch wall time "
+         f"({covered:.1f}/{batch_wall:.1f} ms)")
 
     # ---- reduced-precision v1 shard dtypes ------------------------------
     for dt in ("bfloat16", "int8"):

@@ -36,6 +36,7 @@ from repro.core import clusd as clusd_lib
 from repro.core import fusion as fusion_lib
 from repro.core import sparse as sparse_lib
 from repro.kernels import adc as adc_ops
+from repro.obs import NOOP_TRACE
 
 
 # ---------------------------------------------------------------------------
@@ -62,29 +63,37 @@ def score_selected(store, q_dense, sel_ids, sel_mask):
     return docs_flat.astype(jnp.int32), scores, valid.reshape(B, S * cap)
 
 
-def fetch_unique_blocks(store, uniq, cache=None):
+def fetch_unique_blocks(store, uniq, cache=None, trace=None):
     """Fetch blocks for sorted unique cluster ids, through the LRU cache
     when given. Only cache misses hit the store (and count as I/O ops).
-    Returns (U, cap, dim) float32."""
+    Returns (U, cap, dim) float32. `trace` (a repro.obs Trace) wraps the
+    store reads in nested `disk_fetch` spans — cache hits emit none."""
+    tr = trace if trace is not None else NOOP_TRACE
+
+    def fill(cids):
+        with tr.span("disk_fetch", n_blocks=len(cids)):
+            return np.asarray(store.fetch_blocks(np.asarray(cids))[0])
+
     if cache is None:
-        vecs, _, _ = store.fetch_blocks(uniq)
-        return np.asarray(vecs)
-    got = cache.get_or_fetch_many(
-        uniq, lambda cids: np.asarray(store.fetch_blocks(np.asarray(cids))[0]))
+        return fill(uniq)
+    got = cache.get_or_fetch_many(uniq, fill)
     return np.stack([got[int(c)] for c in uniq])
 
 
-def fetch_unique_code_blocks(store, uniq, cache=None):
+def fetch_unique_code_blocks(store, uniq, cache=None, trace=None):
     """Raw-code sibling of `fetch_unique_blocks` for code-backed stores:
     returns (U, cap, nsub) uint8 — no decode happens anywhere on this
     path, and the cache holds CODE blocks (4*dim/nsub more clusters per
     cache byte than float blocks under a byte budget)."""
+    tr = trace if trace is not None else NOOP_TRACE
+
+    def fill(cids):
+        with tr.span("disk_fetch", n_blocks=len(cids)):
+            return np.asarray(store.fetch_code_blocks(np.asarray(cids))[0])
+
     if cache is None:
-        codes, _, _ = store.fetch_code_blocks(uniq)
-        return np.asarray(codes)
-    got = cache.get_or_fetch_many(
-        uniq,
-        lambda cids: np.asarray(store.fetch_code_blocks(np.asarray(cids))[0]))
+        return fill(uniq)
+    got = cache.get_or_fetch_many(uniq, fill)
     return np.stack([got[int(c)] for c in uniq])
 
 

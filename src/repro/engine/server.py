@@ -45,11 +45,12 @@ Usage:
     engine.close()
 """
 
+import collections
 import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +62,7 @@ from repro.engine import pipeline as pipe_lib
 from repro.engine import stores as stores_lib
 from repro.engine.cache import BlockCache
 from repro.kernels import adc as adc_ops
+from repro.obs import NOOP_TRACE, MetricsRegistry, Tracer
 
 
 def bucket_size(n, max_batch):
@@ -88,20 +90,92 @@ class BatchRecord:
     ms: float
 
 
-@dataclasses.dataclass
 class ServeStats:
-    n_queries: int = 0
-    n_batches: int = 0
-    batches: List[BatchRecord] = dataclasses.field(default_factory=list)
-    prefetch_enqueued: int = 0
-    prefetch_errors: int = 0
-    reloads: int = 0
-    selector_reloads: int = 0
+    """Serving counters, registry-backed and bounded.
+
+    Cumulative counts (queries, batches, compile batches, prefetch,
+    reloads, steady time) live as counters in a MetricsRegistry — exact
+    over the engine's whole lifetime. Per-batch records land in a ring
+    (`deque(maxlen=window)`, default 8192) plus the registry's
+    `serve.batch_ms` histogram, so a long soak holds memory constant:
+    `latency_percentiles()` / `per_query_ms()` cover the most recent
+    `window` steady batches (identical to the old unbounded list until
+    the window overflows), while `steady_qps()` stays lifetime-exact
+    from the cumulative counters."""
+
+    WINDOW = 8192
+
+    def __init__(self, registry=None, window=WINDOW):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.window = int(window)
+        reg = self.registry
+        self._queries = reg.counter("serve.queries")
+        self._batches = reg.counter("serve.batches")
+        self._compile_batches = reg.counter("serve.compile_batches")
+        self._steady_queries = reg.counter("serve.steady_queries")
+        self._steady_ms = reg.counter("serve.steady_ms")
+        self._batch_ms_hist = reg.histogram("serve.batch_ms",
+                                            ring=self.window)
+        self._prefetch_enqueued = reg.counter("serve.prefetch_enqueued")
+        self._prefetch_errors = reg.counter("serve.prefetch_errors")
+        self._reloads = reg.counter("serve.reloads")
+        self._selector_reloads = reg.counter("serve.selector_reloads")
+        self.batches = collections.deque(maxlen=self.window)
+        self._compiled_bucket_set = set()
+
+    # cumulative counts read back from the registry
+    @property
+    def n_queries(self):
+        return int(self._queries.value)
+
+    @property
+    def n_batches(self):
+        return int(self._batches.value)
+
+    @property
+    def n_compile_batches(self):
+        return int(self._compile_batches.value)
+
+    @property
+    def prefetch_enqueued(self):
+        return int(self._prefetch_enqueued.value)
+
+    @property
+    def prefetch_errors(self):
+        return int(self._prefetch_errors.value)
+
+    @property
+    def reloads(self):
+        return int(self._reloads.value)
+
+    @property
+    def selector_reloads(self):
+        return int(self._selector_reloads.value)
 
     def record(self, size, bucket, compiled, ms):
-        self.n_queries += size
-        self.n_batches += 1
+        self._queries.inc(size)
+        self._batches.inc()
+        if compiled:
+            self._compile_batches.inc()
+            self._compiled_bucket_set.add(bucket)
+        else:
+            self._steady_queries.inc(size)
+            self._steady_ms.inc(ms)
+            self._batch_ms_hist.observe(ms)
         self.batches.append(BatchRecord(size, bucket, compiled, ms))
+
+    def record_prefetch(self, n):
+        self._prefetch_enqueued.inc(n)
+
+    def record_prefetch_error(self):
+        self._prefetch_errors.inc()
+
+    def record_reload(self):
+        self._reloads.inc()
+
+    def record_selector_reload(self):
+        self._selector_reloads.inc()
 
     @property
     def batch_ms(self):
@@ -109,19 +183,19 @@ class ServeStats:
 
     @property
     def compiled_buckets(self):
-        return sorted({b.bucket for b in self.batches if b.compiled})
+        return sorted(self._compiled_bucket_set)
 
     def _steady(self):
         return [b for b in self.batches if not b.compiled]
 
     def per_query_ms(self):
-        """Per-query latencies, excluding jit-compile batches."""
+        """Per-query latencies, excluding jit-compile batches (recent
+        `window` batches)."""
         return [b.ms / b.size for b in self._steady()]
 
     def steady_qps(self):
-        s = self._steady()
-        t = sum(b.ms for b in s)
-        return sum(b.size for b in s) / (t / 1e3) if t else 0.0
+        t = float(self._steady_ms.value)
+        return float(self._steady_queries.value) / (t / 1e3) if t else 0.0
 
     def latency_percentiles(self):
         """Steady-state (compile batches excluded) batch-latency summary."""
@@ -133,6 +207,18 @@ class ServeStats:
                 "p99_ms": round(float(np.percentile(lat, 99)), 3),
                 "mean_ms": round(float(lat.mean()), 3)}
 
+    def reset(self):
+        """Zero every counter and drop the batch window (the registry
+        metrics this instance registered are reset in place)."""
+        for c in (self._queries, self._batches, self._compile_batches,
+                  self._steady_queries, self._steady_ms,
+                  self._prefetch_enqueued, self._prefetch_errors,
+                  self._reloads, self._selector_reloads):
+            c.reset()
+        self._batch_ms_hist.reset()
+        self.batches.clear()
+        self._compiled_bucket_set.clear()
+
 
 class RetrievalEngine:
     """Unified serving layer over a ClusterStore backend."""
@@ -141,7 +227,8 @@ class RetrievalEngine:
 
     def __init__(self, cfg, index, store=None, *, max_batch=256,
                  cache_capacity=512, prefetch=True, prefetch_depth=None,
-                 k=None, reader=None, use_adc=None):
+                 k=None, reader=None, use_adc=None, metrics=None,
+                 tracer=None, trace_sample_rate=None):
         self.cfg = cfg
         self.index = index
         self.store = store if store is not None \
@@ -155,12 +242,21 @@ class RetrievalEngine:
         # True demands a code-backed store; False forces decode-then-score.
         self._explicit_use_adc = use_adc
         self.use_adc = self._resolve_use_adc(self.store)
-        self.adc_ms = 0.0           # fused ADC score+fuse+topk device time
-        self.lut_build_ms = 0.0     # per-batch ADC LUT builds
+        # observability (repro.obs): the registry backs stats()/ServeStats;
+        # the tracer emits per-batch stage spans when trace_sample_rate > 0
+        # (0 by default: the disabled path hands out a shared no-op trace).
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        if tracer is None:
+            tracer = Tracer(sample_rate=trace_sample_rate or 0.0)
+        elif trace_sample_rate is not None:
+            tracer.sample_rate = float(trace_sample_rate)
+        self.tracer = tracer
+        self._adc_ms = self.metrics.counter("serve.adc_ms")
+        self._lut_build_ms = self.metrics.counter("serve.lut_build_ms")
         self._prefetch_enabled = bool(prefetch)
         self._swap_lock = threading.RLock()   # serving vs reload_index
         self._pf_drop = False           # quiesce flag across index swaps
-        self.serve_stats = ServeStats()
+        self.serve_stats = ServeStats(self.metrics)
         self._cache_capacity = cache_capacity
         self.cache = self._make_cache(self.store) \
             if (self.is_host and cache_capacity) else None
@@ -176,6 +272,16 @@ class RetrievalEngine:
         self._pf_q = None
         self._pf_thread = None
         self._start_prefetch()
+
+    # cumulative fused-ADC / LUT-build device time (steady-state only);
+    # registry-backed so stats(), metrics exports, and reset_stats() agree
+    @property
+    def adc_ms(self):
+        return float(self._adc_ms.value)
+
+    @property
+    def lut_build_ms(self):
+        return float(self._lut_build_ms.value)
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -241,42 +347,72 @@ class RetrievalEngine:
         `reader` defaults to the one the engine was constructed with
         (`IndexReader.engine()` wires it). Returns the generation now
         being served. Safe to call from a control thread while another
-        thread serves: in-flight batches finish on the old generation."""
+        thread serves: in-flight batches finish on the old generation.
+
+        Stats semantics: every cumulative counter in stats() — I/O
+        ops/bytes, decode_ms, cache hit/miss/eviction/clear, adc/LUT
+        times — is ENGINE-lifetime. The swap carries the old store's
+        counters onto the new store, so a reload never zeroes history;
+        `reset_stats()` is the only reset."""
         reader = reader if reader is not None else self.reader
         if reader is None:
             raise ValueError("reload_index needs an IndexReader (construct "
                              "the engine via IndexReader.engine, or pass "
                              "reader=)")
-        reader.refresh(verify=verify)
-        cfg, index = reader.load_index()
-        store = reader.open_store(cluster_docs=index.cluster_docs)
-        # quiesce prefetch: drop queued candidate ids and wait out any
-        # fetch against the old store before the cache is cleared
-        restart = self._pf_thread is not None
-        self._pf_drop = True
-        if restart:
-            self._stop_prefetch()
-        with self._swap_lock:
-            self.cfg, self.index, self.store = cfg, index, store
-            self.reader = reader
-            self.use_adc = self._resolve_use_adc(store)
-            self._refresh_prefetch_depth(cfg)
-            self._fns.clear()           # bucket shapes/geometry changed
-            if self.cache is not None:
-                # block ids now name new-gen blocks, and the new geometry
-                # may change the byte budget (cap/dim moved): replace the
-                # cache but carry the lifetime counters — a swap IS a
-                # clear, stats() must not lose history across generations
-                old = self.cache
-                new = self._make_cache(store)
-                new.hits, new.misses = old.hits, old.misses
-                new.evictions, new.clears = old.evictions, old.clears + 1
-                self.cache = new
-            self.serve_stats.reloads += 1
-        self._pf_drop = False
-        if restart:
-            self._start_prefetch()
+        tr = self.tracer.trace("reload_index")
+        with tr.span("reload"):
+            reader.refresh(verify=verify)
+            cfg, index = reader.load_index()
+            store = reader.open_store(cluster_docs=index.cluster_docs)
+            # quiesce prefetch: drop queued candidate ids and wait out any
+            # fetch against the old store before the cache is cleared
+            restart = self._pf_thread is not None
+            self._pf_drop = True
+            if restart:
+                self._stop_prefetch()
+            with self._swap_lock:
+                old_store = self.store
+                self.cfg, self.index, self.store = cfg, index, store
+                self.reader = reader
+                self.use_adc = self._resolve_use_adc(store)
+                self._refresh_prefetch_depth(cfg)
+                self._fns.clear()           # bucket shapes/geometry changed
+                self._carry_store_counters(old_store, store)
+                if self.cache is not None:
+                    # block ids now name new-gen blocks, and the new
+                    # geometry may change the byte budget (cap/dim moved):
+                    # replace the cache but carry the lifetime counters —
+                    # a swap IS a clear, stats() must not lose history
+                    # across generations
+                    old = self.cache
+                    new = self._make_cache(store)
+                    new.hits, new.misses = old.hits, old.misses
+                    new.evictions, new.clears = old.evictions, old.clears + 1
+                    self.cache = new
+                self.serve_stats.record_reload()
+            self._pf_drop = False
+            if restart:
+                self._start_prefetch()
+        tr.finish(generation=reader.generation)
         return reader.generation
+
+    @staticmethod
+    def _carry_store_counters(old_store, new_store):
+        """Copy cumulative I/O + host-decode counters from the outgoing
+        store onto its replacement, keeping stats() engine-lifetime (the
+        cache carries its counters the same way). Before this,
+        `decode_ms` and IOStats silently reset on reload_index but
+        survived reload_selector — now both paths behave identically."""
+        if new_store is old_store:
+            return
+        old_io = getattr(old_store, "stats", None)
+        new_io = getattr(new_store, "stats", None)
+        if old_io is not None and new_io is not None \
+                and hasattr(old_io, "n_ops") and hasattr(new_io, "add"):
+            new_io.add(old_io.n_ops, old_io.bytes, old_io.wall_ms)
+        if hasattr(old_store, "decode_ms") and hasattr(new_store,
+                                                       "decode_ms"):
+            new_store.decode_ms += old_store.decode_ms
 
     def reload_selector(self, reader=None, *, verify="none"):
         """Hot-swap ONLY the Stage-II selector: adopt a newer committed
@@ -302,24 +438,28 @@ class RetrievalEngine:
                  reader.manifest.get("block_shards"))
         if before != after:
             return self.reload_index(reader, verify="none")
-        cfg = reader.config()
-        params = reader.lstm_params()
-        with self._swap_lock:
-            self.cfg = cfg
-            self.index.lstm_params = params
-            self.reader = reader
-            # the calibrated budget may exceed the old one: keep the
-            # prefetch window covering the selection
-            self._refresh_prefetch_depth(cfg)
-            # only selector-dependent compilations are stale: stage2
-            # closes over (params, theta, max_selected); the fused device
-            # path and the fused host tails close over the whole (re-read)
-            # config. Stage-I buckets, the LUT builder (codebooks only),
-            # and the block cache survive — the corpus didn't move.
-            for key in [k for k in self._fns
-                        if k[0] in ("stage2", "device", "adc", "dot")]:
-                del self._fns[key]
-            self.serve_stats.selector_reloads += 1
+        tr = self.tracer.trace("reload_selector")
+        with tr.span("reload"):
+            cfg = reader.config()
+            params = reader.lstm_params()
+            with self._swap_lock:
+                self.cfg = cfg
+                self.index.lstm_params = params
+                self.reader = reader
+                # the calibrated budget may exceed the old one: keep the
+                # prefetch window covering the selection
+                self._refresh_prefetch_depth(cfg)
+                # only selector-dependent compilations are stale: stage2
+                # closes over (params, theta, max_selected); the fused
+                # device path and the fused host tails close over the
+                # whole (re-read) config. Stage-I buckets, the LUT builder
+                # (codebooks only), and the block cache survive — the
+                # corpus didn't move.
+                for key in [k for k in self._fns
+                            if k[0] in ("stage2", "device", "adc", "dot")]:
+                    del self._fns[key]
+                self.serve_stats.record_selector_reload()
+        tr.finish(generation=reader.generation)
         return reader.generation
 
     def __enter__(self):
@@ -360,7 +500,7 @@ class RetrievalEngine:
                     self.cache.get_or_fetch_many(
                         cids[i:i + self._PF_CHUNK], fill, record=False)
             except Exception:       # prefetch is best-effort; never kill serving
-                self.serve_stats.prefetch_errors += 1
+                self.serve_stats.record_prefetch_error()
 
     def _enqueue_prefetch(self, cand):
         """cand: (B, n_candidates) host array, stage-1 ordered."""
@@ -373,7 +513,7 @@ class RetrievalEngine:
             return
         try:
             q.put_nowait(cids)
-            self.serve_stats.prefetch_enqueued += len(cids)
+            self.serve_stats.record_prefetch(len(cids))
         except queue.Full:
             pass
 
@@ -466,21 +606,29 @@ class RetrievalEngine:
             n = int(np.asarray(q_dense).shape[0])
             bucket = bucket_size(n, self.max_batch)
             self._built_fn = False
-            pad = bucket - n
-            qd = jnp.asarray(_pad_rows(q_dense, pad))
-            qt = jnp.asarray(_pad_rows(q_terms, pad))
-            qw = jnp.asarray(_pad_rows(q_weights, pad))
+            tr = self.tracer.trace("batch", size=n, bucket=bucket)
+            with tr.span("pad"):
+                pad = bucket - n
+                qd = jnp.asarray(_pad_rows(q_dense, pad))
+                qt = jnp.asarray(_pad_rows(q_terms, pad))
+                qw = jnp.asarray(_pad_rows(q_weights, pad))
+            # batch_ms starts AFTER input pad/transfer, matching the
+            # pre-obs measurement exactly (the `pad` span still shows it)
             t0 = time.perf_counter()
             if self.is_host:
-                ids, scores = self._serve_host(bucket, qd, qt, qw)
+                ids, scores = self._serve_host(bucket, qd, qt, qw, tr)
+                ids.block_until_ready()
             else:
-                ids, scores, _ = self._device_fn(bucket)(qd, qt, qw)
-            ids.block_until_ready()
+                with tr.span("device_pipeline"):
+                    ids, scores, _ = self._device_fn(bucket)(qd, qt, qw)
+                    ids.block_until_ready()
+            ms = (time.perf_counter() - t0) * 1e3
             # a batch "compiled" if ANY stage built a new jitted fn for it
             # (stage buckets, but also a first-seen unique-block bucket of
-            # the fused tail) — steady-state latency stats exclude those
-            self.serve_stats.record(n, bucket, self._built_fn,
-                                    (time.perf_counter() - t0) * 1e3)
+            # the fused tail) — steady-state latency stats exclude those,
+            # but traces flag them (`compiled`) instead of dropping them
+            tr.finish(compiled=self._built_fn, batch_ms=round(ms, 3))
+            self.serve_stats.record(n, bucket, self._built_fn, ms)
             return ids[:n], scores[:n]
 
     @staticmethod
@@ -490,61 +638,97 @@ class RetrievalEngine:
             b *= 2
         return b
 
-    def _serve_host(self, bucket, qd, qt, qw):
-        sid, ss, cand, feats = self._stage1_fn(bucket)(qd, qt, qw)
-        # overlap: start pulling candidate blocks while Stage II runs
-        self._enqueue_prefetch(np.asarray(cand))
+    def _serve_host(self, bucket, qd, qt, qw, tr=NOOP_TRACE):
+        with tr.span("stage1"):
+            sid, ss, cand, feats = self._stage1_fn(bucket)(qd, qt, qw)
+            cand_np = np.asarray(cand)      # device sync for Stage I
+            # overlap: start pulling candidate blocks while Stage II runs
+            # (the enqueue itself is host work, charged to this span)
+            self._enqueue_prefetch(cand_np)
         lut = None
         if self.use_adc:
             # the LUT depends only on the queries — build it while the
             # prefetcher is pulling candidate code blocks
-            t0 = time.perf_counter()
-            lut = self._lut_fn(bucket)(qd)
-            lut.block_until_ready()
-            if not self._built_fn:     # steady-state only (no compile skew)
-                self.lut_build_ms += (time.perf_counter() - t0) * 1e3
-        sel_ids, sel_mask = self._stage2_fn(bucket)(cand, feats)
-        uniq, pos = pipe_lib.dedup_selected(sel_ids, sel_mask)
-        if bool(np.asarray(sel_mask).any()):
-            fetch = pipe_lib.fetch_unique_code_blocks if self.use_adc \
-                else pipe_lib.fetch_unique_blocks
-            blocks = fetch(self.store, uniq, self.cache)
+            with tr.span("lut_build"):
+                t0 = time.perf_counter()
+                lut = self._lut_fn(bucket)(qd)
+                lut.block_until_ready()
+                if not self._built_fn:   # steady-state only (no compile skew)
+                    self._lut_build_ms.inc((time.perf_counter() - t0) * 1e3)
+        with tr.span("stage2_select"):
+            sel_ids, sel_mask = self._stage2_fn(bucket)(cand, feats)
+            sel_np = np.asarray(sel_ids)    # device sync for Stage II
+            mask_np = np.asarray(sel_mask)
+        with tr.span("fuse"):               # host glue: dedup + positions
+            uniq, pos = pipe_lib.dedup_selected(sel_np, mask_np)
+        if bool(mask_np.any()):
+            with tr.span("cache_fetch", n_blocks=len(uniq)) as sp:
+                fetch = pipe_lib.fetch_unique_code_blocks if self.use_adc \
+                    else pipe_lib.fetch_unique_blocks
+                blocks = fetch(self.store, uniq, self.cache, trace=tr)
+                sp.annotate(bytes=int(blocks.nbytes))
         else:       # nothing selected: zero placeholder, no I/O
             blocks = np.zeros(
                 (1, self.store.cap,
                  self.store.nsub if self.use_adc else self.store.dim),
                 np.uint8 if self.use_adc else np.float32)
-        # pad the unique-block axis to a power of two so fused-tail
-        # compilations stay bounded (pos only ever indexes real rows)
-        ub = self._pow2(blocks.shape[0])
-        if ub > blocks.shape[0]:
-            blocks = np.concatenate(
-                [blocks, np.zeros((ub - blocks.shape[0],) + blocks.shape[1:],
-                                  blocks.dtype)])
-        kind = "adc" if self.use_adc else "dot"
-        fn = self._fused_fn(kind, bucket, ub)
-        t0 = time.perf_counter()
-        ids, scores = fn(lut if self.use_adc else qd, sid, ss,
-                         sel_ids, sel_mask, jnp.asarray(blocks),
-                         jnp.asarray(pos))
-        if self.use_adc:
+        with tr.span("fused_score_topk"):
+            # pad the unique-block axis to a power of two so fused-tail
+            # compilations stay bounded (pos only ever indexes real rows)
+            ub = self._pow2(blocks.shape[0])
+            if ub > blocks.shape[0]:
+                blocks = np.concatenate(
+                    [blocks,
+                     np.zeros((ub - blocks.shape[0],) + blocks.shape[1:],
+                              blocks.dtype)])
+            kind = "adc" if self.use_adc else "dot"
+            fn = self._fused_fn(kind, bucket, ub)
+            t0 = time.perf_counter()
+            ids, scores = fn(lut if self.use_adc else qd, sid, ss,
+                             sel_ids, sel_mask, jnp.asarray(blocks),
+                             jnp.asarray(pos))
             ids.block_until_ready()
-            if not self._built_fn:     # steady-state only (no compile skew)
-                self.adc_ms += (time.perf_counter() - t0) * 1e3
+            if self.use_adc and not self._built_fn:
+                # steady-state only (no compile skew)
+                self._adc_ms.inc((time.perf_counter() - t0) * 1e3)
         return ids, scores
 
     # -- introspection ------------------------------------------------------
 
+    def _sync_gauges(self):
+        """Mirror cache/IOStats/store counters into registry gauges so a
+        metrics export (`--metrics-out`, Prometheus scrape) carries them
+        without callers having to join stats() themselves."""
+        reg = self.metrics
+        if self.cache is not None:
+            for k, v in self.cache.stats().items():
+                if isinstance(v, (int, float)) and v is not None:
+                    reg.gauge(f"cache.{k}").set(v)
+        io = getattr(self.store, "stats", None)
+        if io is not None and hasattr(io, "n_ops"):
+            reg.gauge("io.n_ops").set(io.n_ops)
+            reg.gauge("io.bytes").set(io.bytes)
+            reg.gauge("io.wall_ms").set(round(io.wall_ms, 2))
+            reg.gauge("io.model_ms").set(round(io.model_ms(), 2))
+        decode_ms = getattr(self.store, "decode_ms", None)
+        if decode_ms is not None:
+            reg.gauge("serve.decode_ms").set(round(decode_ms, 2))
+        if self.reader is not None:
+            reg.gauge("serve.generation").set(self.reader.generation)
+
     def stats(self):
-        out = {"n_queries": self.serve_stats.n_queries,
-               "n_batches": self.serve_stats.n_batches,
-               "compiled_buckets": self.serve_stats.compiled_buckets,
-               "qps_steady": round(self.serve_stats.steady_qps(), 1),
-               "prefetch_enqueued": self.serve_stats.prefetch_enqueued,
-               "prefetch_errors": self.serve_stats.prefetch_errors,
-               "reloads": self.serve_stats.reloads,
-               "selector_reloads": self.serve_stats.selector_reloads,
-               **self.serve_stats.latency_percentiles()}
+        self._sync_gauges()
+        ss = self.serve_stats
+        out = {"n_queries": ss.n_queries,
+               "n_batches": ss.n_batches,
+               "n_compile_batches": ss.n_compile_batches,
+               "compiled_buckets": ss.compiled_buckets,
+               "qps_steady": round(ss.steady_qps(), 1),
+               "prefetch_enqueued": ss.prefetch_enqueued,
+               "prefetch_errors": ss.prefetch_errors,
+               "reloads": ss.reloads,
+               "selector_reloads": ss.selector_reloads,
+               **ss.latency_percentiles()}
         if self.reader is not None:
             out["generation"] = self.reader.generation
         if self.cache is not None:
@@ -563,3 +747,28 @@ class RetrievalEngine:
                 out["adc_ms"] = round(self.adc_ms, 2)
                 out["lut_build_ms"] = round(self.lut_build_ms, 2)
         return out
+
+    def reset_stats(self):
+        """Zero every serving statistic, in place, without touching
+        compiled functions, the cached blocks themselves, or the tracer's
+        retained traces.
+
+        Semantics: stats() counters are ENGINE-lifetime — they survive
+        both `reload_index()` (I/O, decode, and cache counters are carried
+        onto the new store/cache) and `reload_selector()`, and reset ONLY
+        here. After reset: batch/latency windows, compile-batch history,
+        prefetch/reload counts, adc/LUT/decode times, cache
+        hit/miss/eviction/clear counts, and store IOStats all read zero;
+        the next stats() reflects serving from this instant."""
+        with self._swap_lock:
+            self.metrics.reset()
+            self.serve_stats.reset()
+            if self.cache is not None:
+                with self.cache._lock:
+                    self.cache.hits = self.cache.misses = 0
+                    self.cache.evictions = self.cache.clears = 0
+            io = getattr(self.store, "stats", None)
+            if io is not None and hasattr(io, "n_ops"):
+                io.n_ops, io.bytes, io.wall_ms = 0, 0, 0.0
+            if getattr(self.store, "decode_ms", None) is not None:
+                self.store.decode_ms = 0.0

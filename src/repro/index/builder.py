@@ -48,6 +48,7 @@ from repro.core import quant as quant_lib
 from repro.core import sparse as sparse_lib
 from repro.core.clusd import CluSDIndex
 from repro.index import format as fmt
+from repro.obs import NOOP_TRACE
 
 _ARRAY_DTYPES = {
     "centroids": np.float32,
@@ -120,24 +121,32 @@ def embedding_shards(embeddings, shard_docs):
 
 
 def build_index_offline(cfg, rng, embeddings, doc_terms, doc_weights, *,
-                        shard_docs=None, kmeans_iters=15):
+                        shard_docs=None, kmeans_iters=15, tracer=None):
     """Sharded/minibatch offline build. `embeddings`: (D, dim) host array or
     np.memmap — clustered shard-by-shard, never moved to device whole; peak
     resident embedding rows are bounded by `shard_docs`.
     Returns a CluSDIndex with `embeddings=None` (blocks live on disk after
-    `write_index`)."""
+    `write_index`). `tracer` (repro.obs.Tracer) records one `build_index`
+    trace with a span per phase."""
     D = int(embeddings.shape[0])
     shard_docs = shard_docs or min(D, 1 << 16)
+    tr = tracer.trace("build_index", n_docs=D) if tracer is not None \
+        else NOOP_TRACE
     shards = embedding_shards(embeddings, shard_docs)
-    centroids, assign = km.kmeans_shards(rng, shards, cfg.n_clusters,
-                                         iters=kmeans_iters)
-    cluster_docs, doc_cluster = km.build_cluster_table(
-        assign, cfg.n_clusters, cfg.cluster_cap, embeddings, centroids,
-        chunk_rows=shard_docs)
-    m = min(cfg.n_neighbors, cfg.n_clusters - 1)
-    nb_ids, nb_sims = km.neighbor_graph(centroids, m)
-    sp = sparse_lib.SparseIndex.build(doc_terms, doc_weights, cfg.vocab,
-                                      cfg.max_postings)
+    with tr.span("kmeans", n_shards=len(shards), iters=kmeans_iters):
+        centroids, assign = km.kmeans_shards(rng, shards, cfg.n_clusters,
+                                             iters=kmeans_iters)
+    with tr.span("cluster_table"):
+        cluster_docs, doc_cluster = km.build_cluster_table(
+            assign, cfg.n_clusters, cfg.cluster_cap, embeddings, centroids,
+            chunk_rows=shard_docs)
+    with tr.span("neighbor_graph"):
+        m = min(cfg.n_neighbors, cfg.n_clusters - 1)
+        nb_ids, nb_sims = km.neighbor_graph(centroids, m)
+    with tr.span("sparse_index"):
+        sp = sparse_lib.SparseIndex.build(doc_terms, doc_weights, cfg.vocab,
+                                          cfg.max_postings)
+    tr.finish()
     return CluSDIndex(
         centroids=centroids, cluster_docs=cluster_docs,
         doc_cluster=doc_cluster, neighbor_ids=nb_ids, neighbor_sims=nb_sims,
@@ -260,7 +269,7 @@ def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
                 block_dtype=np.float32, extra=None,
                 format_version=fmt.FORMAT_VERSION, pq=None, pq_nsub=8,
                 chunk_docs=DEFAULT_CHUNK_DOCS, generation=0,
-                parent_generation=None):
+                parent_generation=None, tracer=None):
     """Serialize `index` + packed cluster blocks under `out_dir` (atomic:
     staged in `<out_dir>.tmp`, committed by rename). Returns the manifest.
 
@@ -272,10 +281,16 @@ def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
     `generation`/`parent_generation` stamp the manifest for the incremental
     update protocol (repro.index.update): fresh builds are generation 0;
     `compact_index` rewrites the whole layout at `old generation + 1`.
+
+    `tracer` (repro.obs.Tracer) records one `write_index` trace with a
+    span per phase (arrays, pq, block_shards, lstm, commit) annotated
+    with bytes written.
     """
     if format_version not in fmt.SUPPORTED_VERSIONS:
         raise ValueError(f"format_version {format_version} not in "
                          f"{fmt.SUPPORTED_VERSIONS}")
+    tr = tracer.trace("write_index", generation=int(generation)) \
+        if tracer is not None else NOOP_TRACE
     t0 = time.perf_counter()
     block_dtype = fmt.resolve_block_dtype(block_dtype)
     cd = np.asarray(index.cluster_docs)
@@ -305,11 +320,12 @@ def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
             sparse_postings_docs=index.sparse_index.postings_docs,
             sparse_postings_weights=index.sparse_index.postings_weights)
     array_paths = {}
-    for name, arr in arrays.items():
-        rel = f"{name}.npy"
-        np.save(os.path.join(tmp, rel),
-                np.asarray(arr, _ARRAY_DTYPES[name]))
-        array_paths[name] = rel
+    with tr.span("arrays", n_arrays=len(arrays)):
+        for name, arr in arrays.items():
+            rel = f"{name}.npy"
+            np.save(os.path.join(tmp, rel),
+                    np.asarray(arr, _ARRAY_DTYPES[name]))
+            array_paths[name] = rel
 
     pq_meta = None
     geometry = {"n_docs": index.n_docs, "dim": dim,
@@ -318,49 +334,62 @@ def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
     ranges = shard_ranges(n_clusters, n_shards)
     block_shards = []
     if v2:
-        the_pq, codes = _index_pq(index, embeddings, pq, pq_nsub, chunk_docs)
-        geometry["nsub"] = int(the_pq.nsub)
-        geometry["code_dtype"] = "uint8"
-        pq_arrays = {"codebooks": the_pq.codebooks}
-        if the_pq.rotation is not None:
-            pq_arrays["rotation"] = the_pq.rotation
-        pq_meta = _write_pq_arrays(tmp, pq_arrays, the_pq.nsub,
-                                   dtype=np.float32)
-        for s, (lo, hi) in enumerate(ranges):
-            rel = os.path.join("blocks", f"shard_{s:05d}.codes.bin")
-            _write_code_blocks(os.path.join(tmp, rel), codes, cd[lo:hi])
-            block_shards.append({"file": rel, "cluster_lo": lo,
-                                 "cluster_hi": hi})
+        with tr.span("pq", nsub=int(pq_nsub)):
+            the_pq, codes = _index_pq(index, embeddings, pq, pq_nsub,
+                                      chunk_docs)
+            geometry["nsub"] = int(the_pq.nsub)
+            geometry["code_dtype"] = "uint8"
+            pq_arrays = {"codebooks": the_pq.codebooks}
+            if the_pq.rotation is not None:
+                pq_arrays["rotation"] = the_pq.rotation
+            pq_meta = _write_pq_arrays(tmp, pq_arrays, the_pq.nsub,
+                                       dtype=np.float32)
+        with tr.span("block_shards", n_shards=len(ranges)) as sp:
+            for s, (lo, hi) in enumerate(ranges):
+                rel = os.path.join("blocks", f"shard_{s:05d}.codes.bin")
+                _write_code_blocks(os.path.join(tmp, rel), codes, cd[lo:hi])
+                block_shards.append({"file": rel, "cluster_lo": lo,
+                                     "cluster_hi": hi})
+            sp.annotate(bytes=sum(
+                os.path.getsize(os.path.join(tmp, b["file"]))
+                for b in block_shards))
     else:
         scale = None
         if block_dtype == np.int8:
             scale = _block_scale(embeddings, chunk_docs)
             geometry["block_scale"] = scale
-        for s, (lo, hi) in enumerate(ranges):
-            rel = os.path.join("blocks", f"shard_{s:05d}.bin")
-            _write_float_blocks(os.path.join(tmp, rel), embeddings,
-                                cd[lo:hi], block_dtype, chunk_docs,
-                                scale=scale)
-            block_shards.append({"file": rel, "cluster_lo": lo,
-                                 "cluster_hi": hi})
+        with tr.span("block_shards", n_shards=len(ranges)) as sp:
+            for s, (lo, hi) in enumerate(ranges):
+                rel = os.path.join("blocks", f"shard_{s:05d}.bin")
+                _write_float_blocks(os.path.join(tmp, rel), embeddings,
+                                    cd[lo:hi], block_dtype, chunk_docs,
+                                    scale=scale)
+                block_shards.append({"file": rel, "cluster_lo": lo,
+                                     "cluster_hi": hi})
+            sp.annotate(bytes=sum(
+                os.path.getsize(os.path.join(tmp, b["file"]))
+                for b in block_shards))
         # v1 keeps the PR-2 layout byte-for-byte, including optional full
         # PQ artifacts (codebooks + per-doc codes) for device-side ADC
         if index.quantizer is not None:
-            q = index.quantizer
-            pq_arrays = {"codebooks": q.codebooks, "codes": q.codes}
-            if q.rotation is not None:
-                pq_arrays["rotation"] = q.rotation
-            pq_meta = _write_pq_arrays(tmp, pq_arrays, q.nsub)
+            with tr.span("pq"):
+                q = index.quantizer
+                pq_arrays = {"codebooks": q.codebooks, "codes": q.codes}
+                if q.rotation is not None:
+                    pq_arrays["rotation"] = q.rotation
+                pq_meta = _write_pq_arrays(tmp, pq_arrays, q.nsub)
 
     lstm_meta = None
     if index.lstm_params is not None:
-        params = {k: np.asarray(v) for k, v in index.lstm_params.items()}
-        lstm_meta = {"dir": "lstm", "step": 0, "selector": "lstm",
-                     "feat_dim": int(params["wx"].shape[0]),
-                     "hidden": int(params["wh"].shape[0])}
-        save_checkpoint(os.path.join(tmp, "lstm"), 0, params,
-                        extra={k: lstm_meta[k]
-                               for k in ("selector", "feat_dim", "hidden")})
+        with tr.span("lstm"):
+            params = {k: np.asarray(v) for k, v in index.lstm_params.items()}
+            lstm_meta = {"dir": "lstm", "step": 0, "selector": "lstm",
+                         "feat_dim": int(params["wx"].shape[0]),
+                         "hidden": int(params["wh"].shape[0])}
+            save_checkpoint(os.path.join(tmp, "lstm"), 0, params,
+                            extra={k: lstm_meta[k]
+                                   for k in ("selector", "feat_dim",
+                                             "hidden")})
 
     files = fmt.scan_files(tmp)
     manifest = {
@@ -385,14 +414,16 @@ def write_index(out_dir, cfg, index, embeddings, *, n_shards=4,
         "files": files,
         "total_bytes": sum(e["bytes"] for e in files.values()),
     }
-    fmt.write_manifest(tmp, manifest)
-    # commit: move any previous index aside first, so a crash in the window
-    # never leaves out_dir without a readable index
-    old = out_dir + ".old"
-    if os.path.exists(old):
-        shutil.rmtree(old)
-    if os.path.exists(out_dir):
-        os.rename(out_dir, old)
-    os.rename(tmp, out_dir)
-    shutil.rmtree(old, ignore_errors=True)
+    with tr.span("commit"):
+        fmt.write_manifest(tmp, manifest)
+        # commit: move any previous index aside first, so a crash in the
+        # window never leaves out_dir without a readable index
+        old = out_dir + ".old"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        if os.path.exists(out_dir):
+            os.rename(out_dir, old)
+        os.rename(tmp, out_dir)
+        shutil.rmtree(old, ignore_errors=True)
+    tr.finish(total_bytes=int(manifest["total_bytes"]))
     return manifest

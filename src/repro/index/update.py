@@ -72,6 +72,7 @@ from repro.core.sparse import SparseIndex
 from repro.index import builder as builder_lib
 from repro.index import format as fmt
 from repro.index.reader import IndexReader
+from repro.obs import NOOP_TRACE
 
 
 @dataclasses.dataclass
@@ -501,14 +502,19 @@ def _load_padded_postings(reader: IndexReader, max_postings):
 
 def write_index_delta(index_dir, delta: IndexDelta, *, verify="size",
                       recluster_overflow=0.5, recluster_min_overflow=4,
-                      lloyd_iters=4):
+                      lloyd_iters=4, tracer=None):
     """Apply `delta` to the index at `index_dir` as a new atomic
     generation. Only shards whose cluster membership changed are
     rewritten; deletes become tombstones; the previous generation's files
     and manifest remain readable. Returns a report dict (generation,
-    shards/bytes rewritten, ...).
+    shards/bytes rewritten, ...). `tracer` (repro.obs.Tracer) records one
+    `write_index_delta` trace with a span per phase, bytes annotated.
     """
+    tr = tracer.trace("write_index_delta", n_upserts=delta.n_upserts,
+                      n_deletes=len(delta.delete_ids)) \
+        if tracer is not None else NOOP_TRACE
     t0 = time.perf_counter()
+    sp_load = tr.span("load_state")
     manifest = fmt.load_manifest(index_dir)
     fmt.verify_files(index_dir, manifest, level=verify)
     fv = manifest["format_version"]
@@ -559,6 +565,7 @@ def write_index_delta(index_dir, delta: IndexDelta, *, verify="size",
             if delta.n_upserts else np.zeros((0, int(geom["nsub"])), np.uint8)
         delta_codes = {int(d): delta_codes_arr[i]
                        for i, d in enumerate(delta.upsert_ids)}
+    sp_load.end()
 
     def get_vec(ids):
         """Policy vectors: what the index stores (exact floats for v1,
@@ -580,11 +587,12 @@ def write_index_delta(index_dir, delta: IndexDelta, *, verify="size",
                 out[i] = records.cluster_record(c)[slot]
         return out
 
-    report = _apply_delta_state(
-        state, delta, get_vec, ranges,
-        recluster_overflow=recluster_overflow,
-        recluster_min_overflow=recluster_min_overflow,
-        lloyd_iters=lloyd_iters)
+    with tr.span("apply_delta"):
+        report = _apply_delta_state(
+            state, delta, get_vec, ranges,
+            recluster_overflow=recluster_overflow,
+            recluster_min_overflow=recluster_min_overflow,
+            lloyd_iters=lloyd_iters)
 
     # -- new stored layout -------------------------------------------------
     shard_of = np.zeros(cd_old.shape[0], np.int64)
@@ -619,6 +627,7 @@ def write_index_delta(index_dir, delta: IndexDelta, *, verify="size",
     D_new = state.n_docs
     block_shards = [dict(s) for s in manifest["block_shards"]]
     bytes_rewritten = 0
+    sp_stage = tr.span("stage_blocks", n_shards=len(rewrite_shards))
     for s in rewrite_shards:
         lo, hi = ranges[s]
         if v2:
@@ -637,7 +646,9 @@ def write_index_delta(index_dir, delta: IndexDelta, *, verify="size",
         block_shards[s]["file"] = rel
         bytes_rewritten += os.path.getsize(os.path.join(stage, rel))
         staged.append(rel)
+    sp_stage.annotate(bytes_rewritten=int(bytes_rewritten)).end()
 
+    sp_arrays = tr.span("stage_arrays")
     arrays = dict(manifest["arrays"])
     new_arrays = {
         "cluster_docs": cd_new,
@@ -664,6 +675,7 @@ def write_index_delta(index_dir, delta: IndexDelta, *, verify="size",
                 np.asarray(arr, builder_lib._ARRAY_DTYPES[name]))
         arrays[name] = rel
         staged.append(rel)
+    sp_arrays.end()
 
     # -- manifest for generation G ----------------------------------------
     new_manifest = copy.deepcopy(manifest)
@@ -712,7 +724,10 @@ def write_index_delta(index_dir, delta: IndexDelta, *, verify="size",
     }
 
     # -- commit: move staged files into place, archive, flip manifest ------
-    fmt.commit_generation(index_dir, stage, staged, manifest, new_manifest)
+    with tr.span("commit"):
+        fmt.commit_generation(index_dir, stage, staged, manifest,
+                              new_manifest)
+    tr.finish(generation=G, bytes_rewritten=int(bytes_rewritten))
 
     return {
         "generation": G,
@@ -799,7 +814,7 @@ def _commit_compacted_in_place(index_dir, tmp_dir, manifest):
     return manifest
 
 
-def compact_index(index_dir, out_dir=None, *, chunk_docs=None):
+def compact_index(index_dir, out_dir=None, *, chunk_docs=None, tracer=None):
     """Rewrite the index's current logical state as a fresh layout:
     tombstones applied, member lists left-compacted, all shards repacked,
     manifest history dropped. In place by default — the compacted
@@ -811,7 +826,13 @@ def compact_index(index_dir, out_dir=None, *, chunk_docs=None):
     to `write_index` called on the equivalent in-memory state — an
     incrementally updated index compacts to exactly what a from-scratch
     serialization of that state produces.
+
+    `tracer` (repro.obs.Tracer) records one `compact_index` trace
+    (load_state / rewrite / commit spans); the rewrite's per-phase byte
+    detail lands in a sibling `write_index` trace on the same tracer.
     """
+    tr = tracer.trace("compact_index") if tracer is not None else NOOP_TRACE
+    sp_load = tr.span("load_state")
     manifest = fmt.load_manifest(index_dir)
     reader = IndexReader(index_dir, manifest)
     geom = reader.geometry
@@ -854,17 +875,23 @@ def compact_index(index_dir, out_dir=None, *, chunk_docs=None):
         quantizer=quantizer,
         bin_ids=jnp.asarray(reader.array("bin_ids")))
     g = reader.generation
+    sp_load.end()
     in_place = out_dir is None or \
         os.path.abspath(out_dir) == os.path.abspath(index_dir)
     target = index_dir + f".compact-g{g + 1}" if in_place else out_dir
-    new_manifest = builder_lib.write_index(
-        target, cfg, index, embeddings,
-        n_shards=len(manifest["block_shards"]),
-        block_dtype=np.dtype(geom["block_dtype"]),
-        format_version=fv, pq=quantizer,
-        chunk_docs=chunk_docs or builder_lib.DEFAULT_CHUNK_DOCS,
-        extra=manifest.get("extra"), generation=g + 1, parent_generation=g)
+    with tr.span("rewrite"):
+        new_manifest = builder_lib.write_index(
+            target, cfg, index, embeddings,
+            n_shards=len(manifest["block_shards"]),
+            block_dtype=np.dtype(geom["block_dtype"]),
+            format_version=fv, pq=quantizer,
+            chunk_docs=chunk_docs or builder_lib.DEFAULT_CHUNK_DOCS,
+            extra=manifest.get("extra"), generation=g + 1,
+            parent_generation=g, tracer=tracer)
     if in_place:
-        new_manifest = _commit_compacted_in_place(index_dir, target,
-                                                  new_manifest)
+        with tr.span("commit"):
+            new_manifest = _commit_compacted_in_place(index_dir, target,
+                                                      new_manifest)
+    tr.finish(generation=g + 1,
+              bytes_rewritten=int(new_manifest["total_bytes"]))
     return new_manifest

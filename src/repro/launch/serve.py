@@ -27,11 +27,18 @@ exits non-zero on mismatch: exact top-k ids for v1 indexes; for v2 (PQ)
 indexes — approximate by construction — parity is an MRR@10 delta bound,
 tunable with --parity-mrr-tol (default 0.02).
 
+--trace-out exports per-batch stage-span traces (stage1 -> stage2_select
+-> cache/disk fetch -> fused_score_topk; `.jsonl` span lines or Chrome
+trace JSON for Perfetto), sampled at --trace-sample-rate; --metrics-out
+dumps the engine metrics registry (JSON or Prometheus text by suffix).
+Catalog: docs/OBSERVABILITY.md.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --docs 20000 --queries 256 \
       [--ondisk] [--cache-blocks 512] [--no-prefetch]
   PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/idx \
-      --queries 64 [--verify full] [--check-parity [--parity-mrr-tol T]]
+      --queries 64 [--verify full] [--check-parity [--parity-mrr-tol T]] \
+      [--trace-out trace.jsonl] [--metrics-out metrics.json]
 """
 
 import argparse
@@ -51,6 +58,20 @@ from repro.data import mrr_at, recall_at, synth_corpus, synth_queries
 from repro.engine import DiskStore, RetrievalEngine
 
 
+def _write_obs(args, engine):
+    """Export --metrics-out / --trace-out from a served engine."""
+    from repro.obs import write_metrics, write_trace
+    if args.metrics_out:
+        engine.stats()          # folds cache/io/decode counters into gauges
+        write_metrics(engine.metrics, args.metrics_out)
+        print(f"metrics -> {args.metrics_out}")
+    if args.trace_out:
+        write_trace(engine.tracer, args.trace_out)
+        print(f"trace -> {args.trace_out} "
+              f"({engine.tracer.started} trace(s) at "
+              f"sample rate {engine.tracer.sample_rate})")
+
+
 def serve_from_index(args):
     """Serve a persistent index built by repro.launch.build_index."""
     from repro import index as index_lib
@@ -68,9 +89,11 @@ def serve_from_index(args):
                           meta["vocab"])
     test_q = synth_queries(9, corpus, args.queries)
 
+    trace_rate = args.trace_sample_rate if args.trace_out else None
     with reader.engine(cfg=cfg, index=index, max_batch=args.batch,
                        cache_capacity=args.cache_blocks,
-                       prefetch=not args.no_prefetch) as engine:
+                       prefetch=not args.no_prefetch,
+                       trace_sample_rate=trace_rate) as engine:
         t1 = time.perf_counter()
         first_ids, _ = engine.retrieve(
             test_q.q_dense[:args.batch], test_q.q_terms[:args.batch],
@@ -96,6 +119,7 @@ def serve_from_index(args):
           f"{io.get('n_ops', 0)} I/O ops, "
           f"{io.get('bytes', 0) / 2**20:.1f} MiB read, "
           f"cache hit rate {cache.get('hit_rate', 0.0):.2f}")
+    _write_obs(args, engine)
 
     if args.check_parity:
         if reader.generation > 0:
@@ -162,6 +186,16 @@ def main():
                          "for v1; MRR@10 tolerance for PQ/v2 indexes)")
     ap.add_argument("--parity-mrr-tol", type=float, default=0.02,
                     help="allowed MRR@10 delta for PQ-index parity")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export per-batch stage-span traces after serving "
+                         "(.jsonl = one span per line, anything else = "
+                         "Chrome trace JSON; see docs/OBSERVABILITY.md)")
+    ap.add_argument("--trace-sample-rate", type=float, default=1.0,
+                    help="fraction of batches traced when --trace-out is "
+                         "set (deterministic: 0.25 = every 4th batch)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the engine metrics registry after serving "
+                         "(.prom/.txt = Prometheus text, else JSON)")
     args = ap.parse_args()
 
     if args.index_dir:
@@ -186,7 +220,9 @@ def main():
     print(f"LSTM trained: loss {hist[0]:.4f} -> {hist[-1]:.4f}", flush=True)
 
     test_q = synth_queries(9, corpus, args.queries)
-    engine = RetrievalEngine(cfg, index, max_batch=args.batch)
+    engine = RetrievalEngine(
+        cfg, index, max_batch=args.batch,
+        trace_sample_rate=args.trace_sample_rate if args.trace_out else None)
     all_ids = []
     for i in range(0, args.queries, args.batch):
         ids, _ = engine.retrieve(test_q.q_dense[i:i + args.batch],
@@ -205,6 +241,7 @@ def main():
         print(f"serve latency/query: mean={lat.mean():.2f}ms "
               f"p99={np.percentile(lat, 99):.2f}ms "
               f"(buckets compiled: {st['compiled_buckets']})")
+    _write_obs(args, engine)
 
     if args.ondisk:
         tmp = tempfile.mkdtemp()

@@ -80,15 +80,17 @@ def _corpus_queries(reader, args):
     return corpus, train_q, hold_q
 
 
-def _labels(reader, cfg, index, store, qs, label_cfg, cache, tag):
+def _labels(reader, cfg, index, store, qs, label_cfg, cache, tag,
+            metrics=None):
     key = train_lib.label_cache_key(
         reader.manifest, cfg, label_cfg,
         train_lib.query_fingerprint(qs.q_dense, qs.q_terms, qs.q_weights))
     ls, hit = cache.get_or_build(
         key, lambda: train_lib.make_labels_streaming(
             cfg, index, store, qs.q_dense, qs.q_terms, qs.q_weights,
-            label_cfg=label_cfg),
-        extra={"tag": tag, "generation": reader.generation})
+            label_cfg=label_cfg, metrics=metrics),
+        extra={"tag": tag, "generation": reader.generation},
+        metrics=metrics)
     src = "cache hit" if hit else (
         f"streamed {ls.stats.blocks_read} blocks / "
         f"{ls.stats.bytes_read / 2**20:.1f} MiB in "
@@ -167,12 +169,35 @@ def main(argv=None):
     ap.add_argument("--verify", default="size",
                     choices=("none", "size", "full"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export one train_selector trace with labels / "
+                         "train / calibrate / publish phase spans (.jsonl "
+                         "span lines or Chrome trace JSON)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump labels.* / train.* (and serve-check) "
+                         "metrics (.prom/.txt = Prometheus text, else "
+                         "JSON)")
     args = ap.parse_args(argv)
     if isinstance(args.thetas, str):        # default not routed through type=
         args.thetas = _floats(args.thetas)
     if args.target_recall is not None and args.target_budget is not None:
         ap.error("--target-recall and --target-budget are mutually "
                  "exclusive calibration targets")
+
+    from repro.obs import (NOOP_TRACE, MetricsRegistry, Tracer,
+                           write_metrics, write_trace)
+    tracer = Tracer(sample_rate=1.0) if args.trace_out else None
+    metrics = MetricsRegistry() if args.metrics_out else None
+    tr = tracer.trace("train_selector") if tracer is not None else NOOP_TRACE
+
+    def _finish_obs():
+        tr.finish()
+        if metrics is not None:
+            write_metrics(metrics, args.metrics_out)
+            print(f"metrics -> {args.metrics_out}")
+        if tracer is not None:
+            write_trace(tracer, args.trace_out)
+            print(f"trace -> {args.trace_out}")
 
     t0 = time.perf_counter()
     reader = index_lib.IndexReader.open(args.index_dir, verify=args.verify)
@@ -191,10 +216,12 @@ def main(argv=None):
                                       chunk_clusters=args.chunk_clusters)
     cache = train_lib.LabelCache(args.label_cache
                                  or args.index_dir.rstrip("/") + ".labels")
-    train_ls = _labels(reader, cfg, index, store, train_q, label_cfg, cache,
-                       "train")
-    hold_ls = _labels(reader, cfg, index, store, hold_q, label_cfg, cache,
-                      "holdout")
+    with tr.span("labels", n_train=args.train_queries,
+                 n_holdout=args.holdout_queries):
+        train_ls = _labels(reader, cfg, index, store, train_q, label_cfg,
+                           cache, "train", metrics=metrics)
+        hold_ls = _labels(reader, cfg, index, store, hold_q, label_cfg,
+                          cache, "holdout", metrics=metrics)
 
     # -- 2. train ----------------------------------------------------------
     tcfg = train_lib.SelectorTrainConfig(
@@ -206,11 +233,14 @@ def main(argv=None):
         ckpt_every_steps=args.ckpt_every)
     trainer = train_lib.SelectorTrainer(cfg, tcfg)
     t1 = time.perf_counter()
-    params, hist = trainer.fit(jax.random.key(args.seed + 2),
-                               train_ls.feats, train_ls.labels,
-                               resume=args.resume,
-                               log_every=max(1, (args.epochs or cfg.epochs)
-                                             // 5))
+    with tr.span("train"):
+        params, hist = trainer.fit(jax.random.key(args.seed + 2),
+                                   train_ls.feats, train_ls.labels,
+                                   resume=args.resume,
+                                   log_every=max(1,
+                                                 (args.epochs or cfg.epochs)
+                                                 // 5),
+                                   metrics=metrics)
     train_wall = time.perf_counter() - t1
     loss_str = (f"loss {hist[0]:.4f} -> {hist[-1]:.4f}" if hist
                 else "no steps left (resumed a finished run)")
@@ -224,24 +254,27 @@ def main(argv=None):
     # calibrate against SERVING numerics: the engine's stage2_select runs
     # the reference LSTM path, so the swept probabilities must too (the
     # kernel forward may differ in low-order bits near a threshold)
-    probs = train_lib.selector_probs(params, hold_ls.feats,
-                                     use_kernel=False)
-    table = train_lib.calibration_table(
-        hold_ls, probs, np.asarray(index.doc_cluster),
-        thetas=sorted(set(args.thetas + [cfg.theta])), budgets=budgets,
-        block_bytes=int(getattr(store, "block_bytes", 0)))
-    target_recall = args.target_recall
-    if target_recall is None and args.target_budget is None:
-        target_recall = 0.9
-    op = train_lib.choose_operating_point(
-        table, target_recall=target_recall,
-        target_budget=args.target_budget)
+    with tr.span("calibrate", n_thetas=len(set(args.thetas + [cfg.theta])),
+                 n_budgets=len(budgets)):
+        probs = train_lib.selector_probs(params, hold_ls.feats,
+                                         use_kernel=False)
+        table = train_lib.calibration_table(
+            hold_ls, probs, np.asarray(index.doc_cluster),
+            thetas=sorted(set(args.thetas + [cfg.theta])), budgets=budgets,
+            block_bytes=int(getattr(store, "block_bytes", 0)))
+        target_recall = args.target_recall
+        if target_recall is None and args.target_budget is None:
+            target_recall = 0.9
+        op = train_lib.choose_operating_point(
+            table, target_recall=target_recall,
+            target_budget=args.target_budget)
     print(f"calibrated: theta={op['theta']} budget={op['budget']} -> "
           f"recall@{args.top_dense}={op['recall']:.4f} "
           f"avg_selected={op['avg_selected']} "
           f"(target_met={op['target_met']})", flush=True)
 
     if not args.publish:
+        _finish_obs()
         print(json.dumps({"operating_point": op,
                           "wall_s": round(time.perf_counter() - t0, 1)}))
         return 0
@@ -250,19 +283,21 @@ def main(argv=None):
     n_check = min(args.serve_check, args.holdout_queries)
     engine = None
     if n_check:
-        engine = reader.engine(max_batch=max(8, n_check))
+        engine = reader.engine(max_batch=max(8, n_check), metrics=metrics,
+                               tracer=tracer)
         _serve_ids(engine, hold_q, n_check, engine.max_batch)  # pre-commit
 
-    report = train_lib.publish_selector(
-        args.index_dir, params, theta=op["theta"], budget=op["budget"],
-        calibration=table, label_config=dataclasses.asdict(label_cfg),
-        train_meta={"n_train_queries": train_ls.n_queries,
-                    "n_holdout_queries": hold_ls.n_queries,
-                    "epochs": args.epochs or cfg.epochs,
-                    "pos_weight": trainer.pos_weight,
-                    "final_loss": round(hist[-1], 6) if hist else None,
-                    "train_wall_s": round(train_wall, 3)},
-        verify=args.verify)
+    with tr.span("publish"):
+        report = train_lib.publish_selector(
+            args.index_dir, params, theta=op["theta"], budget=op["budget"],
+            calibration=table, label_config=dataclasses.asdict(label_cfg),
+            train_meta={"n_train_queries": train_ls.n_queries,
+                        "n_holdout_queries": hold_ls.n_queries,
+                        "epochs": args.epochs or cfg.epochs,
+                        "pos_weight": trainer.pos_weight,
+                        "final_loss": round(hist[-1], 6) if hist else None,
+                        "train_wall_s": round(train_wall, 3)},
+            verify=args.verify)
     print(f"published generation {report['generation']} "
           f"(+{report['bytes_added']} bytes, {report['wall_s']}s)",
           flush=True)
@@ -281,10 +316,12 @@ def main(argv=None):
             print(f"PARITY FAIL: {bad}/{n_check} queries differ between "
                   f"the hot-reloaded engine and a fresh engine on "
                   f"generation {gen}")
+            _finish_obs()
             return 1
         print(f"serve check OK: {n_check} queries, hot reload_selector == "
               f"fresh engine on generation {gen} "
               f"(selector_reloads={engine.stats()['selector_reloads']})")
+    _finish_obs()
     print(json.dumps({"operating_point": op, "publish": report,
                       "wall_s": round(time.perf_counter() - t0, 1)}))
     return 0

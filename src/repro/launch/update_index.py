@@ -219,7 +219,18 @@ def main(argv=None):
                     help="...and at least this many overflowed")
     ap.add_argument("--lloyd-iters", type=int, default=4,
                     help="local Lloyd's iterations for shard re-clustering")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export per-phase spans of the delta commit / "
+                         "compaction (and any serve batches) after the run "
+                         "(.jsonl span lines or Chrome trace JSON)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the serving engine's metrics registry "
+                         "(.prom/.txt = Prometheus text, else JSON)")
     args = ap.parse_args(argv)
+
+    from repro.obs import MetricsRegistry, Tracer, write_metrics, write_trace
+    tracer = Tracer(sample_rate=1.0) if args.trace_out else None
+    metrics = MetricsRegistry() if args.metrics_out else None
 
     reader = index_lib.IndexReader.open(args.index_dir, verify=args.verify)
     print(f"index: {reader.index_dir} (format v{reader.format_version}, "
@@ -230,7 +241,8 @@ def main(argv=None):
     engine, qs, pre_ids = None, None, None
     if args.serve_queries > 0:
         qs = _synthetic_queries(reader, args.serve_queries)
-        engine = reader.engine(max_batch=args.batch)
+        engine = reader.engine(max_batch=args.batch, metrics=metrics,
+                               tracer=tracer)
         pre_ids = _serve(engine, qs, args.serve_queries, args.batch)
         print(f"served {args.serve_queries} queries on generation "
               f"{reader.generation}")
@@ -244,7 +256,7 @@ def main(argv=None):
             args.index_dir, delta, verify="none",
             recluster_overflow=args.recluster_overflow,
             recluster_min_overflow=args.recluster_min_overflow,
-            lloyd_iters=args.lloyd_iters)
+            lloyd_iters=args.lloyd_iters, tracer=tracer)
         print(f"committed generation {report['generation']}: "
               f"{report['n_upserts']} upserts "
               f"({report['n_replaced']} replace, "
@@ -295,10 +307,17 @@ def main(argv=None):
 
     if args.compact:
         t0 = time.perf_counter()
-        manifest = update_lib.compact_index(args.index_dir)
+        manifest = update_lib.compact_index(args.index_dir, tracer=tracer)
         print(f"compacted -> generation {manifest['generation']} "
               f"({manifest['total_bytes'] / 2**20:.1f} MiB, "
               f"{time.perf_counter() - t0:.2f}s)")
+
+    if metrics is not None:
+        write_metrics(metrics, args.metrics_out)
+        print(f"metrics -> {args.metrics_out}")
+    if tracer is not None:
+        write_trace(tracer, args.trace_out)
+        print(f"trace -> {args.trace_out} ({tracer.started} trace(s))")
     return rc
 
 

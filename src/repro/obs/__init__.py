@@ -1,0 +1,28 @@
+"""repro.obs: the repo's single observability surface.
+
+Two small, dependency-free primitives that every hot path (serve, index
+build/update, selector training) reports through:
+
+  * MetricsRegistry (obs/registry.py) — named counters, gauges, and
+    fixed-bucket latency histograms. Thread-safe, bounded memory,
+    snapshot-able to a plain dict and to Prometheus text exposition.
+  * Tracer (obs/trace.py) — per-request/per-batch stage-span traces
+    (nested spans with wall-clock + byte/op annotations), a
+    `sample_rate` knob, and JSONL / Chrome-trace exporters.
+
+The catalog of every metric and span the repo emits lives in
+docs/OBSERVABILITY.md. Neither primitive imports jax or anything under
+repro.engine/index/train, so any layer can depend on obs without cycles.
+"""
+
+from repro.obs.registry import (  # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry, write_metrics,
+)
+from repro.obs.trace import (  # noqa: F401
+    NOOP_SPAN, NOOP_TRACE, Span, Trace, Tracer, write_trace,
+)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "write_metrics",
+    "NOOP_SPAN", "NOOP_TRACE", "Span", "Trace", "Tracer", "write_trace",
+]

@@ -196,10 +196,12 @@ def streaming_full_dense_topk(store, q_dense, k, *, chunk_clusters=64,
 
 
 def make_labels_streaming(cfg, index, store, q_dense, q_terms, q_weights, *,
-                          label_cfg: LabelConfig = LabelConfig()):
+                          label_cfg: LabelConfig = LabelConfig(),
+                          metrics=None):
     """Index-backed `make_labels`: identical `(cand, feats, labels)` with
     the full-dense pass streamed through `store` (bounded reads, no
-    materialized embedding matrix). Returns a LabelSet."""
+    materialized embedding matrix). Returns a LabelSet. `metrics`
+    (repro.obs.MetricsRegistry) gets the pass recorded under `labels.*`."""
     stats = LabelGenStats()
     t0 = time.perf_counter()
     cand, feats, _, _ = _stage1(cfg, index, q_dense, q_terms, q_weights,
@@ -210,9 +212,31 @@ def make_labels_streaming(cfg, index, store, q_dense, q_terms, q_weights, *,
         use_kernel=label_cfg.use_kernel, stats=stats)
     labels = _labels_from_dense(index, cand, jnp.asarray(dense_ids))
     stats.wall_s = time.perf_counter() - t0
-    return LabelSet(cand=np.asarray(cand), feats=np.asarray(feats),
-                    labels=np.asarray(labels), dense_ids=dense_ids,
-                    stats=stats)
+    ls = LabelSet(cand=np.asarray(cand), feats=np.asarray(feats),
+                  labels=np.asarray(labels), dense_ids=dense_ids,
+                  stats=stats)
+    if metrics is not None:
+        record_label_metrics(metrics, ls)
+    return ls
+
+
+def record_label_metrics(registry, ls: LabelSet):
+    """Fold one label pass into `labels.*` metrics: fetch/byte counters
+    (cumulative across passes) and a queries-per-second gauge for the
+    most recent pass."""
+    st = ls.stats
+    if st is None:
+        return
+    registry.counter("labels.passes").inc()
+    registry.counter("labels.queries").inc(ls.n_queries)
+    registry.counter("labels.n_fetches").inc(st.n_fetches)
+    registry.counter("labels.blocks_read").inc(st.blocks_read)
+    registry.counter("labels.bytes_read").inc(st.bytes_read)
+    registry.counter("labels.stream_ms").inc(round(st.stream_wall_s * 1e3, 3))
+    registry.counter("labels.wall_ms").inc(round(st.wall_s * 1e3, 3))
+    if st.wall_s > 0:
+        registry.gauge("labels.queries_per_s").set(
+            round(ls.n_queries / st.wall_s, 2))
 
 
 # ---------------------------------------------------------------------------
@@ -297,11 +321,16 @@ class LabelCache:
         os.replace(tmp, meta)
         return npz
 
-    def get_or_build(self, key, build_fn, extra=None):
-        """Returns (LabelSet, cache_hit)."""
+    def get_or_build(self, key, build_fn, extra=None, metrics=None):
+        """Returns (LabelSet, cache_hit). `metrics` counts the outcome
+        under `labels.cache_hits` / `labels.cache_misses`."""
         ls = self.load(key)
         if ls is not None:
+            if metrics is not None:
+                metrics.counter("labels.cache_hits").inc()
             return ls, True
         ls = build_fn()
         self.save(key, ls, extra=extra)
+        if metrics is not None:
+            metrics.counter("labels.cache_misses").inc()
         return ls, False

@@ -24,6 +24,7 @@ train N steps == train k steps, resume, train N-k (property-tested).
 """
 
 import dataclasses
+import time
 from typing import Optional, Union
 
 import jax
@@ -34,6 +35,7 @@ from repro.checkpoint import CheckpointManager
 from repro.core.lstm import SELECTORS
 from repro.kernels.lstm import ops as lstm_ops
 from repro.kernels.lstm.ref import lstm_sequence_ref
+from repro.obs import MetricsRegistry
 from repro.optim import adamw_init, adamw_update
 from repro.train import data as data_lib
 
@@ -221,13 +223,23 @@ class SelectorTrainer:
         init_fn, _ = SELECTORS[self.tcfg.selector]
         return init_fn(rng, feat_dim, self.cfg.lstm_hidden)
 
-    def fit(self, rng, feats, labels, *, resume=False, log_every=0):
+    def fit(self, rng, feats, labels, *, resume=False, log_every=0,
+            metrics=None):
         """Train; returns (params, history). With tcfg.ckpt_dir set,
         checkpoints land every ckpt_every_steps steps (and at the end);
         resume=True restores the latest checkpoint and replays the
-        deterministic batch schedule from right after it."""
+        deterministic batch schedule from right after it.
+
+        `metrics` (repro.obs.MetricsRegistry) receives `train.steps` /
+        `train.epochs` counters, a `train.step_ms` histogram, and
+        `train.steps_per_s` / `train.last_loss` gauges."""
         feats = np.asarray(feats, np.float32)
         labels = np.asarray(labels, np.float32)
+        reg = metrics if metrics is not None else MetricsRegistry()
+        c_steps = reg.counter("train.steps")
+        c_epochs = reg.counter("train.epochs")
+        h_step = reg.histogram("train.step_ms")
+        t_fit = time.perf_counter()
         tc = self.tcfg
         epochs = tc.epochs or self.cfg.epochs
         self.pos_weight = resolve_pos_weight(self.cfg, labels, tc.pos_weight)
@@ -264,7 +276,16 @@ class SelectorTrainer:
                                 "selector": tc.selector,
                                 "pos_weight": self.pos_weight})
 
+        def finalize():
+            wall = time.perf_counter() - t_fit
+            done = global_step - start_step
+            reg.gauge("train.steps_per_s").set(
+                round(done / wall, 2) if wall > 0 else 0.0)
+            if history:
+                reg.gauge("train.last_loss").set(round(history[-1], 6))
+
         history = []
+        start_step = global_step
         for e in range(start_epoch, epochs):
             losses = []
             for batch in data_lib.bucketed_batches(
@@ -273,12 +294,15 @@ class SelectorTrainer:
                 if e == start_epoch and batch.index < start_batch:
                     continue
                 step = self._step_fn(batch.length)
+                t_step = time.perf_counter()
                 params, opt, loss = step(
                     params, opt, jnp.asarray(batch.feats),
                     jnp.asarray(batch.labels), jnp.asarray(batch.weights),
                     pos_w)
                 global_step += 1
-                losses.append(float(loss))
+                losses.append(float(loss))     # device sync for this step
+                c_steps.inc()
+                h_step.observe((time.perf_counter() - t_step) * 1e3)
                 if tc.ckpt_every_steps and \
                         global_step % tc.ckpt_every_steps == 0:
                     save(e, batch.index + 1)
@@ -288,7 +312,9 @@ class SelectorTrainer:
                         history.append(sum(losses) / len(losses))
                     if mgr is not None:
                         mgr.wait()
+                    finalize()
                     return params, history
+            c_epochs.inc()
             if losses:
                 history.append(sum(losses) / len(losses))
             if log_every and (e + 1) % log_every == 0:
@@ -297,4 +323,5 @@ class SelectorTrainer:
         save(epochs, 0)
         if mgr is not None:
             mgr.wait()
+        finalize()
         return params, history

@@ -45,14 +45,16 @@ def test_build_index_help_documents_current_flags():
 def test_serve_help_documents_current_flags():
     out = _help_output("repro.launch.serve")
     for flag in ("--index-dir", "--verify", "--check-parity",
-                 "--parity-mrr-tol", "--cache-blocks", "--no-prefetch"):
+                 "--parity-mrr-tol", "--cache-blocks", "--no-prefetch",
+                 "--trace-out", "--trace-sample-rate", "--metrics-out"):
         assert flag in out, f"serve --help no longer documents {flag}"
 
 
 def test_update_index_help_documents_current_flags():
     out = _help_output("repro.launch.update_index")
     for flag in ("--upserts", "--deletes", "--compact", "--check-parity",
-                 "--serve-queries", "--recluster-overflow"):
+                 "--serve-queries", "--recluster-overflow",
+                 "--trace-out", "--metrics-out"):
         assert flag in out, f"update_index --help no longer documents {flag}"
 
 
@@ -62,7 +64,8 @@ def test_train_selector_help_documents_current_flags():
                  "--chunk-clusters", "--label-cache", "--pos-weight",
                  "--no-bucket", "--use-kernel", "--ckpt-every", "--resume",
                  "--thetas", "--budgets", "--target-recall",
-                 "--target-budget", "--publish", "--serve-check"):
+                 "--target-budget", "--publish", "--serve-check",
+                 "--trace-out", "--metrics-out"):
         assert flag in out, \
             f"train_selector --help no longer documents {flag}"
     # the epilog is the module docstring: the four pipeline stages must be
