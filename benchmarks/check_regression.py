@@ -20,7 +20,14 @@ fail on
   * the intra-file tracing-overhead gate: the tracing-enabled p50 in the
     pq-sharded row's `trace_overhead` pair must stay within 5% (+0.2ms
     timer-noise floor) of the tracing-disabled p50 measured by the same
-    engine in the same run (repro.obs spans must stay near-free).
+    engine in the same run (repro.obs spans must stay near-free),
+  * the intra-file hybrid gate: within the FRESH BENCH_train.json the
+    hybrid operating point (RRF fusion + neighbor-graph expansion) must
+    reach at least the baseline calibration's recall@budget at no more
+    est_read_bytes, and land strictly above the baseline (depth-0)
+    stage-1 ceiling — expansion exists to buy recall at the same block
+    I/O bill, so both rows come from the same run and the gate never
+    skips on host/geometry mismatch.
 
 Intended CI wiring (see .github/workflows/ci.yml) — the baseline comes
 from the PR's MERGE BASE, not HEAD, so a PR that restamps its own BENCH
@@ -82,6 +89,39 @@ def check_train(baseline_train, fresh_train, recall_tol=0.02):
     if fresh < base - recall_tol:
         bad.append(f"[train] recall@budget {fresh:.4f} < "
                    f"{base:.4f} - {recall_tol}")
+    return bad
+
+
+def check_intra_train(fresh_train):
+    """Baseline-free invariants over the fresh train bench alone: the
+    hybrid (RRF + expansion) operating point must beat what it replaces —
+    recall@budget(hybrid) >= recall@budget(baseline calibration) at
+    est_read_bytes(hybrid) <= est_read_bytes(baseline), and strictly above
+    the baseline stage-1 ceiling (otherwise expansion bought nothing the
+    old candidate list didn't already hold). Both sections come from the
+    same run, so no host/geometry skip applies; only files predating the
+    hybrid section skip (with a note)."""
+    bad = []
+    cal = (fresh_train or {}).get("calibration") or {}
+    hyb = (fresh_train or {}).get("hybrid") or {}
+    if not cal or not hyb:
+        print("note: calibration/hybrid section missing from "
+              "BENCH_train.json; intra-train hybrid gate skipped")
+        return bad
+    base_rec, hyb_rec = cal.get("recall_at_budget"), hyb.get("recall_at_budget")
+    if base_rec is not None and hyb_rec is not None and hyb_rec < base_rec:
+        bad.append(f"[train:intra] hybrid recall@budget {hyb_rec:.4f} < "
+                   f"baseline {base_rec:.4f} (hybrid candidates must win)")
+    ceiling = cal.get("stage1_ceiling")
+    if ceiling is not None and hyb_rec is not None and hyb_rec <= ceiling:
+        bad.append(f"[train:intra] hybrid recall@budget {hyb_rec:.4f} <= "
+                   f"baseline stage-1 ceiling {ceiling:.4f} (expansion "
+                   f"must raise the ceiling, not just fill it)")
+    base_b, hyb_b = cal.get("est_read_bytes"), hyb.get("est_read_bytes")
+    if base_b and hyb_b and hyb_b > base_b:
+        bad.append(f"[train:intra] hybrid est_read_bytes {hyb_b} > "
+                   f"baseline {base_b} (recall must come at the same "
+                   f"I/O budget)")
     return bad
 
 
@@ -239,6 +279,7 @@ def main(argv=None):
     bad += check_train(_load_optional(args.baseline_train),
                        _load_optional(args.fresh_train),
                        recall_tol=args.mrr_tol)
+    bad += check_intra_train(_load_optional(args.fresh_train))
     bad += check_intra_serve(_load(args.fresh_serve))
     if bad:
         print("BENCH REGRESSION:")

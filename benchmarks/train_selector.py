@@ -18,18 +18,31 @@ every field is documented in docs/BENCHMARKS.md):
   train               wall, optimizer steps, steps/s, bucket lengths,
                       final loss, effective pos_weight
   calibration         chosen operating point (theta, budget) for the
-                      recall target + the default point's recall
-  recall_at_budget    top-level copy — the CI regression gate fails on
-                      >0.02 drift vs the merge-base baseline
+                      recall target + the default point's recall, swept
+                      at expand_depth=0 (the pre-hybrid baseline)
+  hybrid              the hybrid candidate-generation operating point:
+                      theta x budget x expansion-depth sweep (selector
+                      retrained on expanded candidate sequences), chosen
+                      for best recall at the BASELINE budget — same
+                      est_read_bytes, higher stage-1 ceiling; per-depth
+                      `sweep` rows record ceiling + best recall@budget
+  recall_at_budget    top-level copy (the hybrid point) — the CI
+                      regression gate fails on >0.02 drift vs the
+                      merge-base baseline, and check_regression's
+                      intra-train gate requires hybrid >= baseline at
+                      <= baseline read bytes within this file
   serve               MRR@10 served by a live engine before the publish
                       (untrained fallback), with the trained selector at
-                      the default theta/budget, and at the calibrated
-                      point after a reload_selector() hot swap;
-                      failed_requests across the swap (asserted 0)
+                      the default theta/budget, and at the published
+                      hybrid point (fusion="rrf" + expansion) after a
+                      reload_selector() hot swap; failed_requests across
+                      the swap (asserted 0). Also asserts depth-0 +
+                      fusion="interp" is BITWISE the default pipeline.
 
 Standalone: PYTHONPATH=src python -m benchmarks.train_selector
 """
 
+import dataclasses
 import json
 import os
 import tempfile
@@ -51,6 +64,8 @@ N_HOLDOUT = 256
 BATCH = 32
 TARGET_RECALL = 0.90
 THETAS = (0.01, 0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.7)
+DEPTHS = (0, 1, 2, 3)            # stage-1 expansion depths swept
+HYBRID_FUSION = "rrf"            # fusion method published with the hybrid op
 
 
 def main():
@@ -153,6 +168,61 @@ def main():
     }
     print(f"calibration: {calibration}", flush=True)
 
+    # -- 3b. hybrid candidate generation: expansion-depth sweep ------------
+    depths = [d for d in DEPTHS
+              if cfg.n_candidates * (1 + d) <= cfg.n_clusters]
+    dmax = max(depths)
+    # retrain the selector on EXPANDED candidate sequences so Stage II can
+    # rank clusters the sparse seeds never surfaced; reuses the streamed
+    # dense ids (stage-1-independent), so no second corpus pass
+    t0 = time.perf_counter()
+    train_ls_h = train_lib.relabel_for_config(
+        dataclasses.replace(lcfg, expand_depth=dmax), lindex,
+        train_q.q_dense, train_q.q_terms, train_q.q_weights, ls.dense_ids)
+    trainer_h = train_lib.SelectorTrainer(
+        dataclasses.replace(cfg, expand_depth=dmax),
+        train_lib.SelectorTrainConfig(use_kernel=False))
+    params_h, _ = trainer_h.fit(jax.random.key(2), train_ls_h.feats,
+                                train_ls_h.labels)
+    hybrid_train_wall = time.perf_counter() - t0
+    sweep = train_lib.expansion_sweep(
+        lcfg, lindex, params_h, hold_q.q_dense, hold_q.q_terms,
+        hold_q.q_weights, hold_ls.dense_ids, depths=depths,
+        thetas=sorted(set(THETAS) | {cfg.theta}), budgets=budgets,
+        block_bytes=store.block_bytes)
+    rows_h = [r for e in sweep for r in e["rows"]]
+    # best recall at the BASELINE budget: expansion must pay in recall at
+    # the same block-I/O bill, not by reading more
+    hop = train_lib.choose_operating_point(rows_h, target_budget=op["budget"])
+    ceil_by_depth = {e["depth"]: e["stage1_ceiling"] for e in sweep}
+    hybrid = {
+        "fusion": HYBRID_FUSION,
+        "rrf_k": float(cfg.rrf_k),
+        "expand_depth": hop["depth"],
+        "n_candidates": hop["n_candidates"],
+        "theta": hop["theta"],
+        "budget": hop["budget"],
+        "recall_at_budget": hop["recall"],
+        "avg_selected": hop["avg_selected"],
+        "est_read_bytes": hop["est_read_bytes"],
+        "stage1_ceiling": ceil_by_depth[hop["depth"]],
+        "baseline_ceiling": calibration["stage1_ceiling"],
+        "target_recall": TARGET_RECALL,
+        "target_met": hop["recall"] >= TARGET_RECALL,
+        "train_wall_s": round(hybrid_train_wall, 3),
+        "sweep": [dict(
+            {k: e[k] for k in ("depth", "n_candidates", "stage1_ceiling")},
+            best_recall_at_budget=max(r["recall"] for r in e["rows"]
+                                      if r["budget"] <= op["budget"]))
+            for e in sweep],
+    }
+    print(f"hybrid: {hybrid}", flush=True)
+    # the point of the PR: deeper candidates buy recall at the same budget
+    assert hop["budget"] <= op["budget"], (hop, op)
+    assert hop["recall"] > calibration["stage1_ceiling"], \
+        f"hybrid recall {hop['recall']} not above baseline stage-1 " \
+        f"ceiling {calibration['stage1_ceiling']}"
+
     # -- 4. publish + live hot-reload serving ------------------------------
     engine = reader.engine(max_batch=BATCH)
     failed = 0
@@ -181,12 +251,27 @@ def main():
         selector_params=params)
     mrr_default = mrr_at(np.asarray(ids_def), hold_q.rel_doc)
 
+    # the hybrid knobs must default OFF: explicit depth-0 + interp is
+    # bitwise the pipeline above (acceptance criterion — MRR identical)
+    ids_exp, _, _ = pipe_lib.retrieve(
+        dataclasses.replace(cfg, fusion="interp", expand_depth=0), lindex,
+        mem, hold_q.q_dense, hold_q.q_terms, hold_q.q_weights,
+        selector_params=params)
+    assert np.array_equal(np.asarray(ids_def), np.asarray(ids_exp)), \
+        "explicit fusion='interp'/expand_depth=0 diverged from default"
+
+    # publish the HYBRID operating point: retrained selector + calibrated
+    # theta/budget + expansion depth + RRF fusion, one atomic generation.
+    # reload_selector() must recompile Stage I (expand_depth changed).
     report = train_lib.publish_selector(
-        out, params, theta=op["theta"], budget=op["budget"],
-        calibration=table, label_config={"chunk_clusters": CHUNK_CLUSTERS},
+        out, params_h, theta=hop["theta"], budget=hop["budget"],
+        expand_depth=hop["depth"], fusion=HYBRID_FUSION,
+        calibration=rows_h, label_config={"chunk_clusters": CHUNK_CLUSTERS},
         train_meta=train_stats)
     gen = engine.reload_selector()
     assert gen == report["generation"] == 1, (gen, report)
+    assert engine.cfg.expand_depth == hop["depth"] \
+        and engine.cfg.fusion == HYBRID_FUSION, engine.cfg
     mrr_calibrated = mrr_at(serve_ids(), hold_q.rel_doc)
     engine.close()
     assert failed == 0, f"{failed} retrieve calls failed across the swap"
@@ -194,6 +279,8 @@ def main():
         "MRR@10_untrained": round(mrr_untrained, 4),
         "MRR@10_default": round(mrr_default, 4),
         "MRR@10_calibrated": round(mrr_calibrated, 4),
+        "fusion": engine.stats()["fusion"],
+        "expand_depth": engine.stats()["expand_depth"],
         "generation": gen,
         "selector_reloads": engine.stats()["selector_reloads"],
         "failed_requests": failed,
@@ -207,7 +294,8 @@ def main():
         "label_gen": label_gen,
         "train": train_stats,
         "calibration": calibration,
-        "recall_at_budget": calibration["recall_at_budget"],
+        "hybrid": hybrid,
+        "recall_at_budget": hybrid["recall_at_budget"],
         "serve": serve,
     }
     with open(out_path, "w") as f:

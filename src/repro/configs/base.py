@@ -136,8 +136,13 @@ class CluSDConfig:
     theta: float = 0.02              # selection threshold
     max_selected: int = 32           # static selection budget (TPU adaptation)
     # fusion
-    alpha: float = 0.5               # sparse weight in interpolation
+    alpha: float = 0.5               # sparse weight (both fusion methods)
     k_final: int = 1000
+    fusion: str = "interp"           # "interp" | "rrf" (core/fusion.py)
+    rrf_k: float = 60.0              # RRF rank constant (fusion="rrf")
+    # hybrid candidate generation: LADR-style neighbor-graph expansion of
+    # the stage-1 seeds (core/stage1.expand_candidates); 0 = off
+    expand_depth: int = 0
     # training
     train_queries: int = 5000
     epochs: int = 150
@@ -152,6 +157,13 @@ class CluSDConfig:
     @property
     def v_bins(self) -> int:
         return len(self.bins)
+
+    @property
+    def n_candidates_total(self) -> int:
+        """Stage-1 candidate width after graph expansion: each expansion
+        step budgets one extra n_candidates block, capped at N."""
+        return min(self.n_candidates * (1 + max(self.expand_depth, 0)),
+                   self.n_clusters)
 
     @property
     def cluster_cap(self) -> int:

@@ -87,6 +87,12 @@ def stage1_candidates(cfg, index, q_dense, sparse_ids, sparse_scores, *,
         cand = stage1_lib.sort_by_overlap(P, qc_sim, cfg.n_candidates)
     else:
         cand = stage1_lib.sort_by_dist(qc_sim, cfg.n_candidates)
+    if cfg.expand_depth > 0 and cfg.n_candidates_total > cfg.n_candidates:
+        # hybrid mode: deepen the seed list through the neighbor graph
+        # (LADR-style); depth 0 is bitwise the unexpanded pipeline
+        cand = stage1_lib.expand_candidates(
+            cand, index.neighbor_ids, index.neighbor_sims, qc_sim,
+            cfg.expand_depth, cfg.n_candidates_total)
     feats = feat_lib.candidate_features(
         cand, qc_sim, P, Q, index.neighbor_ids, index.neighbor_sims,
         cfg.u_bins)

@@ -202,7 +202,8 @@ def make_serve_step(cfg, mesh, bidx_shapes, feat_dim):
         ids, scores = fusion_lib.fuse_topk_merge(
             sparse_ids, sparse_scores, dgid,
             jnp.where(dmask, dval, 0.0), dmask, cfg.alpha,
-            min(cfg.k_final, sparse_ids.shape[1]), sentinel)
+            min(cfg.k_final, sparse_ids.shape[1]), sentinel,
+            method=cfg.fusion, rrf_k=cfg.rrf_k)
         return ids, scores
 
     return serve

@@ -4,6 +4,12 @@ SortByOverlap: multikey sort on the priority vector (P(C,B_1),...,P(C,B_v)),
 ties broken by query-centroid similarity. Implemented as v+1 passes of
 stable argsort (exact lexicographic order; no packed-key overflow).
 SortByDist: the IVF-style baseline ordering (ablation Table 8).
+
+expand_candidates: LADR-style proximity expansion (Kulkarni et al.,
+2023) — deepen the sparse-seeded candidate list by walking the pre-built
+cluster neighbor graph, so stage-1 recall rises without widening the
+sparse seed set. Static-shape and jit-able: the output width is fixed by
+the expansion budget, never by how many clusters the walk reaches.
 """
 
 import jax
@@ -39,3 +45,50 @@ def sort_by_dist(qc_sim, n):
     """IVF ordering: top-n clusters by query-centroid similarity. (B, n)."""
     _, ids = jax.lax.top_k(qc_sim, n)
     return ids.astype(jnp.int32)
+
+
+def expand_candidates(cand, neighbor_ids, neighbor_sims, qc_sim, depth,
+                      n_out):
+    """Proximity-expand stage-1 seed clusters through the neighbor graph.
+
+    cand: (B, n) seed cluster ids in stage-1 priority order;
+    neighbor_ids/neighbor_sims: (N, m) pre-built centroid kNN graph
+    (self excluded); qc_sim: (B, N) query-centroid similarity;
+    depth: neighbors considered per seed (clamped to m);
+    n_out: static output width, n <= n_out <= N.
+
+    Returns (B, n_out) int32, all-distinct per row: the seeds first
+    (order untouched — depth 0 / n_out == n is exactly the current
+    pipeline), then graph-reached clusters ordered by their best
+    neighbor-similarity to any seed, then — when the walk reaches fewer
+    distinct clusters than the remaining slots — the nearest untouched
+    clusters by query-centroid similarity (IVF-style fill; keeps the
+    shape static instead of mask-padding a ragged reach set, and every
+    slot still holds a plausibly useful cluster).
+    """
+    B, n = cand.shape
+    N = qc_sim.shape[1]
+    ext = int(n_out) - n
+    if ext <= 0 or depth <= 0:
+        return cand
+    if ext > N - n:
+        raise ValueError(f"n_out={n_out} exceeds n_clusters={N}")
+    depth = min(int(depth), neighbor_ids.shape[1])
+
+    def one(cand_q, sim_q):
+        nb_i = jnp.take(neighbor_ids, cand_q, axis=0)[:, :depth].reshape(-1)
+        nb_s = jnp.take(neighbor_sims, cand_q, axis=0)[:, :depth].reshape(-1)
+        # best seed->cluster edge per cluster; seeds themselves excluded
+        reach = jnp.full((N,), -jnp.inf, nb_s.dtype).at[nb_i].max(nb_s)
+        is_seed = jnp.zeros((N,), bool).at[cand_q].set(True)
+        reach = jnp.where(is_seed, -jnp.inf, reach)
+        reached = reach > -jnp.inf
+        score = jnp.where(reached, reach,
+                          jnp.where(is_seed, -jnp.inf, sim_q))
+        # exact two-key order: graph-reached first (by edge sim), then
+        # IVF fill (by query-centroid sim); seeds sort last and can never
+        # re-enter because ext <= N - n
+        perm = _lexsort_desc([reached.astype(jnp.float32), score])
+        return jnp.concatenate([cand_q, perm[:ext].astype(jnp.int32)])
+
+    return jax.vmap(one)(cand, qc_sim)

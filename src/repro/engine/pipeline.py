@@ -123,9 +123,11 @@ def build_fused_scorer(cfg, index, store, *, k, mode):
     mode "dot":  blocks are (U, cap, dim) float and q_or_lut is (B, dim).
 
     The returned fn(q_or_lut, sid, ss, sel_ids, sel_mask, blocks, pos)
-    -> (ids, scores) closes over cfg/cluster_docs, so the engine must drop
-    it on index reloads (and on selector reloads: cfg is re-read)."""
+    -> (ids, scores) closes over cfg/cluster_docs (including the fusion
+    method/rrf_k), so the engine must drop it on index reloads (and on
+    selector reloads: cfg is re-read)."""
     n_docs, alpha = index.n_docs, cfg.alpha
+    method, rrf_k = cfg.fusion, cfg.rrf_k
     cluster_docs = index.cluster_docs
 
     def run(q_or_lut, sid, ss, sel_ids, sel_mask, blocks, pos):
@@ -141,7 +143,8 @@ def build_fused_scorer(cfg, index, store, *, k, mode):
         dscore = jnp.where(vf, scores3.reshape(B, S * cap), 0.0)
         did = jnp.where(valid, docs, 0).reshape(B, S * cap).astype(jnp.int32)
         return fusion_lib.fuse_topk(sid, ss, did, dscore, vf,
-                                    n_docs, alpha, k)
+                                    n_docs, alpha, k,
+                                    method=method, rrf_k=rrf_k)
 
     return jax.jit(run)
 
@@ -202,7 +205,7 @@ def score_and_fuse(cfg, index, store, q_dense, sparse_ids, sparse_scores,
         did, dscore, dmask = score_selected(store, q_dense, sel_ids, sel_mask)
     ids, scores = fusion_lib.fuse_topk(
         sparse_ids, sparse_scores, did, jnp.where(dmask, dscore, 0.0), dmask,
-        index.n_docs, cfg.alpha, k)
+        index.n_docs, cfg.alpha, k, method=cfg.fusion, rrf_k=cfg.rrf_k)
     return ids, scores, dmask
 
 

@@ -228,7 +228,15 @@ class RetrievalEngine:
     def __init__(self, cfg, index, store=None, *, max_batch=256,
                  cache_capacity=512, prefetch=True, prefetch_depth=None,
                  k=None, reader=None, use_adc=None, metrics=None,
-                 tracer=None, trace_sample_rate=None):
+                 tracer=None, trace_sample_rate=None, fusion=None):
+        # per-engine fusion override ("interp" | "rrf"): wins over the
+        # manifest config and is re-applied across index/selector reloads
+        from repro.core.fusion import FUSION_METHODS
+        if fusion is not None and fusion not in FUSION_METHODS:
+            raise ValueError(f"fusion must be one of {FUSION_METHODS}, "
+                             f"got {fusion!r}")
+        self._fusion_override = fusion
+        cfg = self._apply_cfg_overrides(cfg)
         self.cfg = cfg
         self.index = index
         self.store = store if store is not None \
@@ -307,9 +315,17 @@ class RetrievalEngine:
                 * int(dim) * 4)
         return BlockCache(self._cache_capacity)
 
+    def _apply_cfg_overrides(self, cfg):
+        if self._fusion_override is not None \
+                and cfg.fusion != self._fusion_override:
+            cfg = dataclasses.replace(cfg, fusion=self._fusion_override)
+        return cfg
+
     @staticmethod
     def _default_prefetch_depth(cfg):
-        return min(cfg.n_candidates,
+        # expansion widens the candidate list; the prefetch window still
+        # tracks the selection budget, capped at the EXPANDED width
+        return min(cfg.n_candidates_total,
                    cfg.max_selected + cfg.max_selected // 2)
 
     def _refresh_prefetch_depth(self, cfg):
@@ -363,6 +379,7 @@ class RetrievalEngine:
         with tr.span("reload"):
             reader.refresh(verify=verify)
             cfg, index = reader.load_index()
+            cfg = self._apply_cfg_overrides(cfg)
             store = reader.open_store(cluster_docs=index.cluster_docs)
             # quiesce prefetch: drop queued candidate ids and wait out any
             # fetch against the old store before the cache is cleared
@@ -395,6 +412,14 @@ class RetrievalEngine:
                 self._start_prefetch()
         tr.finish(generation=reader.generation)
         return reader.generation
+
+    @staticmethod
+    def _stage1_cfg(cfg):
+        """The config slice compiled into Stage-I buckets (candidate
+        generation + sparse depth). A selector publish that changes any of
+        these must invalidate stage1 fns too."""
+        return (cfg.k_sparse, cfg.bins, cfg.n_candidates, cfg.expand_depth,
+                cfg.n_candidates_total, cfg.u_bins)
 
     @staticmethod
     def _carry_store_counters(old_store, new_store):
@@ -440,9 +465,10 @@ class RetrievalEngine:
             return self.reload_index(reader, verify="none")
         tr = self.tracer.trace("reload_selector")
         with tr.span("reload"):
-            cfg = reader.config()
+            cfg = self._apply_cfg_overrides(reader.config())
             params = reader.lstm_params()
             with self._swap_lock:
+                old_cfg = self.cfg
                 self.cfg = cfg
                 self.index.lstm_params = params
                 self.reader = reader
@@ -455,8 +481,14 @@ class RetrievalEngine:
                 # whole (re-read) config. Stage-I buckets, the LUT builder
                 # (codebooks only), and the block cache survive — the
                 # corpus didn't move.
-                for key in [k for k in self._fns
-                            if k[0] in ("stage2", "device", "adc", "dot")]:
+                stale = {"stage2", "device", "adc", "dot"}
+                if self._stage1_cfg(old_cfg) != self._stage1_cfg(cfg):
+                    # a publish may also retune candidate generation
+                    # (expansion depth / width): those values are BAKED
+                    # into the compiled Stage-I buckets, so keeping them
+                    # would serve the old candidate shape forever
+                    stale.add("stage1")
+                for key in [k for k in self._fns if k[0] in stale]:
                     del self._fns[key]
                 self.serve_stats.record_selector_reload()
         tr.finish(generation=reader.generation)
@@ -728,6 +760,8 @@ class RetrievalEngine:
                "prefetch_errors": ss.prefetch_errors,
                "reloads": ss.reloads,
                "selector_reloads": ss.selector_reloads,
+               "fusion": self.cfg.fusion,
+               "expand_depth": self.cfg.expand_depth,
                **ss.latency_percentiles()}
         if self.reader is not None:
             out["generation"] = self.reader.generation

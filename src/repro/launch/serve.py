@@ -33,9 +33,18 @@ trace JSON for Perfetto), sampled at --trace-sample-rate; --metrics-out
 dumps the engine metrics registry (JSON or Prometheus text by suffix).
 Catalog: docs/OBSERVABILITY.md.
 
+--fusion overrides the final-list fusion method (interp = paper min-max
+interpolation, rrf = weighted reciprocal-rank fusion); --expand-depth N
+deepens Stage-I candidates through the cluster neighbor graph (LADR-style
+hybrid candidate generation, N extra n_candidates blocks of clusters
+considered per query at the same selection budget). Both default to the
+served config (a calibrated publish may have set them); depth 0 + interp
+is bitwise the classic pipeline.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --docs 20000 --queries 256 \
-      [--ondisk] [--cache-blocks 512] [--no-prefetch]
+      [--ondisk] [--cache-blocks 512] [--no-prefetch] \
+      [--fusion interp|rrf] [--expand-depth N]
   PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/idx \
       --queries 64 [--verify full] [--check-parity [--parity-mrr-tol T]] \
       [--trace-out trace.jsonl] [--metrics-out metrics.json]
@@ -56,6 +65,17 @@ from repro.core import disk as dk
 from repro.core import train_lstm as tl
 from repro.data import mrr_at, recall_at, synth_corpus, synth_queries
 from repro.engine import DiskStore, RetrievalEngine
+
+
+def _apply_hybrid_flags(cfg, args):
+    """Overlay --fusion / --expand-depth on the served config (None =
+    keep what the config/manifest says, e.g. a calibrated publish)."""
+    changes = {}
+    if args.fusion is not None:
+        changes["fusion"] = args.fusion
+    if args.expand_depth is not None:
+        changes["expand_depth"] = args.expand_depth
+    return dataclasses.replace(cfg, **changes) if changes else cfg
 
 
 def _write_obs(args, engine):
@@ -80,6 +100,7 @@ def serve_from_index(args):
     t0 = time.perf_counter()
     reader = index_lib.IndexReader.open(args.index_dir, verify=args.verify)
     cfg, index = reader.load_index()
+    cfg = _apply_hybrid_flags(cfg, args)
     open_ms = (time.perf_counter() - t0) * 1e3
     meta = reader.manifest.get("extra", {}).get("corpus")
     if meta is None or meta.get("kind") != "synthetic":
@@ -172,6 +193,14 @@ def main():
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--epochs", type=int, default=40)
     ap.add_argument("--ondisk", action="store_true")
+    ap.add_argument("--fusion", default=None, choices=("interp", "rrf"),
+                    help="final-list fusion method override (default: the "
+                         "served config's; interp = paper min-max "
+                         "interpolation, rrf = weighted reciprocal-rank)")
+    ap.add_argument("--expand-depth", type=int, default=None,
+                    help="Stage-I neighbor-graph expansion depth override "
+                         "(0 = off; widens candidates to n_candidates * "
+                         "(1 + depth) at the same selection budget)")
     ap.add_argument("--cache-blocks", type=int, default=512)
     ap.add_argument("--no-prefetch", action="store_true")
     ap.add_argument("--index-dir", default=None,
@@ -207,6 +236,7 @@ def main():
         vocab=2048, k_sparse=512, bins=(10, 25, 50, 100, 200, 512),
         n_candidates=32, max_selected=16, k_final=256,
         train_queries=512, epochs=args.epochs)
+    cfg = _apply_hybrid_flags(cfg, args)
 
     print("building corpus + index ...", flush=True)
     corpus = synth_corpus(0, cfg.n_docs, cfg.dim, cfg.vocab)

@@ -18,7 +18,12 @@ Pipeline (src/repro/train/):
      (--ckpt-every / --ckpt-dir) with deterministic mid-epoch --resume.
   3. CALIBRATE — sweep --thetas x --budgets on the held-out label set;
      pick the cheapest point hitting --target-recall (or the best recall
-     within --target-budget).
+     within --target-budget). With --expand-depths the sweep gains a
+     stage-1 expansion-depth axis (neighbor-graph candidate expansion):
+     the selector is retrained on the expanded candidate sequences
+     (labels rebuilt from the cached full-dense ids — no re-streaming)
+     and the operating point is re-picked at the baseline's budget, so
+     extra recall never costs extra read bytes.
   4. PUBLISH (--publish) — weights + calibrated theta/budget commit as an
      atomic generation (zero corpus bytes rewritten); --serve-check N
      serves N queries on a live engine before AND after the commit,
@@ -33,6 +38,11 @@ Key flags (full list below / --help):
   --no-bucket                  disable sequence-length bucketing
   --use-kernel {auto,0,1}      Pallas LSTM cell in the train step
                                (auto = only on TPU backends)
+  --expand-depths 0,1,2        stage-1 expansion depths to sweep; the
+                               best (depth, theta) at the baseline
+                               budget publishes as config.expand_depth
+  --fusion {interp,rrf}        fusion method to publish into the config
+                               (default: keep the index config's value)
 """
 
 import argparse
@@ -159,6 +169,14 @@ def main(argv=None):
     ap.add_argument("--target-budget", type=int, default=None,
                     help="calibrate to the best recall within this many "
                          "selected clusters")
+    ap.add_argument("--expand-depths", type=_ints, default=None,
+                    metavar="D0,D1,..",
+                    help="stage-1 neighbor-graph expansion depths to sweep "
+                         "(retrains the selector on expanded candidates; "
+                         "best depth publishes as config.expand_depth)")
+    ap.add_argument("--fusion", default=None, choices=("interp", "rrf"),
+                    help="fusion method to publish into the index config "
+                         "(default: keep the current value)")
     ap.add_argument("--publish", action="store_true",
                     help="commit weights + calibrated thresholds as a new "
                          "index generation")
@@ -273,9 +291,69 @@ def main(argv=None):
           f"avg_selected={op['avg_selected']} "
           f"(target_met={op['target_met']})", flush=True)
 
+    # -- 3b. hybrid expansion sweep (--expand-depths) ----------------------
+    # Stage-1 expansion changes (cand, feats) but not the full-dense ids
+    # the labels came from, so retraining + sweeping reuses the cached
+    # label sets without touching the corpus.
+    hybrid = None
+    pub_params, pub_op, pub_table = params, op, table
+    pub_depth = None
+    if args.expand_depths:
+        depths = sorted({max(0, d) for d in args.expand_depths
+                         if cfg.n_candidates * (1 + max(0, d))
+                         <= cfg.n_clusters})
+        dropped = sorted(set(args.expand_depths) - set(depths))
+        if dropped:
+            print(f"expand-depths {dropped} dropped: expanded candidate "
+                  f"count would exceed n_clusters={cfg.n_clusters}")
+        dmax = max(depths)
+        cfg_h = dataclasses.replace(cfg, expand_depth=dmax)
+        with tr.span("hybrid", n_depths=len(depths), max_depth=dmax):
+            ls_h = train_lib.relabel_for_config(
+                cfg_h, index, train_q.q_dense, train_q.q_terms,
+                train_q.q_weights, train_ls.dense_ids,
+                stage1=label_cfg.stage1)
+            trainer_h = train_lib.SelectorTrainer(
+                cfg_h, dataclasses.replace(
+                    tcfg, ckpt_dir=tcfg.ckpt_dir + ".hybrid"))
+            params_h, hist_h = trainer_h.fit(
+                jax.random.key(args.seed + 3), ls_h.feats, ls_h.labels,
+                log_every=max(1, (args.epochs or cfg.epochs) // 5),
+                metrics=metrics)
+            sweep = train_lib.expansion_sweep(
+                cfg, index, params_h, hold_q.q_dense, hold_q.q_terms,
+                hold_q.q_weights, hold_ls.dense_ids, depths=depths,
+                thetas=sorted(set(args.thetas + [cfg.theta])),
+                budgets=budgets,
+                block_bytes=int(getattr(store, "block_bytes", 0)),
+                stage1=label_cfg.stage1)
+        rows_h = [r for d in sweep for r in d["rows"]]
+        hop = train_lib.choose_operating_point(
+            rows_h, target_budget=args.target_budget or op["budget"])
+        ceil = {d["depth"]: d["stage1_ceiling"] for d in sweep}
+        hybrid = {
+            "depth": hop["depth"], "theta": hop["theta"],
+            "budget": hop["budget"], "recall": hop["recall"],
+            "avg_selected": hop["avg_selected"],
+            "stage1_ceiling": ceil[hop["depth"]],
+            "baseline_recall": op["recall"],
+            "final_loss": round(hist_h[-1], 6) if hist_h else None,
+            "sweep": [{"depth": d["depth"],
+                       "n_candidates": d["n_candidates"],
+                       "stage1_ceiling": d["stage1_ceiling"]}
+                      for d in sweep],
+        }
+        pub_params, pub_op, pub_table = params_h, dict(hop), rows_h
+        pub_depth = hop["depth"]
+        print(f"hybrid: depth={hop['depth']} theta={hop['theta']} "
+              f"budget={hop['budget']} -> "
+              f"recall@{args.top_dense}={hop['recall']:.4f} "
+              f"(stage1_ceiling={ceil[hop['depth']]:.4f}, "
+              f"baseline={op['recall']:.4f})", flush=True)
+
     if not args.publish:
         _finish_obs()
-        print(json.dumps({"operating_point": op,
+        print(json.dumps({"operating_point": op, "hybrid": hybrid,
                           "wall_s": round(time.perf_counter() - t0, 1)}))
         return 0
 
@@ -289,14 +367,17 @@ def main(argv=None):
 
     with tr.span("publish"):
         report = train_lib.publish_selector(
-            args.index_dir, params, theta=op["theta"], budget=op["budget"],
-            calibration=table, label_config=dataclasses.asdict(label_cfg),
+            args.index_dir, pub_params, theta=pub_op["theta"],
+            budget=pub_op["budget"], calibration=pub_table,
+            label_config=dataclasses.asdict(label_cfg),
             train_meta={"n_train_queries": train_ls.n_queries,
                         "n_holdout_queries": hold_ls.n_queries,
                         "epochs": args.epochs or cfg.epochs,
                         "pos_weight": trainer.pos_weight,
                         "final_loss": round(hist[-1], 6) if hist else None,
-                        "train_wall_s": round(train_wall, 3)},
+                        "train_wall_s": round(train_wall, 3),
+                        "hybrid": hybrid},
+            expand_depth=pub_depth, fusion=args.fusion,
             verify=args.verify)
     print(f"published generation {report['generation']} "
           f"(+{report['bytes_added']} bytes, {report['wall_s']}s)",
@@ -322,7 +403,8 @@ def main(argv=None):
               f"fresh engine on generation {gen} "
               f"(selector_reloads={engine.stats()['selector_reloads']})")
     _finish_obs()
-    print(json.dumps({"operating_point": op, "publish": report,
+    print(json.dumps({"operating_point": op, "hybrid": hybrid,
+                      "publish": report,
                       "wall_s": round(time.perf_counter() - t0, 1)}))
     return 0
 

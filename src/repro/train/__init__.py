@@ -6,15 +6,15 @@ publish flow; `python -m repro.launch.train_selector` drives the whole
 loop against an index built by `repro.launch.build_index`."""
 
 from repro.train.calibrate import (
-    calibration_table, choose_operating_point, recall_at_budget, select_at,
-    selection_quality, selector_probs)
+    calibration_table, choose_operating_point, expansion_sweep,
+    recall_at_budget, select_at, selection_quality, selector_probs)
 from repro.train.data import (
     Batch, bucket_lengths, bucketed_batches, effective_lengths,
     n_batches_per_epoch)
 from repro.train.labels import (
     LabelCache, LabelConfig, LabelGenStats, LabelSet, label_cache_key,
     make_labels, make_labels_streaming, query_fingerprint,
-    streaming_full_dense_topk)
+    relabel_for_config, stage1_for_queries, streaming_full_dense_topk)
 from repro.train.publish import publish_selector
 from repro.train.trainer import (
     SelectorTrainConfig, SelectorTrainer, derive_pos_weight,
@@ -24,10 +24,10 @@ __all__ = [
     "Batch", "LabelCache", "LabelConfig", "LabelGenStats", "LabelSet",
     "SelectorTrainConfig", "SelectorTrainer", "bucket_lengths",
     "bucketed_batches", "calibration_table", "choose_operating_point",
-    "derive_pos_weight", "effective_lengths", "label_cache_key",
-    "make_labels", "make_labels_streaming", "n_batches_per_epoch",
-    "publish_selector", "query_fingerprint", "recall_at_budget",
-    "resolve_pos_weight", "select_at", "selection_quality",
-    "selector_apply", "selector_probs", "streaming_full_dense_topk",
-    "train_selector",
+    "derive_pos_weight", "effective_lengths", "expansion_sweep",
+    "label_cache_key", "make_labels", "make_labels_streaming",
+    "n_batches_per_epoch", "publish_selector", "query_fingerprint",
+    "recall_at_budget", "relabel_for_config", "resolve_pos_weight",
+    "select_at", "selection_quality", "selector_apply", "selector_probs",
+    "stage1_for_queries", "streaming_full_dense_topk", "train_selector",
 ]

@@ -92,6 +92,58 @@ def calibration_table(label_set, probs, doc_cluster, *, thetas, budgets,
     return rows
 
 
+def expansion_sweep(cfg, index, params, q_dense, q_terms, q_weights,
+                    dense_ids, *, depths, thetas, budgets, block_bytes=0,
+                    stage1="overlap", selector="lstm", use_kernel=False):
+    """Extend the theta x budget sweep with a stage-1 expansion-depth axis.
+
+    For each depth the stage-1 candidate list is regenerated through the
+    neighbor graph (core/stage1.expand_candidates) and swept exactly like
+    `calibration_table` — same select_at semantics, same row schema plus a
+    "depth" / "n_candidates" field per row. `dense_ids` is the full-dense
+    top-k from an existing LabelSet: it does not depend on stage 1, so the
+    sweep reuses it instead of re-streaming the corpus per depth.
+
+    Returns a list of per-depth dicts:
+      {"depth", "n_candidates", "stage1_ceiling", "rows": [...]}
+    where stage1_ceiling is recall with EVERY candidate selected — the
+    best any selector could do at that depth. Budgets stay as given (the
+    point of expansion is more recall at the SAME read budget), so
+    est_read_bytes is comparable across depths.
+    """
+    import dataclasses
+    from repro.train import labels as labels_lib
+
+    dense_ids = np.asarray(dense_ids)
+    pos_clusters = np.asarray(index.doc_cluster)[dense_ids]
+    out = []
+    for depth in sorted({int(d) for d in depths}):
+        dcfg = dataclasses.replace(cfg, expand_depth=depth)
+        cand, feats = labels_lib.stage1_for_queries(
+            dcfg, index, q_dense, q_terms, q_weights, stage1=stage1)
+        probs = selector_probs(params, feats, selector=selector,
+                               use_kernel=use_kernel)
+        ceiling, _ = recall_at_budget(cand, probs, pos_clusters, -np.inf,
+                                      cand.shape[1])
+        rows = []
+        for budget in sorted(int(b) for b in budgets):
+            for theta in sorted(float(t) for t in thetas):
+                rec, avg_sel = recall_at_budget(cand, probs, pos_clusters,
+                                                theta, budget)
+                rows.append({
+                    "depth": depth,
+                    "n_candidates": int(cand.shape[1]),
+                    "theta": round(theta, 6),
+                    "budget": budget,
+                    "recall": round(rec, 4),
+                    "avg_selected": round(avg_sel, 2),
+                    "est_read_bytes": int(round(avg_sel * block_bytes)),
+                })
+        out.append({"depth": depth, "n_candidates": int(cand.shape[1]),
+                    "stage1_ceiling": round(ceiling, 4), "rows": rows})
+    return out
+
+
 def choose_operating_point(table, *, target_recall=None, target_budget=None):
     """Pick a row from a calibration table.
 

@@ -117,6 +117,34 @@ def _stage1(cfg, index, q_dense, q_terms, q_weights, stage1):
     return s1["cand"], s1["feats"], sparse_ids, sparse_scores
 
 
+def stage1_for_queries(cfg, index, q_dense, q_terms, q_weights,
+                       stage1="overlap"):
+    """Stage-1 candidates + features for a query set, as host arrays.
+
+    Public wrapper for calibration's expansion sweep: re-running stage 1
+    at a different `cfg.expand_depth` only changes (cand, feats) — the
+    full-dense ids in an existing LabelSet stay valid, so the sweep never
+    re-streams the corpus."""
+    cand, feats, _, _ = _stage1(cfg, index, q_dense, q_terms, q_weights,
+                                stage1)
+    return np.asarray(cand), np.asarray(feats)
+
+
+def relabel_for_config(cfg, index, q_dense, q_terms, q_weights, dense_ids, *,
+                       stage1="overlap") -> LabelSet:
+    """Rebuild a LabelSet for a new candidate-generation config (e.g. a
+    different `expand_depth`) from an existing full-dense top-k. The
+    expensive streamed dense pass is stage-1-independent, so retraining
+    the selector on expanded candidate sequences costs only a stage-1
+    re-run."""
+    cand, feats, _, _ = _stage1(cfg, index, q_dense, q_terms, q_weights,
+                                stage1)
+    dense_ids = np.asarray(dense_ids)
+    labels = _labels_from_dense(index, cand, jnp.asarray(dense_ids))
+    return LabelSet(cand=np.asarray(cand), feats=np.asarray(feats),
+                    labels=np.asarray(labels), dense_ids=dense_ids)
+
+
 def _labels_from_dense(index, cand, dense_ids):
     pos_clusters = jnp.take(index.doc_cluster, dense_ids, axis=0)  # (B, k)
     labels = jnp.any(cand[:, :, None] == pos_clusters[:, None, :], axis=-1)
@@ -260,7 +288,7 @@ def query_fingerprint(q_dense, q_terms, q_weights):
 # cached labels.
 _LABEL_CFG_FIELDS = ("n_docs", "dim", "n_clusters", "vocab", "max_postings",
                      "k_sparse", "bins", "n_candidates", "n_neighbors",
-                     "u_bins")
+                     "u_bins", "expand_depth")
 
 
 def label_cache_key(manifest, cfg, label_cfg: LabelConfig, q_fingerprint):

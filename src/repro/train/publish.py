@@ -48,9 +48,17 @@ def _stage_relpaths(stage):
 
 def publish_selector(index_dir, params, *, theta=None, budget=None,
                      calibration=None, label_config=None, train_meta=None,
-                     selector="lstm", verify="size"):
+                     selector="lstm", verify="size", expand_depth=None,
+                     fusion=None):
     """Commit `params` (+ calibrated theta/budget) to the index at
     `index_dir` as generation G = current + 1. Returns a report dict.
+
+    A hybrid calibration may also retune candidate generation:
+    `expand_depth` (stage-1 neighbor-graph expansion) and `fusion`
+    ("interp" | "rrf") land in the manifest config the same way
+    theta/budget do — readers serve them with no extra wiring, and
+    `RetrievalEngine.reload_selector()` recompiles its Stage-I buckets
+    when the expansion changed.
 
     Only the paper's LSTM selector round-trips through the manifest's
     `lstm` checkpoint schema; other selector kinds must extend it first.
@@ -94,11 +102,21 @@ def publish_selector(index_dir, params, *, theta=None, budget=None,
         cfg_d["theta"] = float(theta)
     if budget is not None:
         cfg_d["max_selected"] = int(budget)
+    if expand_depth is not None:
+        cfg_d["expand_depth"] = int(expand_depth)
+    if fusion is not None:
+        from repro.core.fusion import FUSION_METHODS
+        if fusion not in FUSION_METHODS:
+            raise ValueError(f"fusion must be one of {FUSION_METHODS}, "
+                             f"got {fusion!r}")
+        cfg_d["fusion"] = str(fusion)
     new_manifest["selector"] = {
         "selector": selector,
         "published_generation": G,
         "theta": cfg_d["theta"],
         "budget": cfg_d["max_selected"],
+        "expand_depth": int(cfg_d.get("expand_depth", 0)),
+        "fusion": str(cfg_d.get("fusion", "interp")),
         "calibration": list(calibration or []),
         "label_config": dict(label_config or {}),
         "train": dict(train_meta or {}),

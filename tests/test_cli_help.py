@@ -46,7 +46,8 @@ def test_serve_help_documents_current_flags():
     out = _help_output("repro.launch.serve")
     for flag in ("--index-dir", "--verify", "--check-parity",
                  "--parity-mrr-tol", "--cache-blocks", "--no-prefetch",
-                 "--trace-out", "--trace-sample-rate", "--metrics-out"):
+                 "--trace-out", "--trace-sample-rate", "--metrics-out",
+                 "--fusion", "--expand-depth"):
         assert flag in out, f"serve --help no longer documents {flag}"
 
 
@@ -64,7 +65,8 @@ def test_train_selector_help_documents_current_flags():
                  "--chunk-clusters", "--label-cache", "--pos-weight",
                  "--no-bucket", "--use-kernel", "--ckpt-every", "--resume",
                  "--thetas", "--budgets", "--target-recall",
-                 "--target-budget", "--publish", "--serve-check",
+                 "--target-budget", "--expand-depths", "--fusion",
+                 "--publish", "--serve-check",
                  "--trace-out", "--metrics-out"):
         assert flag in out, \
             f"train_selector --help no longer documents {flag}"

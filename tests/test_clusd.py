@@ -124,6 +124,158 @@ def test_fusion_merge_equals_scatter(seed):
                                atol=1e-6)
 
 
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_fusion_merge_equals_scatter_any_multiplicity(seed):
+    """Merge-path == scatter-oracle with ids drawn WITH replacement (a doc
+    may repeat within a side and across sides at any multiplicity) and a
+    ragged valid prefix on the sparse side — for both fusion methods."""
+    rng = np.random.default_rng(seed)
+    D, Ks, Kd, k = 120, 30, 40, 15
+    sid = jnp.asarray(rng.integers(0, D, (3, Ks)), jnp.int32)
+    ss = jnp.asarray(np.sort(rng.random((3, Ks)))[:, ::-1].copy(),
+                     jnp.float32)
+    sm = jnp.arange(Ks)[None, :] < jnp.asarray(
+        rng.integers(0, Ks + 1, (3, 1)))             # ragged prefix
+    did = jnp.asarray(rng.integers(0, D, (3, Kd)), jnp.int32)
+    ds = jnp.asarray(rng.random((3, Kd)), jnp.float32)
+    dm = jnp.asarray(rng.random((3, Kd)) > 0.2)
+    a = 0.43                                         # != 0.5: no cross-side
+    for method in fusion_lib.FUSION_METHODS:         # rank ties under rrf
+        i1, s1 = fusion_lib.fuse_topk(
+            sid, ss, did, ds, dm, D, a, k, sparse_mask=sm, method=method)
+        i2, s2 = fusion_lib.fuse_topk_merge(
+            sid, ss, did, ds, dm, a, k, sentinel=D + 7, sparse_mask=sm,
+            method=method)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-5, atol=1e-6, err_msg=method)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2),
+                                      err_msg=method)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_fusion_ignores_sparse_padding(seed):
+    """Regression for the padding bug: entries behind the sparse valid
+    mask must not shift normalization, ranks, or the fused top-k — two
+    different junk tails under the same mask fuse bitwise identically."""
+    rng = np.random.default_rng(seed)
+    D, Ks, Kd, k = 200, 24, 24, 10
+    n_valid = int(rng.integers(1, Ks))
+    sid_v = rng.choice(D, n_valid, replace=False).astype(np.int32)
+    ss_v = np.sort(rng.random(n_valid).astype(np.float32))[::-1].copy()
+    sm = jnp.asarray((np.arange(Ks) < n_valid)[None, :])
+    did = jnp.asarray(rng.choice(D, (1, Kd), replace=False), jnp.int32)
+    ds = jnp.asarray(rng.random((1, Kd)), jnp.float32)
+    dm = jnp.ones((1, Kd), bool)
+
+    def pad(junk_ids, junk_scores):
+        sid = np.concatenate([sid_v, junk_ids]).astype(np.int32)
+        ss = np.concatenate([ss_v, junk_scores]).astype(np.float32)
+        return jnp.asarray(sid[None, :]), jnp.asarray(ss[None, :])
+
+    pads = [pad(rng.integers(0, D, Ks - n_valid),
+                rng.random(Ks - n_valid) * 10 - 5),
+            pad(np.zeros(Ks - n_valid, np.int64),
+                np.full(Ks - n_valid, 99.0))]
+    for method in fusion_lib.FUSION_METHODS:
+        outs = []
+        for sid, ss in pads:
+            i1, s1 = fusion_lib.fuse_topk(sid, ss, did, ds, dm, D, 0.5, k,
+                                          sparse_mask=sm, method=method)
+            i2, s2 = fusion_lib.fuse_topk_merge(sid, ss, did, ds, dm, 0.5,
+                                                k, sentinel=D + 7,
+                                                sparse_mask=sm,
+                                                method=method)
+            outs.append((np.asarray(i1), np.asarray(s1),
+                         np.asarray(i2), np.asarray(s2)))
+        for got, want in zip(outs[0], outs[1]):
+            np.testing.assert_array_equal(got, want, err_msg=method)
+
+
+def test_rrf_matches_rank_oracle():
+    """Weighted-RRF fused scores equal the textbook sum over both lists:
+    weight / (rrf_k + 1-based rank among valid entries)."""
+    D, k, a, K = 50, 6, 0.4, 60.0
+    sid = np.array([[3, 5, 7, 9]], np.int32)
+    ss = np.array([[9.0, 5.0, 1.0, 0.5]], np.float32)
+    sm = np.array([[True, True, True, False]])     # 9 is padding
+    did = np.array([[5, 2, 11]], np.int32)
+    ds = np.array([[8.0, 6.0, 4.0]], np.float32)
+    dm = np.array([[True, True, False]])           # 11 is a dead slot
+    acc = {}
+    for ids, scores, mask, w in ((sid, ss, sm, a), (did, ds, dm, 1 - a)):
+        order = np.argsort(-scores[0][mask[0]], kind="stable")
+        for rank, j in enumerate(order, start=1):
+            doc = int(ids[0][mask[0]][j])
+            acc[doc] = acc.get(doc, 0.0) + w / (K + rank)
+    want = sorted(acc.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+    ids, scores = fusion_lib.fuse_topk(
+        jnp.asarray(sid), jnp.asarray(ss), jnp.asarray(did),
+        jnp.asarray(ds), jnp.asarray(dm), D, a, k,
+        sparse_mask=jnp.asarray(sm), method="rrf", rrf_k=K)
+    got = list(zip(np.asarray(ids)[0][:len(want)].tolist(),
+                   np.asarray(scores)[0][:len(want)].tolist()))
+    for (gi, gs), (wi, ws) in zip(got, want):
+        assert gi == wi, (got, want)
+        np.testing.assert_allclose(gs, ws, rtol=1e-6)
+
+
+def test_fusion_rejects_unknown_method():
+    z = jnp.zeros((1, 4))
+    zi = jnp.zeros((1, 4), jnp.int32)
+    m = jnp.ones((1, 4), bool)
+    with pytest.raises(ValueError):
+        fusion_lib.fuse_topk(zi, z, zi, z, m, 8, 0.5, 2, method="borda")
+
+
+# ---------------------------------------------------------------------------
+# stage-1 neighbor-graph expansion
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_expand_candidates_invariants(seed):
+    rng = np.random.default_rng(seed)
+    N, n, m, B, depth = 24, 5, 6, 3, 2
+    S = rng.random((N, N)).astype(np.float32)
+    np.fill_diagonal(S, -1.0)                      # graph excludes self
+    nid = np.argsort(-S, axis=1)[:, :m].astype(np.int32)
+    nsim = np.take_along_axis(S, nid, axis=1).astype(np.float32)
+    qc = rng.random((B, N)).astype(np.float32)
+    cand = np.stack([rng.choice(N, n, replace=False)
+                     for _ in range(B)]).astype(np.int32)
+    n_out = min(n * (1 + depth), N)
+    out = np.asarray(stage1_lib.expand_candidates(
+        jnp.asarray(cand), jnp.asarray(nid), jnp.asarray(nsim),
+        jnp.asarray(qc), depth, n_out))
+    assert out.shape == (B, n_out) and out.dtype == np.int32
+    for b in range(B):
+        assert list(out[b, :n]) == list(cand[b])   # seed prefix untouched
+        assert len(set(out[b].tolist())) == n_out  # all-distinct
+        assert ((0 <= out[b]) & (out[b] < N)).all()
+        reach = ({int(c) for s in cand[b] for c in nid[s, :depth]}
+                 - set(cand[b].tolist()))
+        take = min(len(reach), n_out - n)
+        # graph-reached clusters fill the extension before any IVF fill
+        assert set(out[b, n:n + take].tolist()) <= reach
+        if len(reach) <= n_out - n:
+            assert reach <= set(out[b, n:].tolist())
+    # depth 0 (or no headroom) is the identity — the current pipeline
+    out0 = stage1_lib.expand_candidates(
+        jnp.asarray(cand), jnp.asarray(nid), jnp.asarray(nsim),
+        jnp.asarray(qc), 0, n_out)
+    np.testing.assert_array_equal(np.asarray(out0), cand)
+    same = stage1_lib.expand_candidates(
+        jnp.asarray(cand), jnp.asarray(nid), jnp.asarray(nsim),
+        jnp.asarray(qc), depth, n)
+    np.testing.assert_array_equal(np.asarray(same), cand)
+    with pytest.raises(ValueError):
+        stage1_lib.expand_candidates(
+            jnp.asarray(cand), jnp.asarray(nid), jnp.asarray(nsim),
+            jnp.asarray(qc), depth, N + 1)
+
+
 def test_fused_equals_full_when_all_selected(small_index):
     """If every cluster is selected, CluSD's dense side equals brute force."""
     cfg, corpus, index = small_index

@@ -177,6 +177,69 @@ def test_backend_parity_matrix(case, tmp_path):
                                rtol=1e-4, atol=1e-4, err_msg=case)
 
 
+@pytest.mark.parametrize("method", ("interp", "rrf"))
+def test_fusion_mode_backend_parity(method, tmp_path):
+    """Hybrid serving (fusion method x neighbor-graph expansion) holds the
+    same backend-parity contract as the default pipeline: the three exact
+    stores bitwise-identical, the two PQ encodings mutually exact — and
+    explicit fusion="interp" + expand_depth=0 IS the default config, so
+    current serving is reproduced bitwise by construction."""
+    from repro import index as index_lib
+    from repro.data import synth_corpus, synth_queries
+
+    base = dataclasses.replace(
+        get_config("clusd-msmarco", "smoke"),
+        n_docs=256, dim=32, n_clusters=16, vocab=128, max_postings=64,
+        k_sparse=32, bins=(5, 15, 32), n_candidates=4, max_selected=4,
+        n_neighbors=8, u_bins=4, k_final=16)
+    # the explicit defaults ARE the default config (depth-0 back-compat)
+    assert dataclasses.replace(base, fusion="interp", expand_depth=0) == base
+    assert base.n_candidates_total == base.n_candidates
+    cfg = dataclasses.replace(base, fusion=method, expand_depth=2)
+    assert cfg.n_candidates_total == 12
+    corpus = synth_corpus(11, cfg.n_docs, cfg.dim, cfg.vocab)
+    index = cl.build_index(cfg, jax.random.key(0), corpus.embeddings,
+                           corpus.doc_terms, corpus.doc_weights)
+    qs = synth_queries(13, corpus, 12)
+    emb = np.asarray(corpus.embeddings)
+    pq = quant_lib.train_pq(jax.random.key(1), corpus.embeddings, nsub=8)
+    v1 = str(tmp_path / "v1")
+    v2 = str(tmp_path / "v2")
+    index_lib.write_index(v1, cfg, index, emb, n_shards=3)
+    index_lib.write_index(v2, cfg, index, emb, n_shards=3,
+                          format_version=index_lib.FORMAT_VERSION_PQ, pq=pq)
+    stores = {
+        "inmemory": InMemoryStore(index.embeddings, index.cluster_docs),
+        "disk": DiskStore.create(str(tmp_path / "blocks.bin"),
+                                 index.embeddings, index.cluster_docs),
+        "sharded-disk": index_lib.IndexReader.open(v1, verify="full")
+        .open_store(cluster_docs=index.cluster_docs),
+        "pq": PQStore(pq, index.cluster_docs),
+        "sharded-pq": index_lib.IndexReader.open(v2, verify="full")
+        .open_store(cluster_docs=index.cluster_docs),
+    }
+    results = {}
+    for name, store in stores.items():
+        ids, scores, _ = pipeline.retrieve(cfg, index, store, qs.q_dense,
+                                           qs.q_terms, qs.q_weights)
+        results[name] = (np.asarray(ids), np.asarray(scores))
+    ref_ids, ref_scores = results["inmemory"]
+    for name in ("disk", "sharded-disk"):
+        np.testing.assert_array_equal(results[name][0], ref_ids,
+                                      err_msg=f"{method}:{name}")
+        np.testing.assert_allclose(results[name][1], ref_scores,
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{method}:{name}")
+    np.testing.assert_allclose(results["sharded-pq"][1], results["pq"][1],
+                               rtol=1e-4, atol=1e-4, err_msg=method)
+    # depth 0 under the same fusion method only reorders by fused score;
+    # it must run (static-shape path) and return valid ids
+    ids0, _, _ = pipeline.retrieve(dataclasses.replace(cfg, expand_depth=0),
+                                   index, stores["inmemory"], qs.q_dense,
+                                   qs.q_terms, qs.q_weights)
+    assert ((0 <= np.asarray(ids0)) & (np.asarray(ids0) < cfg.n_docs)).all()
+
+
 def test_host_scoring_kernel_path_matches(tiny):
     """score_selected_host(use_kernel=True) routes the unique-block dots
     through the cluster_score Pallas kernel — same fused results."""

@@ -7,7 +7,16 @@ import subprocess
 import sys
 import textwrap
 
+import jax
+import pytest
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# every test builds a mesh via jax.make_mesh(..., axis_types=AxisType.Auto)
+pytestmark = pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType"),
+    reason="installed jax lacks jax.sharding.AxisType / make_mesh "
+           "axis_types= (needs jax >= 0.6)")
 
 
 def _run(code):

@@ -441,3 +441,106 @@ def test_publish_rejects_non_lstm_and_bad_params(built, tmp_path):
                                    selector="mlp")
     with pytest.raises(ValueError):
         train_lib.publish_selector(work, {"wx": np.zeros((3, 12))})
+
+
+# ---------------------------------------------------------------------------
+# hybrid candidate generation: relabel + expansion sweep + publish
+# ---------------------------------------------------------------------------
+
+def test_relabel_for_config_matches_streamed_labels(built, label_set):
+    """relabel_for_config at the SAME depth reproduces the streamed label
+    set exactly (same stage-1, same dense ids => same supervision); at a
+    deeper depth the candidate prefix and its labels are preserved."""
+    _, _, _, out_v1, _, qs = built
+    _, lcfg, lindex, _ = _open(out_v1)
+    same = train_lib.relabel_for_config(
+        lcfg, lindex, qs.q_dense, qs.q_terms, qs.q_weights,
+        label_set.dense_ids)
+    np.testing.assert_array_equal(same.cand, label_set.cand)
+    np.testing.assert_array_equal(same.feats, label_set.feats)
+    np.testing.assert_array_equal(same.labels, label_set.labels)
+    n = lcfg.n_candidates
+    deep_cfg = dataclasses.replace(lcfg, expand_depth=2)
+    assert deep_cfg.n_candidates_total > n
+    deep = train_lib.relabel_for_config(
+        deep_cfg, lindex, qs.q_dense, qs.q_terms, qs.q_weights,
+        label_set.dense_ids)
+    assert deep.cand.shape[1] == deep_cfg.n_candidates_total
+    np.testing.assert_array_equal(deep.cand[:, :n], label_set.cand)
+    np.testing.assert_array_equal(deep.labels[:, :n], label_set.labels)
+    # expansion can only add positives, never lose them
+    assert (deep.labels.sum(axis=1) >= label_set.labels.sum(axis=1)).all()
+
+
+def test_expansion_sweep_depth0_equals_calibration_table(built, label_set):
+    cfg, _, _, out_v1, _, qs = built
+    _, lcfg, lindex, store = _open(out_v1)
+    params, _ = train_lib.train_selector(cfg, jax.random.key(2),
+                                         label_set.feats, label_set.labels,
+                                         epochs=3)
+    thetas, budgets = [0.02, 0.2], [2, 4]
+    sweep = train_lib.expansion_sweep(
+        lcfg, lindex, params, qs.q_dense, qs.q_terms, qs.q_weights,
+        label_set.dense_ids, depths=[0, 2], thetas=thetas, budgets=budgets,
+        block_bytes=store.block_bytes)
+    assert [d["depth"] for d in sweep] == [0, 2]
+    # depth-0 rows == the plain calibration table (modulo the depth tags)
+    probs = train_lib.selector_probs(params, label_set.feats)
+    table = train_lib.calibration_table(
+        label_set, probs, np.asarray(lindex.doc_cluster), thetas=thetas,
+        budgets=budgets, block_bytes=store.block_bytes)
+    d0 = [{k: v for k, v in r.items() if k not in ("depth", "n_candidates")}
+          for r in sweep[0]["rows"]]
+    assert d0 == table
+    # a wider stage-1 can only raise the recall ceiling
+    assert sweep[1]["stage1_ceiling"] >= sweep[0]["stage1_ceiling"]
+    assert sweep[1]["n_candidates"] == lcfg.n_candidates * 3
+    for per_depth in sweep:
+        for r in per_depth["rows"]:
+            assert r["depth"] == per_depth["depth"]
+            assert r["n_candidates"] == per_depth["n_candidates"]
+            # expansion changes WHICH clusters compete, not the read cost
+            assert r["est_read_bytes"] <= r["budget"] * store.block_bytes
+
+
+def test_publish_hybrid_fields_roundtrip_and_stage1_reload(built, label_set,
+                                                           tmp_path):
+    """expand_depth/fusion published into the manifest reach a reader's
+    config, and a live engine's reload_selector() recompiles stage 1 so
+    hot-swapped serving matches a fresh engine on the new generation."""
+    cfg, _, _, out_v1, _, qs = built
+    import shutil
+    work = str(tmp_path / "pubhyb")
+    shutil.copytree(out_v1, work)
+    deep_cfg = dataclasses.replace(cfg, expand_depth=1)
+    reader = index_lib.IndexReader.open(work)
+    _, lindex = reader.load_index()
+    ls = train_lib.relabel_for_config(
+        deep_cfg, lindex, qs.q_dense, qs.q_terms, qs.q_weights,
+        label_set.dense_ids)
+    params, _ = train_lib.train_selector(deep_cfg, jax.random.key(2),
+                                         ls.feats, ls.labels, epochs=3)
+    engine = reader.engine(max_batch=8)
+    engine.retrieve(qs.q_dense[:8], qs.q_terms[:8], qs.q_weights[:8])
+
+    with pytest.raises(ValueError):
+        train_lib.publish_selector(work, params, fusion="borda")
+    report = train_lib.publish_selector(
+        work, params, theta=0.1, budget=4, expand_depth=1, fusion="rrf")
+    assert engine.reload_selector() == report["generation"]
+    assert engine.cfg.expand_depth == 1 and engine.cfg.fusion == "rrf"
+    got, _ = engine.retrieve(qs.q_dense[:8], qs.q_terms[:8],
+                             qs.q_weights[:8])
+    engine.close()
+
+    fresh = index_lib.IndexReader.open(work, verify="full")
+    fcfg = fresh.config()
+    assert fcfg.expand_depth == 1 and fcfg.fusion == "rrf"
+    meta = fresh.selector_meta()
+    assert meta["expand_depth"] == 1 and meta["fusion"] == "rrf"
+    with fresh.engine(max_batch=8) as fe:
+        assert fe.stats()["fusion"] == "rrf"
+        assert fe.stats()["expand_depth"] == 1
+        want, _ = fe.retrieve(qs.q_dense[:8], qs.q_terms[:8],
+                              qs.q_weights[:8])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
