@@ -27,7 +27,13 @@ fail on
     est_read_bytes, and land strictly above the baseline (depth-0)
     stage-1 ceiling — expansion exists to buy recall at the same block
     I/O bill, so both rows come from the same run and the gate never
-    skips on host/geometry mismatch.
+    skips on host/geometry mismatch,
+  * the intra-file router-scaling gate: within the FRESH
+    BENCH_serve.json's `router_scaling` section the 3-host scatter-gather
+    QPS must reach >=1.8x the 1-host QPS (same run, same simulated
+    per-host I/O service time, so the ratio is hardware-independent), and
+    no router row may report failed or degraded requests. Skipped with a
+    note when the section is absent (pre-router BENCH files).
 
 Intended CI wiring (see .github/workflows/ci.yml) — the baseline comes
 from the PR's MERGE BASE, not HEAD, so a PR that restamps its own BENCH
@@ -166,6 +172,43 @@ def check_intra_serve(fresh_serve):
     return bad
 
 
+def check_intra_router(fresh_serve):
+    """Baseline-free gates over the router_scaling section of the fresh
+    serve table. Both rows come from the SAME run on the SAME box with the
+    same simulated per-host I/O service time, so the 3-host/1-host QPS
+    ratio is hardware-independent: it measures whether scatter-gather
+    actually overlaps the per-host fetches. Skipped (with a note) when the
+    section is absent — older BENCH files predate the router."""
+    bad = []
+    section = fresh_serve.get("router_scaling")
+    if not section:
+        print("note: router_scaling missing from serve table; router "
+              "scaling gate skipped")
+        return bad
+    by_hosts = {r.get("hosts"): r for r in section
+                if r.get("replication") == 1}
+    one, three = by_hosts.get(1), by_hosts.get(3)
+    if one and three:
+        q1, q3 = one.get("qps_total"), three.get("qps_total")
+        if q1 and q3 and q3 < 1.8 * q1:
+            bad.append(f"[serve:router] 3-host QPS {q3:.1f} < 1.8x "
+                       f"1-host QPS {q1:.1f} (scatter-gather no longer "
+                       f"overlaps per-host I/O)")
+    else:
+        print("note: router_scaling lacks 1-host/3-host rows; scaling "
+              "ratio gate skipped")
+    for r in section:
+        name = r.get("backend", "?")
+        if r.get("failed_requests"):
+            bad.append(f"[serve:router] {name} failed_requests="
+                       f"{r['failed_requests']} (must be 0)")
+        if r.get("degraded_requests"):
+            bad.append(f"[serve:router] {name} degraded_requests="
+                       f"{r['degraded_requests']} (replicas must cover "
+                       f"every shard in these rows)")
+    return bad
+
+
 def check(baseline_serve, fresh_serve, baseline_index, fresh_index,
           tol=0.20, mrr_tol=0.02, size_tol=0.20):
     """Returns a list of violation strings (empty = pass)."""
@@ -281,6 +324,7 @@ def main(argv=None):
                        recall_tol=args.mrr_tol)
     bad += check_intra_train(_load_optional(args.fresh_train))
     bad += check_intra_serve(_load(args.fresh_serve))
+    bad += check_intra_router(_load(args.fresh_serve))
     if bad:
         print("BENCH REGRESSION:")
         for line in bad:

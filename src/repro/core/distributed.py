@@ -76,14 +76,51 @@ def build_blocked_index(cfg, index, embeddings=None):
         old_to_new=old_to_new, lstm_params=index.lstm_params)
 
 
+def shard_ranges(n_clusters, n_shards):
+    """Balanced contiguous cluster partition: shard s owns
+    [lo_s, hi_s) with sizes differing by at most 1 (the first
+    `n_clusters % n_shards` shards get the extra cluster). For divisible
+    n_clusters this is exactly the old equal split. Returns a list of
+    (lo, hi) tuples covering [0, n_clusters) with no gaps."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n_clusters < n_shards:
+        raise ValueError(f"cannot split {n_clusters} clusters over "
+                         f"{n_shards} shards (need >= 1 each)")
+    bounds = [(s * n_clusters) // n_shards for s in range(n_shards + 1)]
+    return list(zip(bounds[:-1], bounds[1:]))
+
+
+def owner_of(cluster_ids, ranges):
+    """Shard index owning each cluster id, per `ranges` (a list of
+    (lo, hi) as from shard_ranges — contiguous ascending). Vectorized
+    searchsorted over the range upper bounds; ids outside every range
+    raise (ownership must be total)."""
+    his = np.asarray([hi for _, hi in ranges], np.int64)
+    los = np.asarray([lo for lo, _ in ranges], np.int64)
+    ids = np.asarray(cluster_ids, np.int64)
+    s = np.searchsorted(his, ids, side="right")
+    if np.any((ids < 0) | (s >= len(his))) or np.any(ids < los[np.minimum(
+            s, len(his) - 1)]):
+        raise ValueError("cluster id outside every shard range")
+    return s
+
+
 def shard_postings_by_owner(bidx: BlockedIndex, n_shards):
     """Repartition each term's posting list by doc owner shard so sparse
-    scoring is local: returns (V, n_shards, P_shard) ids + weights."""
+    scoring is local: returns (V, n_shards, P_shard) ids + weights.
+
+    Ownership is the balanced contiguous split from `shard_ranges` —
+    identical to the old `cluster // (N // n_shards)` rule when N divides
+    evenly, but total for any N (the old rule assigned tail clusters of a
+    non-divisible N to a nonexistent shard and silently dropped their
+    postings from every shard)."""
     V, P = bidx.postings_docs.shape
     N, cap = bidx.blocks.shape[:2]
-    n_local = N // n_shards
+    his = np.asarray([hi for _, hi in shard_ranges(N, n_shards)], np.int64)
     owner = np.where(bidx.postings_docs >= 0,
-                     (bidx.postings_docs // cap) // n_local, -1)
+                     np.searchsorted(his, bidx.postings_docs // cap,
+                                     side="right"), -1)
     p_shard = 0
     for s in range(n_shards):
         p_shard = max(p_shard, int((owner == s).sum(axis=1).max()))

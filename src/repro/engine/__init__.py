@@ -7,14 +7,20 @@ from repro.engine.cache import BlockCache
 from repro.engine.pipeline import (
     fetch_unique_blocks, retrieve, score_and_fuse, score_selected,
     score_selected_host)
+from repro.engine.router import (
+    MERGE_SENTINEL, EngineHost, HostDown, HostRequest, HostResponse,
+    ShardPlacement, ShardRouter, merge_partial_topk)
 from repro.engine.server import RetrievalEngine, ServeStats, bucket_size
 from repro.engine.stores import (
     ClusterStore, DiskStore, InMemoryStore, PQStore, ShardedDiskStore,
     ShardedPQStore, store_for_index)
 
 __all__ = [
-    "BlockCache", "ClusterStore", "DiskStore", "InMemoryStore", "PQStore",
-    "RetrievalEngine", "ServeStats", "ShardedDiskStore", "ShardedPQStore",
-    "bucket_size", "fetch_unique_blocks", "retrieve", "score_and_fuse",
-    "score_selected", "score_selected_host", "store_for_index",
+    "BlockCache", "ClusterStore", "DiskStore", "EngineHost", "HostDown",
+    "HostRequest", "HostResponse", "InMemoryStore", "MERGE_SENTINEL",
+    "PQStore", "RetrievalEngine", "ServeStats", "ShardPlacement",
+    "ShardRouter", "ShardedDiskStore", "ShardedPQStore", "bucket_size",
+    "fetch_unique_blocks", "merge_partial_topk", "retrieve",
+    "score_and_fuse", "score_selected", "score_selected_host",
+    "store_for_index",
 ]

@@ -40,6 +40,41 @@ from repro.obs import NOOP_TRACE
 
 
 # ---------------------------------------------------------------------------
+# compiled stage builders (shared by RetrievalEngine and ShardRouter)
+# ---------------------------------------------------------------------------
+# Each returns a fresh jitted fn closing over (cfg, index/codebooks) AS
+# PASSED — callers key them per request bucket and drop them when the
+# closed-over state moves (index reloads; selector publishes for stage2).
+
+def build_stage1_fn(cfg, index):
+    """Sparse retrieval + Stage-I candidate generation.
+    fn(qd, qt, qw) -> (sparse_ids, sparse_scores, cand, feats)."""
+    def run(qd, qt, qw):
+        sid, ss = sparse_lib.sparse_retrieve_topk(
+            index.sparse_index, qt, qw, cfg.k_sparse)
+        s1 = clusd_lib.stage1_candidates(cfg, index, qd, sid, ss)
+        return sid, ss, s1["cand"], s1["feats"]
+    return jax.jit(run)
+
+
+def build_stage2_fn(cfg, index):
+    """Stage-II LSTM cluster selection.
+    fn(cand, feats) -> (sel_ids, sel_mask)."""
+    def run(cand, feats):
+        s2 = clusd_lib.stage2_select(cfg, index, cand, feats)
+        return s2["sel_ids"], s2["sel_mask"]
+    return jax.jit(run)
+
+
+def build_lut_fn(codebooks, rotation):
+    """Per-query ADC LUT build (OPQ rotation folded in).
+    fn(qd) -> (B, nsub, 256) float32."""
+    cb = jnp.asarray(codebooks)
+    rot = None if rotation is None else jnp.asarray(rotation)
+    return jax.jit(lambda qd: adc_ops.adc_tables(qd, cb, rot))
+
+
+# ---------------------------------------------------------------------------
 # dense scoring of selected clusters
 # ---------------------------------------------------------------------------
 

@@ -56,12 +56,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import clusd as clusd_lib
-from repro.core import sparse as sparse_lib
 from repro.engine import pipeline as pipe_lib
 from repro.engine import stores as stores_lib
 from repro.engine.cache import BlockCache
-from repro.kernels import adc as adc_ops
 from repro.obs import NOOP_TRACE, MetricsRegistry, Tracer
 
 
@@ -570,34 +567,19 @@ class RetrievalEngine:
         return self._fn("device", bucket, build)
 
     def _stage1_fn(self, bucket):
-        def build():
-            def run(qd, qt, qw):
-                sid, ss = sparse_lib.sparse_retrieve_topk(
-                    self.index.sparse_index, qt, qw, self.cfg.k_sparse)
-                s1 = clusd_lib.stage1_candidates(self.cfg, self.index, qd,
-                                                 sid, ss)
-                return sid, ss, s1["cand"], s1["feats"]
-            return jax.jit(run)
-        return self._fn("stage1", bucket, build)
+        return self._fn("stage1", bucket,
+                        lambda: pipe_lib.build_stage1_fn(self.cfg, self.index))
 
     def _stage2_fn(self, bucket):
-        def build():
-            def run(cand, feats):
-                s2 = clusd_lib.stage2_select(self.cfg, self.index, cand, feats)
-                return s2["sel_ids"], s2["sel_mask"]
-            return jax.jit(run)
-        return self._fn("stage2", bucket, build)
+        return self._fn("stage2", bucket,
+                        lambda: pipe_lib.build_stage2_fn(self.cfg, self.index))
 
     def _lut_fn(self, bucket):
         """Per-query ADC LUT build (rotation folded in). Keyed per bucket
         only — survives selector reloads (closes over codebooks alone)."""
-        def build():
-            codebooks = jnp.asarray(self.store.codebooks)
-            rotation = None if self.store.rotation is None \
-                else jnp.asarray(self.store.rotation)
-            return jax.jit(lambda qd: adc_ops.adc_tables(
-                qd, codebooks, rotation))
-        return self._fn("lut", bucket, build)
+        return self._fn("lut", bucket,
+                        lambda: pipe_lib.build_lut_fn(self.store.codebooks,
+                                                      self.store.rotation))
 
     def _fused_fn(self, kind, bucket, ubucket):
         """One compiled score->fuse->top-k tail per (mode, batch bucket,

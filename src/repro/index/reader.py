@@ -210,13 +210,31 @@ class IndexReader:
             bin_ids=jnp.asarray(self.array("bin_ids")))
         return cfg, index
 
-    def open_store(self, cluster_docs=None, stats: IOStats = None):
+    def n_block_shards(self):
+        return len(self.manifest["block_shards"])
+
+    def open_store(self, cluster_docs=None, stats: IOStats = None,
+                   shards=None):
         """Sharded store over the block shard files (mmap, read-only):
         ShardedDiskStore for v1 float blocks, ShardedPQStore for v2 code
         shards (decode-on-fetch ADC). The generation's tombstone bitmap is
-        handed to the store, which masks deleted slots at fetch time."""
+        handed to the store, which masks deleted slots at fetch time.
+
+        `shards`: optional iterable of shard indices (into the manifest's
+        block_shards list) to open a SUBSET store over — the multi-host
+        serving tier gives each host a store over only the shards it
+        owns. Fetching a cluster outside the subset raises; cluster_docs
+        and tombstones stay full-size (they are global tables)."""
         g = self.geometry
-        shards = self.manifest["block_shards"]
+        all_shards = self.manifest["block_shards"]
+        if shards is None:
+            shards = all_shards
+        else:
+            idx = sorted(set(int(s) for s in shards))
+            if not idx or idx[0] < 0 or idx[-1] >= len(all_shards):
+                raise ValueError(f"shard subset {idx} out of range for "
+                                 f"{len(all_shards)} block shards")
+            shards = [all_shards[i] for i in idx]
         paths = [os.path.join(self.index_dir, s["file"]) for s in shards]
         ranges = [(s["cluster_lo"], s["cluster_hi"]) for s in shards]
         tomb = self.tombstones()

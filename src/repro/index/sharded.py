@@ -63,10 +63,19 @@ class _ShardedBlockFiles:
         self.record_dtype = np.dtype(record_dtype)
         self._lo = np.asarray([lo for lo, _ in shard_ranges], np.int64)
         self._hi = np.asarray([hi for _, hi in shard_ranges], np.int64)
-        if (self._lo[0] != 0 or np.any(self._lo[1:] != self._hi[:-1])):
-            raise ValueError(f"shard ranges must tile [0, N): "
+        # ranges must be ascending and non-overlapping; gaps ARE allowed:
+        # a multi-host serving tier opens one store per host over only the
+        # shard files that host owns (engine/router.py), so the ranges no
+        # longer have to tile [0, N). Fetching a cluster in a gap raises.
+        if np.any(self._lo >= self._hi) or np.any(self._lo[1:] < self._hi[:-1]):
+            raise ValueError(f"shard ranges must be ascending and "
+                             f"non-overlapping: "
                              f"{list(zip(self._lo, self._hi))}")
         self.n_clusters = int(self._hi[-1])
+        self.owned_ranges = [(int(lo), int(hi))
+                             for lo, hi in zip(self._lo, self._hi)]
+        self.is_subset = bool(self._lo[0] != 0
+                              or np.any(self._lo[1:] != self._hi[:-1]))
         self._mms = [
             np.memmap(p, dtype=self.record_dtype, mode="r",
                       shape=(int(hi - lo),) + self.record_shape)
@@ -121,6 +130,13 @@ class _ShardedBlockFiles:
         t0 = time.perf_counter()
         out = np.empty((n,) + self.record_shape, self.record_dtype)
         sid = np.searchsorted(self._hi, ids, side="right")
+        oob = (ids < 0) | (sid >= len(self._mms))
+        if np.any(oob) or np.any(
+                ids < self._lo[np.minimum(sid, len(self._mms) - 1)]):
+            bad = ids[oob | (ids < self._lo[np.minimum(
+                sid, len(self._mms) - 1)])]
+            raise KeyError(f"cluster ids {bad[:8].tolist()} not owned by "
+                           f"this store (owned ranges {self.owned_ranges})")
         # split at shard changes OR non-adjacent ids; coalesce inside a run
         brk = np.flatnonzero((np.diff(ids) != 1) | (np.diff(sid) != 0)) + 1
         bounds = np.concatenate([[0], brk, [n]])

@@ -33,6 +33,21 @@ trace JSON for Perfetto), sampled at --trace-sample-rate; --metrics-out
 dumps the engine metrics registry (JSON or Prometheus text by suffix).
 Catalog: docs/OBSERVABILITY.md.
 
+--hosts N (with --index-dir) serves through the multi-host scatter-gather
+tier (engine/router.py) instead of a single engine: a ShardRouter runs
+sparse retrieval + Stage I/II replicated and scatters the selected
+clusters to N simulated hosts, each owning a balanced subset of the index
+block shards behind its own store + cache; per-host partial top-k lists
+merge under the exact (score desc, doc id asc) rule and fuse with the
+sparse side — bitwise-identical results to the single-host engine under
+interp fusion. --replication R places each shard on R hosts (replica
+failover); --host-timeout-ms bounds each scatter leg; --kill-host I kills
+host I after the first batch (fault injection: with R >= 2 serving must
+continue with zero failed requests — the CI router-smoke job asserts
+this plus parity vs the single-host engine). --check-parity on this path
+replays the queries through a single-host engine and exits non-zero on
+any id mismatch. Router traces add scatter/gather/merge spans.
+
 --fusion overrides the final-list fusion method (interp = paper min-max
 interpolation, rrf = weighted reciprocal-rank fusion); --expand-depth N
 deepens Stage-I candidates through the cluster neighbor graph (LADR-style
@@ -48,6 +63,9 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/idx \
       --queries 64 [--verify full] [--check-parity [--parity-mrr-tol T]] \
       [--trace-out trace.jsonl] [--metrics-out metrics.json]
+  PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/idx \
+      --hosts 3 --replication 2 [--host-timeout-ms 10000] [--kill-host 0] \
+      --check-parity [--trace-out trace.jsonl]
 """
 
 import argparse
@@ -92,6 +110,70 @@ def _write_obs(args, engine):
               f"sample rate {engine.tracer.sample_rate})")
 
 
+def serve_from_router(args, reader, cfg, index, test_q):
+    """Serve through the multi-host scatter-gather tier (--hosts N)."""
+    from repro import index as index_lib
+    from repro.engine import ShardRouter
+
+    trace_rate = args.trace_sample_rate if args.trace_out else None
+    with ShardRouter.local(
+            reader, n_hosts=args.hosts, replication=args.replication,
+            cfg=cfg, index=index, max_batch=args.batch,
+            cache_capacity=args.cache_blocks,
+            host_timeout=args.host_timeout_ms / 1e3,
+            trace_sample_rate=trace_rate) as router:
+        all_ids = []
+        for bi, i in enumerate(range(0, args.queries, args.batch)):
+            ids, _ = router.retrieve(test_q.q_dense[i:i + args.batch],
+                                     test_q.q_terms[i:i + args.batch],
+                                     test_q.q_weights[i:i + args.batch])
+            all_ids.append(np.asarray(ids))
+            if args.kill_host is not None and bi == 0:
+                router.hosts[args.kill_host].kill()
+                print(f"injected failure: host {args.kill_host} killed "
+                      f"after batch 0 (replication {args.replication})")
+        ids = np.concatenate(all_ids)
+        st = router.stats()
+        print(f"router: {st['hosts']} hosts x replication "
+              f"{st['replication']} over {st['n_shards']} shards, "
+              f"generation {st['generation']}")
+        print(f"served {args.queries} queries: "
+              f"MRR@10={mrr_at(ids, test_q.rel_doc):.4f}, "
+              f"failed={st['failed_requests']} "
+              f"degraded={st['degraded_requests']} "
+              f"failovers={st['failovers']} retries={st['retries']} "
+              f"missing_shards={st['missing_shards']}")
+        _write_obs(args, router)
+
+        ok = True
+        if args.check_parity:
+            # reference: a fresh single-host engine over the same index —
+            # results must match exactly (same pipeline, v1 and v2 alike)
+            ref_reader = index_lib.IndexReader.open(args.index_dir,
+                                                    verify="none")
+            refs = []
+            with ref_reader.engine(max_batch=args.batch,
+                                   prefetch=False) as eng:
+                for i in range(0, args.queries, args.batch):
+                    r, _ = eng.retrieve(test_q.q_dense[i:i + args.batch],
+                                        test_q.q_terms[i:i + args.batch],
+                                        test_q.q_weights[i:i + args.batch])
+                    refs.append(np.asarray(r))
+            ref_ids = np.concatenate(refs)
+            if not np.array_equal(ids, ref_ids):
+                bad = int((ids != ref_ids).any(axis=1).sum())
+                print(f"PARITY FAIL: {bad}/{args.queries} queries differ "
+                      f"from the single-host engine")
+                ok = False
+            else:
+                print(f"parity OK: {args.hosts}-host scatter-gather matches "
+                      f"the single-host engine exactly")
+        if st["failed_requests"]:
+            print(f"FAIL: {st['failed_requests']} failed request(s)")
+            ok = False
+    return 0 if ok else 1
+
+
 def serve_from_index(args):
     """Serve a persistent index built by repro.launch.build_index."""
     from repro import index as index_lib
@@ -109,6 +191,9 @@ def serve_from_index(args):
     corpus = synth_corpus(meta["seed"], meta["n_docs"], meta["dim"],
                           meta["vocab"])
     test_q = synth_queries(9, corpus, args.queries)
+
+    if args.hosts:
+        return serve_from_router(args, reader, cfg, index, test_q)
 
     trace_rate = args.trace_sample_rate if args.trace_out else None
     with reader.engine(cfg=cfg, index=index, max_batch=args.batch,
@@ -203,6 +288,20 @@ def main():
                          "(1 + depth) at the same selection budget)")
     ap.add_argument("--cache-blocks", type=int, default=512)
     ap.add_argument("--no-prefetch", action="store_true")
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="with --index-dir: serve through the multi-host "
+                         "scatter-gather router over N simulated hosts "
+                         "(0 = single-host engine)")
+    ap.add_argument("--replication", type=int, default=1,
+                    help="replicas per index shard across the host fleet "
+                         "(R >= 2 survives any R-1 host failures)")
+    ap.add_argument("--host-timeout-ms", type=float, default=10000.0,
+                    help="per-host scatter-leg timeout before the router "
+                         "retries / fails over to a replica")
+    ap.add_argument("--kill-host", type=int, default=None, metavar="I",
+                    help="fault injection: kill host I after the first "
+                         "batch (with --replication >= 2 serving must "
+                         "continue with zero failed requests)")
     ap.add_argument("--index-dir", default=None,
                     help="serve a built index (repro.launch.build_index) "
                          "instead of rebuilding in memory")

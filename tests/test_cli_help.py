@@ -47,7 +47,8 @@ def test_serve_help_documents_current_flags():
     for flag in ("--index-dir", "--verify", "--check-parity",
                  "--parity-mrr-tol", "--cache-blocks", "--no-prefetch",
                  "--trace-out", "--trace-sample-rate", "--metrics-out",
-                 "--fusion", "--expand-depth"):
+                 "--fusion", "--expand-depth", "--hosts", "--replication",
+                 "--host-timeout-ms", "--kill-host"):
         assert flag in out, f"serve --help no longer documents {flag}"
 
 

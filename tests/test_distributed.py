@@ -1,18 +1,33 @@
-"""Multi-device tests (8 virtual CPU devices via subprocess so the main
-pytest process keeps its single-device view)."""
+"""Distributed CluSD tests.
 
+Two tiers, skipped independently:
+
+  * pure-host invariants of the blocked layout + shard ownership
+    (build_blocked_index, shard_ranges/owner_of,
+    shard_postings_by_owner) — run everywhere, no mesh needed; these
+    pin the non-divisible-N ownership fix (the old
+    `cluster // (N // n_shards)` rule assigned tail clusters to a
+    nonexistent shard and silently dropped their postings)
+  * multi-device mesh tests (8 virtual CPU devices via subprocess so the
+    main pytest process keeps its single-device view) — skip on jax
+    builds without jax.sharding.AxisType
+"""
+
+import dataclasses
 import os
 import subprocess
 import sys
 import textwrap
 
 import jax
+import numpy as np
 import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-# every test builds a mesh via jax.make_mesh(..., axis_types=AxisType.Auto)
-pytestmark = pytest.mark.skipif(
+# mesh tests build via jax.make_mesh(..., axis_types=AxisType.Auto); the
+# pure-host layout/ownership tests below run on any jax
+needs_mesh = pytest.mark.skipif(
     not hasattr(jax.sharding, "AxisType"),
     reason="installed jax lacks jax.sharding.AxisType / make_mesh "
            "axis_types= (needs jax >= 0.6)")
@@ -29,6 +44,7 @@ def _run(code):
     return r.stdout
 
 
+@needs_mesh
 def test_sharded_train_step_matches_single_device():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses
@@ -72,6 +88,7 @@ def test_sharded_train_step_matches_single_device():
     assert "OK sharded" in out
 
 
+@needs_mesh
 def test_distributed_clusd_serve_matches_host():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
@@ -119,6 +136,7 @@ def test_distributed_clusd_serve_matches_host():
     assert "OK dist overlap" in out
 
 
+@needs_mesh
 def test_compressed_psum_shardmap():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
@@ -148,6 +166,7 @@ def test_compressed_psum_shardmap():
     assert "OK compressed psum" in out
 
 
+@needs_mesh
 def test_elastic_checkpoint_restore_new_mesh():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np, tempfile
@@ -170,3 +189,112 @@ def test_elastic_checkpoint_restore_new_mesh():
         print("OK elastic restore")
     """)
     assert "OK elastic restore" in out
+
+
+# ---------------------------------------------------------------------------
+# pure-host layout + ownership invariants (no mesh; run on any jax)
+# ---------------------------------------------------------------------------
+
+def _tiny_blocked():
+    from repro.configs import get_config
+    from repro.core import clusd as cl, distributed as dist
+    from repro.data import synth_corpus
+
+    cfg = dataclasses.replace(get_config("clusd-msmarco", "smoke"),
+                              n_docs=300, dim=16, n_clusters=9, vocab=128,
+                              max_postings=64, k_sparse=32,
+                              bins=(3, 6, 9), n_candidates=6,
+                              max_selected=3, n_neighbors=4, u_bins=3,
+                              k_final=16)
+    corpus = synth_corpus(0, cfg.n_docs, cfg.dim, cfg.vocab)
+    index = cl.build_index(cfg, jax.random.key(0), corpus.embeddings,
+                           corpus.doc_terms, corpus.doc_weights)
+    return cfg, corpus, index, dist.build_blocked_index(cfg, index)
+
+
+def test_blocked_index_roundtrip_invariants():
+    """doc id = c*cap + s renumbering is a bijection on live docs, blocks
+    carry the right embeddings, and postings renumber consistently."""
+    _, corpus, index, bidx = _tiny_blocked()
+    cd = np.asarray(index.cluster_docs)
+    N, cap = cd.shape
+    assert bidx.blocks.shape[:2] == (N, cap)
+    # bijection: every live doc appears exactly once, at the slot its
+    # cluster_docs entry names
+    o2n = bidx.old_to_new
+    live = o2n >= 0
+    assert live.sum() == (cd >= 0).sum()
+    assert len(np.unique(o2n[live])) == int(live.sum())
+    c_idx, s_idx = np.nonzero(cd >= 0)
+    np.testing.assert_array_equal(
+        o2n[cd[c_idx, s_idx]], c_idx * cap + s_idx)
+    # blocked id -> cluster is pure arithmetic
+    np.testing.assert_array_equal((o2n[live] // cap),
+                                  np.asarray(index.doc_cluster)[live])
+    # block contents match the embeddings they renumber
+    emb = np.asarray(corpus.embeddings)
+    np.testing.assert_array_equal(bidx.blocks[c_idx, s_idx],
+                                  emb[cd[c_idx, s_idx]])
+    np.testing.assert_array_equal(bidx.valid, cd >= 0)
+    # postings renumbered with pads preserved
+    pd_old = np.asarray(index.sparse_index.postings_docs)
+    assert bidx.postings_docs.shape == pd_old.shape
+    np.testing.assert_array_equal(bidx.postings_docs < 0, pd_old < 0)
+    real = pd_old >= 0
+    np.testing.assert_array_equal(bidx.postings_docs[real],
+                                  o2n[pd_old[real]])
+
+
+def test_shard_ranges_balanced_total():
+    from repro.core import distributed as dist
+    for n_clusters in (1, 7, 8, 9, 64, 65):
+        for n_shards in (1, 2, 3, 4, 8):
+            if n_clusters < n_shards:
+                with pytest.raises(ValueError):
+                    dist.shard_ranges(n_clusters, n_shards)
+                continue
+            ranges = dist.shard_ranges(n_clusters, n_shards)
+            assert ranges[0][0] == 0 and ranges[-1][1] == n_clusters
+            sizes = [hi - lo for lo, hi in ranges]
+            assert all(a == b for (_, a), (b, _)
+                       in zip(ranges[:-1], ranges[1:]))   # no gaps
+            assert max(sizes) - min(sizes) <= 1           # balanced
+            # ownership total + consistent with the ranges
+            owner = dist.owner_of(np.arange(n_clusters), ranges)
+            for s, (lo, hi) in enumerate(ranges):
+                np.testing.assert_array_equal(owner[lo:hi], s)
+    with pytest.raises(ValueError):
+        dist.owner_of([7], dist.shard_ranges(7, 2))       # id == n_clusters
+
+
+def test_shard_postings_by_owner_covers_non_divisible():
+    """Every posting lands on exactly one shard — the shard owning its
+    doc's cluster — including when n_clusters % n_shards != 0 (the old
+    owner rule silently dropped the tail clusters' postings)."""
+    from repro.core import distributed as dist
+    _, _, _, bidx = _tiny_blocked()
+    N, cap = bidx.blocks.shape[:2]
+    assert N == 9
+    for n_shards in (2, 3, 4):             # 9 % 2, 9 % 4 != 0
+        docs, ws = dist.shard_postings_by_owner(bidx, n_shards)
+        V = bidx.postings_docs.shape[0]
+        assert docs.shape[:2] == (V, n_shards)
+        ranges = dist.shard_ranges(N, n_shards)
+        total = 0
+        for t in range(V):
+            orig = bidx.postings_docs[t]
+            orig_real = np.sort(orig[orig >= 0])
+            got = docs[t][docs[t] >= 0]
+            # nothing dropped, nothing duplicated
+            np.testing.assert_array_equal(np.sort(got), orig_real)
+            total += len(got)
+            # every posting sits on the shard owning its cluster
+            for s in range(n_shards):
+                mine = docs[t, s][docs[t, s] >= 0]
+                if len(mine):
+                    np.testing.assert_array_equal(
+                        dist.owner_of(mine // cap, ranges), s)
+                # weights travel with their docs
+                k = len(mine)
+                assert (ws[t, s, k:] == 0).all()
+        assert total == int((bidx.postings_docs >= 0).sum())
