@@ -33,7 +33,13 @@ fail on
     QPS must reach >=1.8x the 1-host QPS (same run, same simulated
     per-host I/O service time, so the ratio is hardware-independent), and
     no router row may report failed or degraded requests. Skipped with a
-    note when the section is absent (pre-router BENCH files).
+    note when the section is absent (pre-router BENCH files),
+  * the intra-file churn-soak gate (BENCH_soak.json, --fresh-soak): the
+    soak run must report failed_requests == 0, an SLO verdict that never
+    paged, a measured p99 within the gate the run itself declared
+    (p99_gate_ms), and all in-run /metrics + /healthz scrapes returning
+    200. Baseline-free — the file is self-judging via the SLOMonitor —
+    and skipped with a note when absent.
 
 Intended CI wiring (see .github/workflows/ci.yml) — the baseline comes
 from the PR's MERGE BASE, not HEAD, so a PR that restamps its own BENCH
@@ -209,6 +215,39 @@ def check_intra_router(fresh_serve):
     return bad
 
 
+def check_intra_soak(fresh_soak):
+    """Baseline-free gates over BENCH_soak.json (benchmarks/soak.py): the
+    churn soak is self-judging — the file records the SLOMonitor's own
+    verdict and the p99 gate the run declared, so the check needs no
+    merge-base copy. Fails when any request failed during churn, when the
+    SLO ever paged (verdict.ok is False or final state == PAGE), when the
+    measured p99 exceeds the recorded gate, or when any in-run endpoint
+    scrape returned non-200. Skipped (with a note) when the file is
+    absent — older checkouts predate the soak."""
+    bad = []
+    if not fresh_soak:
+        print("note: BENCH_soak.json missing; churn-soak gate skipped")
+        return bad
+    failed = fresh_soak.get("failed_requests")
+    if failed:
+        bad.append(f"[soak] failed_requests={failed} (must be 0); "
+                   f"errors: {fresh_soak.get('load_errors')}")
+    slo = fresh_soak.get("slo") or {}
+    verdict = slo.get("verdict") or {}
+    if slo.get("final_state") == "PAGE" or verdict.get("ok") is False:
+        bad.append(f"[soak] SLO paged: final_state="
+                   f"{slo.get('final_state')}, verdict={verdict}")
+    p99, gate = fresh_soak.get("p99_ms"), fresh_soak.get("p99_gate_ms")
+    if p99 is not None and gate is not None and p99 > gate:
+        bad.append(f"[soak] p99 {p99:.2f}ms > declared gate {gate:.2f}ms")
+    for s in fresh_soak.get("scrapes", []):
+        if s.get("status") != 200:
+            bad.append(f"[soak] scrape {s.get('path')} returned "
+                       f"{s.get('status')} (endpoints must stay live "
+                       f"through churn)")
+    return bad
+
+
 def check(baseline_serve, fresh_serve, baseline_index, fresh_index,
           tol=0.20, mrr_tol=0.02, size_tol=0.20):
     """Returns a list of violation strings (empty = pass)."""
@@ -306,6 +345,11 @@ def main(argv=None):
                     default=os.path.join(REPO_ROOT, "BENCH_index.json"))
     ap.add_argument("--fresh-train",
                     default=os.path.join(REPO_ROOT, "BENCH_train.json"))
+    ap.add_argument("--fresh-soak",
+                    default=os.path.join(REPO_ROOT, "BENCH_soak.json"),
+                    help="BENCH_soak.json from benchmarks/soak.py; the "
+                         "gate is baseline-free (the file carries its own "
+                         "SLO verdict) and skips when the file is absent")
     ap.add_argument("--tol", type=float,
                     default=float(os.environ.get("BENCH_REGRESSION_TOL",
                                                  "0.20")),
@@ -325,6 +369,7 @@ def main(argv=None):
     bad += check_intra_train(_load_optional(args.fresh_train))
     bad += check_intra_serve(_load(args.fresh_serve))
     bad += check_intra_router(_load(args.fresh_serve))
+    bad += check_intra_soak(_load_optional(args.fresh_soak))
     if bad:
         print("BENCH REGRESSION:")
         for line in bad:

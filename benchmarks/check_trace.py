@@ -9,8 +9,16 @@ Formats (picked by suffix, matching repro.obs.write_trace):
     every other span's parent precedes it, depth == parent depth + 1, and
     every span lies inside its parent's [t0, t0 + dur] window (0.1 ms
     slack for rounding).
+    Cross-host join (router traces): every `host_serve` span's parent
+    must be a `scatter` span and carry an integer `host` annotation;
+    every child of a `scatter` span must be a `gather` span or carry the
+    `host` annotation (grafted host-side work). The generic parent-window
+    rule already pins grafted spans inside the scatter window.
   * anything else — Chrome trace JSON: {"traceEvents": [...]} where every
     event is a complete ("ph": "X") event with name/ts/dur/pid/tid.
+    Events whose args carry `host` must ride a per-host lane: a string
+    tid ending in `.host<i>` (the exporter routes host-attributed spans
+    to their own lanes).
 
 Exit 0 = valid, 1 = violations (each printed). CI runs this on the
 serve smoke trace (see .github/workflows/ci.yml):
@@ -80,6 +88,32 @@ def check_jsonl(path):
                 bad.append(f"line {ln}: span {d['span']!r} "
                            f"[{d['t0_ms']}, {d['t0_ms'] + d['dur_ms']}] "
                            f"escapes parent {parent['span']!r} window")
+        # cross-host join: host_serve spans are grafted host-side roots
+        # and must hang off a scatter span with host attribution; scatter
+        # children are either the gather leg or grafted host work
+        for ln, d in spans:
+            if d["span"] == "host_serve":
+                parent = by_index.get(d["parent"])
+                if parent is None or parent["span"] != "scatter":
+                    bad.append(f"line {ln}: host_serve parent is "
+                               f"{parent and parent['span']!r}, expected "
+                               f"'scatter' (trace {tid})")
+                if not isinstance(d.get("host"), int) \
+                        or isinstance(d.get("host"), bool):
+                    bad.append(f"line {ln}: host_serve lacks an integer "
+                               f"'host' annotation (got "
+                               f"{d.get('host')!r})")
+            elif d["span"] == "scatter":
+                for cln, c in spans:
+                    if c["parent"] != d["index"] or c["index"] == 0:
+                        continue
+                    host_ok = isinstance(c.get("host"), int) \
+                        and not isinstance(c.get("host"), bool)
+                    if c["span"] != "gather" and not host_ok:
+                        bad.append(
+                            f"line {cln}: scatter child {c['span']!r} is "
+                            f"neither 'gather' nor host-annotated "
+                            f"(trace {tid})")
     names = {d["span"] for spans in traces.values() for _, d in spans}
     return bad, len(traces), names
 
@@ -106,6 +140,14 @@ def check_chrome(path):
                 not isinstance(ev.get("dur"), (int, float)) or \
                 ev.get("dur", 0) < 0:
             bad.append(f"event {i}: non-numeric or negative ts/dur")
+        host = (ev.get("args") or {}).get("host")
+        if host is not None:
+            # host-attributed spans must ride well-formed per-host lanes
+            tid = ev.get("tid")
+            if not isinstance(tid, str) or \
+                    not tid.endswith(f".host{host}"):
+                bad.append(f"event {i}: host={host!r} but tid={tid!r} is "
+                           f"not a '.host{host}' lane")
         names.add(ev.get("name"))
         tids.add(ev.get("tid"))
     return bad, len(tids), names

@@ -1,0 +1,155 @@
+"""Offline recall-gap decomposition from per-query explain telemetry.
+
+Replays the bench query set through a serving engine with an
+ExplainLogger at sample rate 1.0, then joins every explain record
+against the synthetic relevance labels to answer "WHY did each missed
+query miss?" — the question recall@k alone cannot. For every query
+whose relevant doc is absent from the final top-k, the record pins the
+stage that dropped it:
+
+  candidate_miss   the relevant doc's cluster never entered the Stage-I
+                   candidate list (seed + graph expansion) — selector
+                   never saw it
+  selector_miss    the cluster was a candidate but its LSTM probability
+                   fell below theta — the selector said no
+  budget_cutoff    probability cleared theta but the max_selected budget
+                   cut it — more budget would have scored it
+  ranked_out       the cluster WAS selected (or the doc arrived via the
+                   sparse fusion side) yet the doc ranked below k_final —
+                   a scoring/fusion limitation, not a selection one
+
+covered + the four miss buckets partition the query set exactly; the
+run asserts the miss fractions sum to the recall gap (1 - recall), so
+the decomposition cannot silently leak queries. The output JSON reports
+each bucket's count and fraction-of-gap.
+
+Usage (index built by repro.launch.build_index with a trained selector):
+  PYTHONPATH=src python -m benchmarks.explain_report --index-dir /tmp/idx \
+      [--queries 64] [--batch 16] [--out report.json] [--query-seed 9]
+
+Record schema + interpretation guide: docs/OBSERVABILITY.md.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def decompose(records, ids, rel_doc, doc_cluster):
+    """Per-query miss attribution. `records` must be qid-aligned with the
+    query order (sample rate 1.0 on a fresh engine makes qid == row)."""
+    by_qid = {r["qid"]: r for r in records}
+    buckets = {"covered": 0, "candidate_miss": 0, "selector_miss": 0,
+               "budget_cutoff": 0, "ranked_out": 0}
+    rows = []
+    for i in range(len(rel_doc)):
+        rel = int(rel_doc[i])
+        if rel in set(int(x) for x in ids[i]):
+            buckets["covered"] += 1
+            continue
+        rec = by_qid.get(i)
+        if rec is None:
+            raise AssertionError(f"no explain record for qid {i} — "
+                                 f"sample rate must be 1.0")
+        c = int(doc_cluster[rel])
+        cand = [int(x) for x in rec["cand"]]
+        if c not in cand:
+            kind = "candidate_miss"
+            detail = {"rel_cluster": c}
+        elif c in set(int(x) for x in rec["selected"]):
+            kind = "ranked_out"
+            detail = {"rel_cluster": c}
+        else:
+            p = float(rec["probs"][cand.index(c)])
+            if p < float(rec["theta"]):
+                kind = "selector_miss"
+            else:
+                kind = "budget_cutoff"
+            detail = {"rel_cluster": c, "prob": round(p, 4),
+                      "theta": rec["theta"],
+                      "provenance": rec["provenance"][cand.index(c)]}
+        buckets[kind] += 1
+        rows.append({"qid": i, "kind": kind, **detail})
+    return buckets, rows
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="Decompose the recall gap from explain telemetry.",
+        epilog=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--index-dir", required=True,
+                    help="built index with a trained selector")
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--query-seed", type=int, default=9,
+                    help="synth_queries seed (9 = the serve/bench set)")
+    ap.add_argument("--out", default=None,
+                    help="also write the report JSON here")
+    args = ap.parse_args()
+
+    from repro import index as index_lib
+    from repro.data import synth_corpus, synth_queries
+    from repro.obs import ExplainLogger
+
+    reader = index_lib.IndexReader.open(args.index_dir, verify="size")
+    meta = reader.manifest.get("extra", {}).get("corpus")
+    if meta is None or meta.get("kind") != "synthetic":
+        raise SystemExit("index lacks synthetic-corpus metadata; the "
+                         "report regenerates queries from the manifest")
+    corpus = synth_corpus(meta["seed"], meta["n_docs"], meta["dim"],
+                          meta["vocab"])
+    q = synth_queries(args.query_seed, corpus, args.queries)
+
+    explain = ExplainLogger(sample_rate=1.0, capacity=args.queries)
+    with reader.engine(max_batch=args.batch, explain=explain) as engine:
+        all_ids = []
+        for i in range(0, args.queries, args.batch):
+            ids, _ = engine.retrieve(q.q_dense[i:i + args.batch],
+                                     q.q_terms[i:i + args.batch],
+                                     q.q_weights[i:i + args.batch])
+            all_ids.append(np.asarray(ids))
+        ids = np.concatenate(all_ids)
+        doc_cluster = np.asarray(engine.index.doc_cluster)
+        cfg = engine.cfg
+
+    buckets, rows = decompose(explain.recent(), ids, q.rel_doc[:len(ids)],
+                              doc_cluster)
+    n = len(ids)
+    assert sum(buckets.values()) == n, (buckets, n)
+    recall = buckets["covered"] / n
+    gap = 1.0 - recall
+    miss_frac = {k: v / n for k, v in buckets.items() if k != "covered"}
+    # the decomposition must PARTITION the gap — no leaked queries
+    assert abs(sum(miss_frac.values()) - gap) < 1e-9, (miss_frac, gap)
+
+    report = {
+        **C.bench_meta(cfg),
+        "n_queries": n,
+        "k_final": int(cfg.k_final),
+        "theta": float(cfg.theta),
+        "budget": int(cfg.max_selected),
+        "recall_at_k": round(recall, 4),
+        "gap": round(gap, 4),
+        "buckets": buckets,
+        "gap_fractions": {k: round(v, 4) for k, v in miss_frac.items()},
+        "explain_stats": explain.stats(),
+        "misses": rows[:50],
+    }
+    text = json.dumps(report, indent=1)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

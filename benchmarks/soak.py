@@ -1,0 +1,310 @@
+"""Churn soak harness: sustained serving under live index churn, judged
+by the SLOMonitor -> BENCH_soak.json (seeds ROADMAP item 4).
+
+A load-generator thread replays the bench query set through a serving
+engine (`IndexReader.engine`) for --duration seconds while the main
+thread applies --generations rounds of churn through the atomic hot-
+reload path: a synthetic upsert/delete delta (`write_index_delta` +
+`engine.reload_index`), a selector republish (`publish_selector` +
+`engine.reload_selector`), and a final `compact_index` + reload. The
+whole run is scored by `repro.obs.SLOMonitor` over the engine's own
+MetricsRegistry — the soak maintains three soak.* metrics the default
+objectives read:
+
+  soak.requests / soak.failed_requests   counters, one per retrieve call
+  soak.recall_drift                      gauge: baseline MRR@10 minus the
+                                         latest pass's MRR@10, masked to
+                                         queries whose relevant doc is
+                                         still alive (deletes excluded)
+
+plus the engine's serve.batch_ms histogram for the p99 objective. A
+MetricsExporter serves /metrics + /healthz throughout and the harness
+scrapes both mid-run (statuses recorded in the output; any non-200 fails
+the run).
+
+BENCH_soak.json is self-describing: it records the p99 gate it ran
+against and the SLOMonitor's own verdict, so `check_regression.py
+--fresh-soak` gates it (failed_requests == 0, final state != PAGE,
+measured p99 <= gate) without a baseline file. Field docs:
+docs/BENCHMARKS.md.
+
+Usage (the index must be built with a trained selector, e.g.
+`python -m repro.launch.build_index ... --train-queries N`):
+  PYTHONPATH=src python -m benchmarks.soak --index-dir /tmp/idx \
+      [--duration 30] [--generations 2] [--queries 64] [--batch 16] \
+      [--upserts 24] [--deletes 8] [--p99-gate-ms 500] \
+      [--drift-gate 0.1] [--out BENCH_soak.json] [--seed 0]
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import threading
+import time
+import urllib.request
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from benchmarks import common as C
+
+
+def _scrape(port, path):
+    url = f"http://127.0.0.1:{port}{path}"
+    try:
+        with urllib.request.urlopen(url, timeout=5) as r:
+            return {"path": path, "status": r.status,
+                    "bytes": len(r.read())}
+    except urllib.error.HTTPError as e:
+        return {"path": path, "status": e.code, "bytes": 0}
+    except Exception as e:
+        return {"path": path, "status": -1, "error": repr(e)}
+
+
+class _LoadGen(threading.Thread):
+    """Replays the query set until stopped; every retrieve call counts in
+    soak.requests, every exception in soak.failed_requests; per-pass
+    MRR@10 feeds the soak.recall_drift gauge."""
+
+    def __init__(self, engine, reader, test_q, batch):
+        super().__init__(daemon=True)
+        self.engine, self.reader = engine, reader
+        self.q, self.batch = test_q, int(batch)
+        self.stop = threading.Event()
+        self.requests = engine.metrics.counter("soak.requests")
+        self.failed = engine.metrics.counter("soak.failed_requests")
+        self.drift = engine.metrics.gauge("soak.recall_drift")
+        self.baseline_mrr = None
+        self.last_mrr = None
+        self.max_drift = 0.0
+        self.passes = 0
+        self.errors = []
+
+    def _pass_mrr(self, ids):
+        """MRR@10 over queries whose relevant doc is still alive (churn
+        deletes docs; a deleted relevant doc is a corpus change, not a
+        serving regression)."""
+        rel = np.asarray(self.q.rel_doc[:ids.shape[0]])
+        try:
+            dc = np.asarray(self.reader.array("doc_cluster"))
+            alive = (rel < len(dc)) & (dc[np.minimum(rel, len(dc) - 1)] >= 0)
+        except Exception:
+            alive = np.ones(len(rel), bool)
+        if not alive.any():
+            return None
+        return C.mrr_at(ids[alive], rel[alive])
+
+    def run(self):
+        n = int(self.q.q_dense.shape[0])
+        while not self.stop.is_set():
+            ids = []
+            for i in range(0, n, self.batch):
+                if self.stop.is_set():
+                    return
+                try:
+                    out, _ = self.engine.retrieve(
+                        self.q.q_dense[i:i + self.batch],
+                        self.q.q_terms[i:i + self.batch],
+                        self.q.q_weights[i:i + self.batch])
+                    ids.append(np.asarray(out))
+                    self.requests.inc()
+                except Exception as e:
+                    self.failed.inc()
+                    if len(self.errors) < 8:
+                        self.errors.append(repr(e))
+            if not ids:
+                continue
+            mrr = self._pass_mrr(np.concatenate(ids))
+            self.passes += 1
+            if mrr is None:
+                continue
+            self.last_mrr = float(mrr)
+            if self.baseline_mrr is None:
+                self.baseline_mrr = self.last_mrr
+            d = max(0.0, self.baseline_mrr - self.last_mrr)
+            self.max_drift = max(self.max_drift, d)
+            self.drift.set(round(d, 6))
+
+
+def _churn_round(reader, engine, index_dir, g, args):
+    """One generation of churn through the atomic hot-reload path:
+    delta -> reload_index, selector republish -> reload_selector."""
+    from repro import index as index_lib
+    from repro.launch.update_index import synth_delta
+    from repro.train import publish_selector
+
+    t0 = time.perf_counter()
+    delta, _info = synth_delta(reader, args.upserts, args.deletes,
+                               seed=args.seed + 101 * (g + 1))
+    index_lib.write_index_delta(index_dir, delta)
+    gen_after_delta = engine.reload_index()
+    publish_selector(index_dir, reader.lstm_params(),
+                     theta=float(engine.cfg.theta),
+                     budget=int(engine.cfg.max_selected), verify="none")
+    gen_after_pub = engine.reload_selector()
+    return {"round": g, "upserts": args.upserts, "deletes": args.deletes,
+            "generation_after_delta": int(gen_after_delta),
+            "generation_after_publish": int(gen_after_pub),
+            "churn_ms": round((time.perf_counter() - t0) * 1e3, 1)}
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="Churn soak: sustained serving + live index churn "
+                    "judged by the SLOMonitor.",
+        epilog=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--index-dir", required=True,
+                    help="built index with a trained selector "
+                         "(repro.launch.build_index --train-queries N)")
+    ap.add_argument("--duration", type=float, default=30.0,
+                    help="soak wall-clock seconds (churn rounds are "
+                         "spread across it)")
+    ap.add_argument("--generations", type=int, default=2,
+                    help="churn rounds (delta + selector republish each; "
+                         "a final compact + reload always runs)")
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--upserts", type=int, default=24,
+                    help="docs upserted per churn round")
+    ap.add_argument("--deletes", type=int, default=8,
+                    help="docs deleted per churn round")
+    ap.add_argument("--p99-gate-ms", type=float, default=500.0,
+                    help="p99 latency objective for serve.batch_ms; "
+                         "recorded in BENCH_soak.json as the documented "
+                         "gate check_regression enforces")
+    ap.add_argument("--drift-gate", type=float, default=0.1,
+                    help="recall-proxy drift objective (absolute MRR@10 "
+                         "drop vs the first pass)")
+    ap.add_argument("--out", default="BENCH_soak.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro import index as index_lib
+    from repro.data import synth_corpus, synth_queries
+    from repro.obs import MetricsExporter, SLOMonitor, default_objectives
+
+    reader = index_lib.IndexReader.open(args.index_dir, verify="size")
+    meta = reader.manifest.get("extra", {}).get("corpus")
+    if meta is None or meta.get("kind") != "synthetic":
+        raise SystemExit("index lacks synthetic-corpus metadata; the soak "
+                         "regenerates its query set from the manifest")
+    corpus = synth_corpus(meta["seed"], meta["n_docs"], meta["dim"],
+                          meta["vocab"])
+    test_q = synth_queries(9, corpus, args.queries)
+
+    with reader.engine(max_batch=args.batch) as engine:
+        # SLO windows scale with the run so a sustained regression pages
+        # within the soak but one slow batch cannot
+        fast = max(1.0, args.duration / 8)
+        slow = max(2.0, args.duration / 3)
+        objectives = default_objectives(
+            p99_gate_ms=args.p99_gate_ms, failure_budget=0.0,
+            drift_gate=args.drift_gate, fast_window_s=fast,
+            slow_window_s=slow)
+        slo = SLOMonitor(engine.metrics, objectives)
+        gen = _LoadGen(engine, reader, test_q, args.batch)
+        scrapes = []
+        churn = []
+        t_start = time.perf_counter()
+        with MetricsExporter(engine, port=0, slo=slo) as exp:
+            print(f"soak: {args.duration:.0f}s, {args.generations} churn "
+                  f"round(s), endpoints on port {exp.port}", flush=True)
+            gen.start()
+            deadline = time.monotonic() + args.duration
+            # churn rounds at evenly spaced points inside the window
+            marks = [time.monotonic()
+                     + args.duration * (g + 1) / (args.generations + 2)
+                     for g in range(args.generations)]
+            compact_mark = time.monotonic() \
+                + args.duration * (args.generations + 1) \
+                / (args.generations + 2)
+            compacted = False
+            g = 0
+            while time.monotonic() < deadline:
+                slo.evaluate()
+                now = time.monotonic()
+                if g < len(marks) and now >= marks[g]:
+                    churn.append(_churn_round(reader, engine,
+                                              args.index_dir, g, args))
+                    print(f"churn round {g}: {churn[-1]}", flush=True)
+                    # scrape mid-churn: endpoints must answer while
+                    # generations roll
+                    scrapes.append(_scrape(exp.port, "/metrics"))
+                    scrapes.append(_scrape(exp.port, "/healthz"))
+                    g += 1
+                elif not compacted and now >= compact_mark:
+                    t0 = time.perf_counter()
+                    index_lib.compact_index(args.index_dir)
+                    engine.reload_index()
+                    churn.append({"round": "compact",
+                                  "churn_ms": round(
+                                      (time.perf_counter() - t0) * 1e3, 1)})
+                    print(f"compacted + reloaded: {churn[-1]}", flush=True)
+                    compacted = True
+                time.sleep(min(0.25, max(0.0, deadline - now)))
+            scrapes.append(_scrape(exp.port, "/metrics"))
+            scrapes.append(_scrape(exp.port, "/metrics.json"))
+            scrapes.append(_scrape(exp.port, "/slo"))
+            scrapes.append(_scrape(exp.port, "/healthz"))
+            gen.stop.set()
+            gen.join(timeout=60)
+            slo.evaluate()
+        wall_s = time.perf_counter() - t_start
+
+        bad_scrapes = [s for s in scrapes if s["status"] != 200]
+        if bad_scrapes:
+            print(f"SOAK FAIL: non-200 scrapes: {bad_scrapes}")
+        lat = engine.serve_stats.latency_percentiles()
+        verdict = slo.verdict()
+        requests = int(gen.requests.value)
+        out = {
+            **C.bench_meta(engine.cfg),
+            "duration_s": round(wall_s, 1),
+            "generations": args.generations,
+            "queries_per_pass": args.queries,
+            "batch": args.batch,
+            "passes": gen.passes,
+            "requests": requests,
+            "failed_requests": int(gen.failed.value),
+            "load_errors": gen.errors,
+            "qps": round(requests * args.batch / wall_s, 1),
+            "p50_ms": lat.get("p50_ms"),
+            "p99_ms": lat.get("p99_ms"),
+            "p99_gate_ms": args.p99_gate_ms,
+            "drift_gate": args.drift_gate,
+            "recall_proxy": {
+                "baseline_mrr10": gen.baseline_mrr,
+                "final_mrr10": gen.last_mrr,
+                "max_drift": round(gen.max_drift, 6),
+            },
+            "churn": churn,
+            "reloads": engine.serve_stats.reloads,
+            "selector_reloads": engine.serve_stats.selector_reloads,
+            "scrapes": scrapes,
+            "slo": {
+                "objectives": [dataclasses.asdict(o) for o in objectives],
+                "verdict": verdict,
+                "final_state": verdict["final_state"],
+                "events": list(slo.events)[-20:],
+            },
+        }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"soak -> {args.out}: {requests} request(s) "
+          f"({gen.passes} pass(es)), failed={out['failed_requests']}, "
+          f"p99={out['p99_ms']}ms (gate {args.p99_gate_ms}ms), "
+          f"SLO {verdict['final_state']} "
+          f"(pages={verdict['pages']}, warns={verdict['warns']})")
+    ok = (not bad_scrapes and out["failed_requests"] == 0
+          and verdict["ok"]
+          and (out["p99_ms"] is None
+               or out["p99_ms"] <= args.p99_gate_ms))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

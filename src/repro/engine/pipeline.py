@@ -59,10 +59,13 @@ def build_stage1_fn(cfg, index):
 
 def build_stage2_fn(cfg, index):
     """Stage-II LSTM cluster selection.
-    fn(cand, feats) -> (sel_ids, sel_mask)."""
+    fn(cand, feats) -> (sel_ids, sel_mask, probs) — probs are the raw
+    per-candidate selector probabilities (explain telemetry compares them
+    against theta/budget; they are computed anyway, so returning them is
+    free)."""
     def run(cand, feats):
         s2 = clusd_lib.stage2_select(cfg, index, cand, feats)
-        return s2["sel_ids"], s2["sel_mask"]
+        return s2["sel_ids"], s2["sel_mask"], s2["probs"]
     return jax.jit(run)
 
 

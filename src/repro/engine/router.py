@@ -72,10 +72,11 @@ import numpy as np
 
 from repro.engine import pipeline as pipe_lib
 from repro.engine.cache import BlockCache
-from repro.engine.server import ServeStats, _pad_rows, bucket_size
+from repro.engine.server import (ServeStats, _pad_rows, bucket_size,
+                                 build_explain_records)
 from repro.core import fusion as fusion_lib
 from repro.kernels import adc as adc_ops
-from repro.obs import MetricsRegistry, Tracer
+from repro.obs import NOOP_TRACE, MetricsRegistry, Tracer
 
 # pads/invalid entries in merged partial top-k lists; sorts after every
 # real doc id on score ties (same value as train/labels._PAD_ID)
@@ -176,6 +177,7 @@ class HostRequest:
     sel_ids: np.ndarray          # (B, S) selected cluster ids
     mine: np.ndarray             # (B, S) bool: selected AND owned here
     uniq: np.ndarray             # sorted unique owned cluster ids to fetch
+    trace: bool = False          # record host-side span timings
 
 
 @dataclasses.dataclass
@@ -184,6 +186,14 @@ class HostResponse:
     generation: int
     ids: np.ndarray              # (B, Kp) int64, (score desc, id asc)
     scores: np.ndarray           # (B, Kp) float32, -inf padding
+    # host-side span records when req.trace (else None): list of
+    # {"name", "t0" (absolute perf_counter at span start), "dur_ms",
+    #  "parent" (local index, -1 = root), "annot"} — record 0 is the
+    # "host_serve" root. Absolute perf_counter timestamps are valid
+    # across the HostRequest boundary because hosts are threads in THIS
+    # process (one clock); a real RPC transport would need clock-offset
+    # translation here.
+    spans: Any = None
 
 
 class HostDown(RuntimeError):
@@ -330,6 +340,20 @@ class EngineHost:
         if gen is None:
             raise HostDown(f"host {self.host_id} lacks generation "
                            f"{req.generation} (has {self.generations()})")
+        # host-side span records (router grafts them under its scatter
+        # span): opened before the fault-injection sleeps so host_serve
+        # covers the host's whole wall time for this request
+        spans = None
+        if req.trace:
+            spans = [{"name": "host_serve", "t0": time.perf_counter(),
+                      "dur_ms": 0.0, "parent": -1,
+                      "annot": {"generation": req.generation}}]
+
+        def _rec(name, t0, **annot):
+            if spans is not None:
+                spans.append({"name": name, "t0": t0,
+                              "dur_ms": (time.perf_counter() - t0) * 1e3,
+                              "parent": 0, "annot": annot})
         if delay:
             self._sleep(delay / 1e3)
         if self.sim_latency:
@@ -340,7 +364,10 @@ class EngineHost:
         if uniq.size:
             fetch = pipe_lib.fetch_unique_code_blocks if req.mode == "adc" \
                 else pipe_lib.fetch_unique_blocks
+            t0 = time.perf_counter()
             blocks = fetch(store, uniq, cache)
+            _rec("block_fetch", t0, n_blocks=int(uniq.size),
+                 bytes=int(blocks.nbytes))
         else:
             blocks = np.zeros(
                 (1, store.cap,
@@ -361,6 +388,7 @@ class EngineHost:
         # host's compute to its share of the selection. The stable argsort
         # preserves slot order (ties in the merge are identical (id, score)
         # pairs, so relative order never affects the fused result).
+        t0 = time.perf_counter()
         sc = self._pow2(max(int(mine.sum(axis=1).max()), 1))
         if sc < S:
             keep = np.argsort(~mine, axis=1, kind="stable")[:, :sc]
@@ -368,10 +396,14 @@ class EngineHost:
             mine = np.take_along_axis(mine, keep, axis=1)
             S = sc
         pos = np.searchsorted(uniq, np.where(mine, sel, uniq[0]))
+        _rec("compact", t0, n_slots=int(S))
+        t0 = time.perf_counter()
         fn = self._score_fn(req.generation, req.mode, B, ub, S)
         scores3 = np.asarray(fn(jnp.asarray(req.q_or_lut),
                                 jnp.asarray(blocks),
                                 jnp.asarray(pos.astype(np.int32))))
+        _rec("score", t0, mode=req.mode)
+        t0 = time.perf_counter()
         docs = store.cluster_docs_np[sel]                  # (B, S, cap)
         cap = docs.shape[-1]
         valid = (docs >= 0) & mine[:, :, None]
@@ -384,11 +416,16 @@ class EngineHost:
         order = np.lexsort((flat_ids, -flat_ss), axis=-1)
         kp = max(1, int(valid.reshape(B, -1).sum(axis=1).max()))
         order = order[:, :kp]
+        _rec("partial_topk", t0, kp=int(kp))
         self.served += 1
+        if spans is not None:
+            spans[0]["dur_ms"] = \
+                (time.perf_counter() - spans[0]["t0"]) * 1e3
         return HostResponse(
             host_id=self.host_id, generation=req.generation,
             ids=np.take_along_axis(flat_ids, order, axis=-1),
-            scores=np.take_along_axis(flat_ss, order, axis=-1))
+            scores=np.take_along_axis(flat_ss, order, axis=-1),
+            spans=spans)
 
     # -- introspection ------------------------------------------------------
 
@@ -424,7 +461,7 @@ class ShardRouter:
 
     def __init__(self, cfg, index, reader, hosts, placement, *,
                  max_batch=256, k=None, metrics=None, tracer=None,
-                 trace_sample_rate=None, fusion=None,
+                 trace_sample_rate=None, fusion=None, explain=None,
                  host_timeout=10.0, max_retries=3, backoff_ms=20.0,
                  host_cooldown=2.0, sleep=time.sleep):
         from repro.core.fusion import FUSION_METHODS
@@ -454,6 +491,9 @@ class ShardRouter:
         elif trace_sample_rate is not None:
             tracer.sample_rate = float(trace_sample_rate)
         self.tracer = tracer
+        # sampled per-query explain telemetry (repro.obs.ExplainLogger);
+        # router records add per-host score attribution (host_contrib)
+        self.explain = explain
         self.serve_stats = ServeStats(self.metrics)
         self._failed = self.metrics.counter("router.failed_requests")
         self._degraded = self.metrics.counter("router.degraded_requests")
@@ -641,7 +681,7 @@ class ShardRouter:
                 q_or_lut = self._lut_fn(bucket)(qd)
                 q_or_lut.block_until_ready()
         with tr.span("stage2_select"):
-            sel_ids, sel_mask = self._stage2_fn(bucket)(cand, feats)
+            sel_ids, sel_mask, probs = self._stage2_fn(bucket)(cand, feats)
             sel_np = np.asarray(sel_ids)
             mask_np = np.asarray(sel_mask)
         mode = "adc" if self.use_adc else "dot"
@@ -678,6 +718,25 @@ class ShardRouter:
         self.last_batches.append(meta)
         if meta["degraded"]:
             self._degraded.inc()
+        if self.explain is not None and self.explain.sample():
+            recs = build_explain_records(
+                self.cfg, qid_base=self.serve_stats.n_queries,
+                generation=generation, n=n, cand=cand, probs=probs,
+                sel_ids=sel_np, sel_mask=mask_np, final_ids=ids,
+                sparse_ids=sid, doc_cluster=self.index.doc_cluster)
+            final_np = np.asarray(ids)[:n]
+            for i, rec in enumerate(recs):
+                fset = {int(x) for x in final_np[i] if int(x) >= 0}
+                contrib = {}
+                for r in responses:
+                    hit = len(fset & {int(x) for x in r.ids[i]
+                                      if 0 <= int(x) < MERGE_SENTINEL})
+                    if hit:
+                        key = str(r.host_id)
+                        contrib[key] = contrib.get(key, 0) + hit
+                rec["host_contrib"] = contrib
+                rec["degraded"] = meta["degraded"]
+                self.explain.emit(rec)
         tr.finish(compiled=self._built_fn, batch_ms=round(ms, 3),
                   degraded=meta["degraded"])
         self.serve_stats.record(n, bucket, self._built_fn, ms)
@@ -697,13 +756,17 @@ class ShardRouter:
         responses = []
         if not pending:
             with tr.span("scatter", n_hosts=0):
-                pass
-            with tr.span("gather", n_hosts=0):
-                pass
+                with tr.span("gather", n_hosts=0):
+                    pass
             return responses, meta
+        # hosts record spans only when this batch itself is traced
+        trace_hosts = tr is not NOOP_TRACE
         tried = {s: set() for s in pending}
         attempt = 0
         while pending:
+            # the scatter span COVERS the gather (its child), so host-side
+            # spans grafted under scatter always fall inside the parent
+            # window — the containment rule check_trace enforces
             with tr.span("scatter", attempt=attempt,
                          n_shards=len(pending)) as sp:
                 groups = {}
@@ -725,30 +788,36 @@ class ShardRouter:
                         else np.zeros((0,), np.int64)
                     req = HostRequest(generation=generation, mode=mode,
                                       q_or_lut=q_host, sel_ids=sel_np,
-                                      mine=mine, uniq=uniq)
+                                      mine=mine, uniq=uniq,
+                                      trace=trace_hosts)
                     futures[h] = (shards, self.hosts[h].submit(req))
                 sp.annotate(n_hosts=len(futures))
-            if not futures:        # every pending shard has no live replica
-                break
-            with tr.span("gather", attempt=attempt, n_hosts=len(futures)):
-                deadline = time.monotonic() + self.host_timeout
-                for h, (shards, fut) in futures.items():
-                    try:
-                        resp = fut.result(
-                            timeout=max(0.0, deadline - time.monotonic()))
-                        assert resp.generation == generation
-                        responses.append(resp)
-                        meta["hosts"].append(h)
-                        for s in shards:
-                            pending.pop(s, None)
-                    except Exception:
-                        # timeout, HostDown, or host-side error: discard
-                        # (a late response is never merged), mark the
-                        # host, and fail the shards over to a replica
-                        fut.cancel()
-                        self._mark_failed(h)
-                        for s in shards:
-                            tried[s].add(h)
+                if not futures:    # every pending shard has no live replica
+                    break
+                with tr.span("gather", attempt=attempt,
+                             n_hosts=len(futures)):
+                    deadline = time.monotonic() + self.host_timeout
+                    for h, (shards, fut) in futures.items():
+                        try:
+                            resp = fut.result(
+                                timeout=max(0.0,
+                                            deadline - time.monotonic()))
+                            assert resp.generation == generation
+                            responses.append(resp)
+                            meta["hosts"].append(h)
+                            for s in shards:
+                                pending.pop(s, None)
+                            if resp.spans:
+                                self._graft_host_spans(tr, sp, h,
+                                                       resp.spans)
+                        except Exception:
+                            # timeout, HostDown, or host-side error:
+                            # discard (a late response is never merged),
+                            # mark the host, fail shards over to a replica
+                            fut.cancel()
+                            self._mark_failed(h)
+                            for s in shards:
+                                tried[s].add(h)
             if pending:
                 if attempt >= self.max_retries:
                     break
@@ -762,6 +831,22 @@ class ShardRouter:
             meta["degraded"] = True
             meta["missing_shards"] = sorted(pending)
         return responses, meta
+
+    @staticmethod
+    def _graft_host_spans(tr, scatter_sp, host_id, records):
+        """Attach one host's completed span records under the router's
+        open scatter span, preserving the host-local parent structure.
+        Every grafted span is annotated host=<id> — the Chrome exporter
+        routes those to per-host lanes, and check_trace requires the
+        annotation on scatter children. Valid because hosts share this
+        process's perf_counter clock (see HostResponse.spans)."""
+        grafted = {}
+        for j, rec in enumerate(records):
+            parent = scatter_sp if rec["parent"] < 0 \
+                else grafted[rec["parent"]]
+            grafted[j] = tr.add_completed(
+                rec["name"], t0_abs=rec["t0"], dur_ms=rec["dur_ms"],
+                parent=parent, host=int(host_id), **rec["annot"])
 
     # -- generation hops ----------------------------------------------------
 
@@ -839,9 +924,35 @@ class ShardRouter:
 
     # -- introspection ------------------------------------------------------
 
+    def _sync_gauges(self):
+        """Mirror router + per-host state into registry gauges so one
+        metrics export (`--metrics-out`, a /metrics scrape) captures the
+        whole fleet. Before this, per-host cache/IO counters lived ONLY
+        in stats()["per_host"] and were silently dropped from exports;
+        now each host's numbers appear as `host<i>.cache.*` / `host<i>.
+        io.*` / `host<i>.alive` / `host<i>.served` metrics."""
+        reg = self.metrics
+        missing = self.missing_shards()
+        reg.gauge("router.generation").set(self._generation)
+        reg.gauge("router.missing_shards").set(len(missing))
+        reg.gauge("router.hosts_alive").set(
+            sum(1 for h in self.hosts if h.alive))
+        for h in self.hosts:
+            st = h.stats()
+            i = st["host"]
+            reg.gauge(f"host{i}.alive").set(int(st["alive"]))
+            reg.gauge(f"host{i}.served").set(int(st["served"]))
+            for k, v in (st.get("cache") or {}).items():
+                if isinstance(v, (int, float)):
+                    reg.gauge(f"host{i}.cache.{k}").set(v)
+            for k, v in (st.get("io") or {}).items():
+                if isinstance(v, (int, float)):
+                    reg.gauge(f"host{i}.io.{k}").set(v)
+        return missing
+
     def stats(self):
         ss = self.serve_stats
-        missing = self.missing_shards()
+        missing = self._sync_gauges()
         out = {"n_queries": ss.n_queries,
                "n_batches": ss.n_batches,
                "n_compile_batches": ss.n_compile_batches,

@@ -79,6 +79,63 @@ def _pad_rows(x, n_pad):
     return np.concatenate([x, np.repeat(np.asarray(x)[-1:], n_pad, axis=0)])
 
 
+def build_explain_records(cfg, *, qid_base, generation, n, cand, probs,
+                          sel_ids, sel_mask, final_ids, sparse_ids,
+                          doc_cluster):
+    """Explain records for one served batch (schema in
+    docs/OBSERVABILITY.md). Shared by RetrievalEngine and ShardRouter —
+    the router appends its own `host_contrib` field afterwards.
+
+    All array args are batch-major; only the first `n` rows (real
+    queries, not bucket padding) produce records. `doc_cluster` maps doc
+    id -> cluster id and decides dense-side membership for the fusion
+    contribution split."""
+    cand = np.asarray(cand)[:n]
+    probs = np.asarray(probs)[:n]
+    sel_np = np.asarray(sel_ids)[:n]
+    mask_np = np.asarray(sel_mask)[:n].astype(bool)
+    final = np.asarray(final_ids)[:n]
+    sid = np.asarray(sparse_ids)[:n]
+    dc = np.asarray(doc_cluster)
+    n_seed = int(cfg.n_candidates)
+    theta = float(cfg.theta)
+    records = []
+    for i in range(n):
+        p = probs[i]
+        selected = [int(x) for x in sel_np[i][mask_np[i]]]
+        sel_set = set(selected)
+        over = int((p >= theta).sum())
+        sparse_set = {int(d) for d in sid[i] if int(d) >= 0}
+        contrib = {"sparse_only": 0, "dense_only": 0, "both": 0}
+        for d in (int(x) for x in final[i] if int(x) >= 0):
+            in_sparse = d in sparse_set
+            in_dense = d < len(dc) and int(dc[d]) in sel_set
+            if in_sparse and in_dense:
+                contrib["both"] += 1
+            elif in_sparse:
+                contrib["sparse_only"] += 1
+            elif in_dense:
+                contrib["dense_only"] += 1
+        records.append({
+            "qid": int(qid_base + i),
+            "generation": None if generation is None else int(generation),
+            "theta": round(theta, 6),
+            "budget": int(cfg.max_selected),
+            "fusion": cfg.fusion,
+            "expand_depth": int(cfg.expand_depth),
+            "n_seed": n_seed,
+            "cand": [int(x) for x in cand[i]],
+            "provenance": ["seed" if j < n_seed else "expand"
+                           for j in range(cand.shape[1])],
+            "probs": [round(float(x), 4) for x in p],
+            "selected": selected,
+            "n_over_theta": over,
+            "skipped_over_theta": max(0, over - len(selected)),
+            "fusion_contrib": contrib,
+        })
+    return records
+
+
 @dataclasses.dataclass
 class BatchRecord:
     size: int          # real queries in the batch (before padding)
@@ -225,7 +282,8 @@ class RetrievalEngine:
     def __init__(self, cfg, index, store=None, *, max_batch=256,
                  cache_capacity=512, prefetch=True, prefetch_depth=None,
                  k=None, reader=None, use_adc=None, metrics=None,
-                 tracer=None, trace_sample_rate=None, fusion=None):
+                 tracer=None, trace_sample_rate=None, fusion=None,
+                 explain=None):
         # per-engine fusion override ("interp" | "rrf"): wins over the
         # manifest config and is re-applied across index/selector reloads
         from repro.core.fusion import FUSION_METHODS
@@ -256,6 +314,11 @@ class RetrievalEngine:
         elif trace_sample_rate is not None:
             tracer.sample_rate = float(trace_sample_rate)
         self.tracer = tracer
+        # sampled per-query explain telemetry (repro.obs.ExplainLogger);
+        # None (the default) costs a single attribute check per batch.
+        # Covers the host serving path — the fully-fused device path has
+        # no per-stage host visibility to explain.
+        self.explain = explain
         self._adc_ms = self.metrics.counter("serve.adc_ms")
         self._lut_build_ms = self.metrics.counter("serve.lut_build_ms")
         self._prefetch_enabled = bool(prefetch)
@@ -630,7 +693,7 @@ class RetrievalEngine:
             # pre-obs measurement exactly (the `pad` span still shows it)
             t0 = time.perf_counter()
             if self.is_host:
-                ids, scores = self._serve_host(bucket, qd, qt, qw, tr)
+                ids, scores = self._serve_host(bucket, qd, qt, qw, tr, n=n)
                 ids.block_until_ready()
             else:
                 with tr.span("device_pipeline"):
@@ -652,7 +715,8 @@ class RetrievalEngine:
             b *= 2
         return b
 
-    def _serve_host(self, bucket, qd, qt, qw, tr=NOOP_TRACE):
+    def _serve_host(self, bucket, qd, qt, qw, tr=NOOP_TRACE, n=None):
+        n = bucket if n is None else n
         with tr.span("stage1"):
             sid, ss, cand, feats = self._stage1_fn(bucket)(qd, qt, qw)
             cand_np = np.asarray(cand)      # device sync for Stage I
@@ -670,7 +734,7 @@ class RetrievalEngine:
                 if not self._built_fn:   # steady-state only (no compile skew)
                     self._lut_build_ms.inc((time.perf_counter() - t0) * 1e3)
         with tr.span("stage2_select"):
-            sel_ids, sel_mask = self._stage2_fn(bucket)(cand, feats)
+            sel_ids, sel_mask, probs = self._stage2_fn(bucket)(cand, feats)
             sel_np = np.asarray(sel_ids)    # device sync for Stage II
             mask_np = np.asarray(sel_mask)
         with tr.span("fuse"):               # host glue: dedup + positions
@@ -705,6 +769,16 @@ class RetrievalEngine:
             if self.use_adc and not self._built_fn:
                 # steady-state only (no compile skew)
                 self._adc_ms.inc((time.perf_counter() - t0) * 1e3)
+        if self.explain is not None and self.explain.sample():
+            for rec in build_explain_records(
+                    self.cfg,
+                    qid_base=self.serve_stats.n_queries,
+                    generation=None if self.reader is None
+                    else self.reader.generation,
+                    n=n, cand=cand_np, probs=probs, sel_ids=sel_np,
+                    sel_mask=mask_np, final_ids=ids, sparse_ids=sid,
+                    doc_cluster=self.index.doc_cluster):
+                self.explain.emit(rec)
         return ids, scores
 
     # -- introspection ------------------------------------------------------

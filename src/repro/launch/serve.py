@@ -33,6 +33,21 @@ trace JSON for Perfetto), sampled at --trace-sample-rate; --metrics-out
 dumps the engine metrics registry (JSON or Prometheus text by suffix).
 Catalog: docs/OBSERVABILITY.md.
 
+Live observability (with --index-dir): --metrics-port P starts an HTTP
+exporter over the serving engine/router BEFORE the first batch — GET
+/metrics (Prometheus text), /metrics.json, /slo, /healthz (503 while the
+SLO state is PAGE or any shard has lost every replica); P=0 binds an
+ephemeral port (printed). --slo-config PATH loads declarative SLO
+objectives (JSON {"objectives": [...]}; see docs/OBSERVABILITY.md) into
+an SLOMonitor judging the run — without it --metrics-port uses the
+default objective set. --explain-out PATH.jsonl emits sampled per-query
+explain records (candidate provenance, selector probs vs theta/budget,
+fusion contributions, per-host attribution on the router path) at
+--explain-sample-rate; analyze with `python -m benchmarks.explain_report`.
+--serve-seconds S keeps replaying the query set until the deadline so
+the endpoints stay live under sustained traffic (the CI metrics-endpoint
+smoke curls them mid-stream).
+
 --hosts N (with --index-dir) serves through the multi-host scatter-gather
 tier (engine/router.py) instead of a single engine: a ShardRouter runs
 sparse retrieval + Stage I/II replicated and scatters the selected
@@ -110,6 +125,68 @@ def _write_obs(args, engine):
               f"sample rate {engine.tracer.sample_rate})")
 
 
+def _make_explain(args):
+    """--explain-out: a sampled per-query ExplainLogger for the engine/
+    router ctor (None when the flag is absent — zero serving cost)."""
+    if not getattr(args, "explain_out", None):
+        return None
+    from repro.obs import ExplainLogger
+    return ExplainLogger(args.explain_out,
+                         sample_rate=args.explain_sample_rate)
+
+
+def _start_exporter(args, target):
+    """--metrics-port / --slo-config: attach an SLOMonitor and start the
+    live HTTP endpoint over the serving target. Returns (exporter, slo),
+    either of which may be None."""
+    from repro.obs import MetricsExporter, SLOMonitor, default_objectives
+    slo = None
+    if getattr(args, "slo_config", None):
+        slo = SLOMonitor.from_config(target.metrics, args.slo_config)
+    elif args.metrics_port is not None:
+        slo = SLOMonitor(target.metrics, default_objectives())
+    exp = None
+    if args.metrics_port is not None:
+        exp = MetricsExporter(target, port=args.metrics_port,
+                              slo=slo).start()
+        print(f"metrics endpoint: http://127.0.0.1:{exp.port}/metrics "
+              f"(also /metrics.json /slo /healthz)", flush=True)
+    return exp, slo
+
+
+def _finish_obs(args, exporter, slo, explain):
+    """Tear down the live observability attachments, reporting state."""
+    if slo is not None:
+        slo.evaluate()
+        print(f"SLO state: {slo.state} "
+              f"(pages={slo.verdict()['pages']}, "
+              f"warns={slo.verdict()['warns']})")
+    if exporter is not None:
+        exporter.stop()
+    if explain is not None:
+        explain.close()
+        st = explain.stats()
+        print(f"explain -> {st['path']} ({st['n_records']} record(s), "
+              f"{st['n_sampled']}/{st['n_sampled'] + st['n_skipped']} "
+              f"batches sampled)")
+
+
+def _sustain(args, serve_pass, slo=None):
+    """--serve-seconds: keep replaying the query set until the deadline
+    (keeps the metrics endpoints live under sustained traffic)."""
+    if not args.serve_seconds:
+        return
+    deadline = time.monotonic() + args.serve_seconds
+    passes = 0
+    while time.monotonic() < deadline:
+        serve_pass(deadline)
+        passes += 1
+        if slo is not None:
+            slo.evaluate()
+    print(f"sustained serving: {passes} extra pass(es) over "
+          f"{args.serve_seconds:.0f}s window")
+
+
 def serve_from_router(args, reader, cfg, index, test_q):
     """Serve through the multi-host scatter-gather tier (--hosts N)."""
     from repro import index as index_lib
@@ -121,7 +198,11 @@ def serve_from_router(args, reader, cfg, index, test_q):
             cfg=cfg, index=index, max_batch=args.batch,
             cache_capacity=args.cache_blocks,
             host_timeout=args.host_timeout_ms / 1e3,
-            trace_sample_rate=trace_rate) as router:
+            trace_sample_rate=trace_rate,
+            explain=_make_explain(args)) as router:
+        # endpoints come up before the first (compiling) batch, so a
+        # scraper polling /metrics gets 200 while serving warms up
+        exporter, slo = _start_exporter(args, router)
         all_ids = []
         for bi, i in enumerate(range(0, args.queries, args.batch)):
             ids, _ = router.retrieve(test_q.q_dense[i:i + args.batch],
@@ -131,8 +212,18 @@ def serve_from_router(args, reader, cfg, index, test_q):
             if args.kill_host is not None and bi == 0:
                 router.hosts[args.kill_host].kill()
                 print(f"injected failure: host {args.kill_host} killed "
-                      f"after batch 0 (replication {args.replication})")
+                      f"after batch 0 (replication {args.replication})",
+                      flush=True)
         ids = np.concatenate(all_ids)
+
+        def _replay(deadline):
+            for i in range(0, args.queries, args.batch):
+                router.retrieve(test_q.q_dense[i:i + args.batch],
+                                test_q.q_terms[i:i + args.batch],
+                                test_q.q_weights[i:i + args.batch])
+                if time.monotonic() >= deadline:
+                    return
+        _sustain(args, _replay, slo)
         st = router.stats()
         print(f"router: {st['hosts']} hosts x replication "
               f"{st['replication']} over {st['n_shards']} shards, "
@@ -144,6 +235,7 @@ def serve_from_router(args, reader, cfg, index, test_q):
               f"failovers={st['failovers']} retries={st['retries']} "
               f"missing_shards={st['missing_shards']}")
         _write_obs(args, router)
+        _finish_obs(args, exporter, slo, router.explain)
 
         ok = True
         if args.check_parity:
@@ -199,7 +291,9 @@ def serve_from_index(args):
     with reader.engine(cfg=cfg, index=index, max_batch=args.batch,
                        cache_capacity=args.cache_blocks,
                        prefetch=not args.no_prefetch,
-                       trace_sample_rate=trace_rate) as engine:
+                       trace_sample_rate=trace_rate,
+                       explain=_make_explain(args)) as engine:
+        exporter, slo = _start_exporter(args, engine)
         t1 = time.perf_counter()
         first_ids, _ = engine.retrieve(
             test_q.q_dense[:args.batch], test_q.q_terms[:args.batch],
@@ -211,6 +305,16 @@ def serve_from_index(args):
                                      test_q.q_terms[i:i + args.batch],
                                      test_q.q_weights[i:i + args.batch])
             all_ids.append(np.asarray(ids))
+
+        def _replay(deadline):
+            for i in range(0, args.queries, args.batch):
+                engine.retrieve(test_q.q_dense[i:i + args.batch],
+                                test_q.q_terms[i:i + args.batch],
+                                test_q.q_weights[i:i + args.batch])
+                if time.monotonic() >= deadline:
+                    return
+        _sustain(args, _replay, slo)
+        _finish_obs(args, exporter, slo, engine.explain)
     ids = np.concatenate(all_ids)
     st = engine.stats()
     io, cache = st.get("io", {}), st.get("cache", {})
@@ -324,6 +428,28 @@ def main():
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="dump the engine metrics registry after serving "
                          "(.prom/.txt = Prometheus text, else JSON)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="P",
+                    help="with --index-dir: serve live /metrics, "
+                         "/metrics.json, /slo, and /healthz over HTTP on "
+                         "port P while serving runs (0 = ephemeral port, "
+                         "printed at startup)")
+    ap.add_argument("--slo-config", default=None, metavar="PATH",
+                    help="JSON SLO objectives ({\"objectives\": [...]}; "
+                         "schema in docs/OBSERVABILITY.md) judging the run "
+                         "via an SLOMonitor; default objectives are used "
+                         "when --metrics-port is set without this")
+    ap.add_argument("--explain-out", default=None, metavar="PATH",
+                    help="with --index-dir: write sampled per-query "
+                         "explain records (JSONL; schema in "
+                         "docs/OBSERVABILITY.md) for "
+                         "benchmarks.explain_report")
+    ap.add_argument("--explain-sample-rate", type=float, default=1.0,
+                    help="fraction of batches explained when --explain-out "
+                         "is set (deterministic accumulator sampling)")
+    ap.add_argument("--serve-seconds", type=float, default=0.0, metavar="S",
+                    help="after the scored pass, keep replaying the query "
+                         "set for S more seconds so the live endpoints "
+                         "can be scraped under sustained traffic")
     args = ap.parse_args()
 
     if args.index_dir:

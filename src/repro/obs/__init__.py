@@ -1,6 +1,6 @@
 """repro.obs: the repo's single observability surface.
 
-Two small, dependency-free primitives that every hot path (serve, index
+Dependency-free primitives that every hot path (serve, index
 build/update, selector training) reports through:
 
   * MetricsRegistry (obs/registry.py) — named counters, gauges, and
@@ -9,14 +9,26 @@ build/update, selector training) reports through:
   * Tracer (obs/trace.py) — per-request/per-batch stage-span traces
     (nested spans with wall-clock + byte/op annotations), a
     `sample_rate` knob, and JSONL / Chrome-trace exporters.
+  * SLOMonitor (obs/slo.py) — declarative objectives (latency p99,
+    error rate, gauge drift) evaluated as multi-window burn rates
+    against any registry snapshot, with an OK/WARN/PAGE state machine.
+  * MetricsExporter (obs/exporter.py) — live HTTP surface (/metrics,
+    /metrics.json, /slo, /healthz) over a serving target's registry.
+  * ExplainLogger (obs/explain.py) — sampled per-query explain
+    telemetry transport (JSONL + bounded in-memory ring).
 
 The catalog of every metric and span the repo emits lives in
-docs/OBSERVABILITY.md. Neither primitive imports jax or anything under
+docs/OBSERVABILITY.md. Nothing here imports jax or anything under
 repro.engine/index/train, so any layer can depend on obs without cycles.
 """
 
+from repro.obs.explain import ExplainLogger  # noqa: F401
+from repro.obs.exporter import MetricsExporter  # noqa: F401
 from repro.obs.registry import (  # noqa: F401
     Counter, Gauge, Histogram, MetricsRegistry, write_metrics,
+)
+from repro.obs.slo import (  # noqa: F401
+    SLOMonitor, SLOObjective, default_objectives,
 )
 from repro.obs.trace import (  # noqa: F401
     NOOP_SPAN, NOOP_TRACE, Span, Trace, Tracer, write_trace,
@@ -25,4 +37,6 @@ from repro.obs.trace import (  # noqa: F401
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "write_metrics",
     "NOOP_SPAN", "NOOP_TRACE", "Span", "Trace", "Tracer", "write_trace",
+    "SLOMonitor", "SLOObjective", "default_objectives",
+    "MetricsExporter", "ExplainLogger",
 ]

@@ -104,6 +104,9 @@ class _NoopTrace:
     def span(self, name, **annot):
         return NOOP_SPAN
 
+    def add_completed(self, name, *, t0_abs, dur_ms, parent=None, **annot):
+        return NOOP_SPAN
+
     def annotate(self, **kw):
         return self
 
@@ -142,6 +145,23 @@ class Trace:
                   parent.depth + 1, self._now_ms(), annot)
         self.spans.append(sp)
         self._stack.append(sp)
+        return sp
+
+    def add_completed(self, name, *, t0_abs, dur_ms, parent=None, **annot):
+        """Graft an already-measured span under an explicit parent.
+
+        For work timed on another thread with the same perf_counter
+        clock (e.g. EngineHost workers in-process): `t0_abs` is the raw
+        `time.perf_counter()` at span start, `dur_ms` its duration, and
+        `parent` a Span of this trace (default: innermost open span).
+        The span is appended CLOSED and never touches the nesting stack,
+        so the calling thread's own span structure is unaffected."""
+        if parent is None:
+            parent = self._stack[-1] if self._stack else self.spans[0]
+        sp = Span(self, name, len(self.spans), parent.index,
+                  parent.depth + 1, (t0_abs - self._t0) * 1e3, annot)
+        sp.dur_ms = float(dur_ms)
+        self.spans.append(sp)
         return sp
 
     def _close(self, sp):
@@ -254,11 +274,16 @@ class Tracer:
         events = []
         for tr in self.traces:
             for sp in tr.spans:
+                # host-attributed spans (cross-host graft) get their own
+                # per-host lane so scatter fan-out reads as parallel work
+                tid = tr.trace_id
+                if "host" in sp.annot:
+                    tid = f"{tr.trace_id}.host{sp.annot['host']}"
                 events.append({
                     "name": sp.name, "cat": tr.name, "ph": "X",
                     "ts": round((tr.t0_rel_ms + sp.t0_ms) * 1e3, 1),
                     "dur": round((sp.dur_ms or 0.0) * 1e3, 1),
-                    "pid": 0, "tid": tr.trace_id,
+                    "pid": 0, "tid": tid,
                     "args": {k: v for k, v in sp.annot.items()},
                 })
         with open(path, "w") as f:

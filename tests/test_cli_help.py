@@ -48,8 +48,30 @@ def test_serve_help_documents_current_flags():
                  "--parity-mrr-tol", "--cache-blocks", "--no-prefetch",
                  "--trace-out", "--trace-sample-rate", "--metrics-out",
                  "--fusion", "--expand-depth", "--hosts", "--replication",
-                 "--host-timeout-ms", "--kill-host"):
+                 "--host-timeout-ms", "--kill-host",
+                 "--metrics-port", "--slo-config", "--explain-out",
+                 "--explain-sample-rate", "--serve-seconds"):
         assert flag in out, f"serve --help no longer documents {flag}"
+
+
+def test_soak_help_documents_current_flags():
+    out = _help_output("benchmarks.soak")
+    for flag in ("--index-dir", "--duration", "--generations", "--queries",
+                 "--upserts", "--deletes", "--p99-gate-ms", "--drift-gate",
+                 "--out", "--seed"):
+        assert flag in out, f"soak --help no longer documents {flag}"
+    assert "SLOMonitor" in out          # epilog = module docstring
+
+
+def test_explain_report_help_documents_current_flags():
+    out = _help_output("benchmarks.explain_report")
+    for flag in ("--index-dir", "--queries", "--batch", "--query-seed",
+                 "--out"):
+        assert flag in out, \
+            f"explain_report --help no longer documents {flag}"
+    # the three-way gap decomposition is the contract
+    for word in ("candidate_miss", "selector_miss", "budget_cutoff"):
+        assert word in out
 
 
 def test_update_index_help_documents_current_flags():

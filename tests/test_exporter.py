@@ -1,0 +1,157 @@
+"""MetricsExporter endpoint tests against a jax-free dummy target:
+route payloads (/metrics Prometheus text, /metrics.json snapshot, /slo,
+/healthz), target.stats() sync before export, concurrent scrape
+consistency during live metric mutation, and /healthz flipping 503 on
+an SLO page or a shard losing every replica — then recovering. The
+router-backed equivalents live in tests/test_router.py; this file keeps
+the HTTP surface testable without building an index."""
+
+import json
+import threading
+import urllib.error
+import urllib.request
+
+from repro.obs import (
+    MetricsExporter, MetricsRegistry, SLOMonitor, SLOObjective)
+
+
+class DummyTarget:
+    """Duck-typed serving target: registry + optional stats()/
+    missing_shards(), mirroring RetrievalEngine / ShardRouter."""
+
+    def __init__(self):
+        self.metrics = MetricsRegistry()
+        self.stats_calls = 0
+        self.lost = []
+
+    def stats(self):
+        self.stats_calls += 1
+        self.metrics.gauge("dummy.synced").set(self.stats_calls)
+        return {}
+
+    def missing_shards(self):
+        return list(self.lost)
+
+
+def _get(port, path):
+    url = f"http://127.0.0.1:{port}{path}"
+    try:
+        with urllib.request.urlopen(url, timeout=5) as r:
+            return r.status, r.read().decode()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode()
+
+
+def test_routes_and_stats_sync():
+    t = DummyTarget()
+    t.metrics.counter("reqs.total").inc(7)
+    t.metrics.histogram("lat.ms").observe(3.0)
+    with MetricsExporter(t, port=0) as exp:
+        assert exp.port > 0                     # ephemeral port resolved
+        code, text = _get(exp.port, "/metrics")
+        assert code == 200
+        assert "reqs_total 7" in text           # dots -> underscores
+        assert t.stats_calls == 1               # stats() synced pre-export
+
+        code, body = _get(exp.port, "/metrics.json")
+        snap = json.loads(body)
+        assert code == 200
+        assert snap["counters"]["reqs.total"] == 7
+        assert snap["gauges"]["dummy.synced"] == 2
+
+        code, body = _get(exp.port, "/slo")
+        assert code == 200
+        assert json.loads(body) == {"state": "disabled"}
+
+        code, body = _get(exp.port, "/healthz")
+        assert code == 200 and json.loads(body)["ok"] is True
+
+        code, body = _get(exp.port, "/nope")
+        assert code == 404
+
+
+def test_concurrent_scrapes_during_mutation():
+    t = DummyTarget()
+    c = t.metrics.counter("reqs.total")
+    stop = threading.Event()
+
+    def mutate():
+        while not stop.is_set():
+            c.inc()
+
+    results = []
+
+    def scrape(port):
+        for _ in range(20):
+            code, body = _get(port, "/metrics.json")
+            results.append((code, json.loads(body)["counters"]
+                            .get("reqs.total", 0)))
+
+    with MetricsExporter(t, port=0) as exp:
+        w = threading.Thread(target=mutate)
+        w.start()
+        scrapers = [threading.Thread(target=scrape, args=(exp.port,))
+                    for _ in range(4)]
+        for s in scrapers:
+            s.start()
+        for s in scrapers:
+            s.join()
+        stop.set()
+        w.join()
+    assert all(code == 200 for code, _ in results)
+    vals = [v for _, v in results]
+    assert all(isinstance(v, (int, float)) and v >= 0 for v in vals)
+    # scrapes observed a consistent, monotone-ish counter (never negative,
+    # final value at least the max any scrape saw)
+    assert c.value >= max(vals)
+
+
+def test_healthz_slo_page_and_shard_loss():
+    t = DummyTarget()
+    clock = [0.0]
+    obj = SLOObjective(name="g", kind="gauge", metric="v", threshold=1.0,
+                       fast_window_s=10.0, slow_window_s=30.0,
+                       warn_burn=1.0, page_burn=1.0)
+    slo = SLOMonitor(t.metrics, [obj], clock=lambda: clock[0])
+    with MetricsExporter(t, port=0, slo=slo) as exp:
+        code, body = _get(exp.port, "/healthz")
+        assert code == 200
+
+        t.metrics.gauge("v").set(5.0)           # burn 5.0 -> PAGE
+        clock[0] = 1.0
+        code, body = _get(exp.port, "/healthz")
+        assert code == 503
+        assert "slo_page" in json.loads(body)["reasons"]
+
+        # recovery: the bad sample rolls out of both windows
+        t.metrics.gauge("v").set(0.0)
+        clock[0] = 100.0
+        code, body = _get(exp.port, "/healthz")
+        assert code == 200
+
+        # replica loss is a health reason independent of the SLO
+        t.lost = [2]
+        code, body = _get(exp.port, "/healthz")
+        reasons = json.loads(body)["reasons"]
+        assert code == 503 and "shards_without_replicas:[2]" in reasons
+        t.lost = []
+        code, _ = _get(exp.port, "/healthz")
+        assert code == 200
+
+        # /slo reflects the monitor
+        code, body = _get(exp.port, "/slo")
+        assert code == 200 and json.loads(body)["state"] == "OK"
+
+
+def test_scrape_error_is_500_not_crash():
+    class Broken:
+        @property
+        def metrics(self):
+            raise RuntimeError("boom")
+
+    with MetricsExporter(Broken(), port=0) as exp:
+        code, body = _get(exp.port, "/metrics")
+        assert code == 500 and "boom" in body
+        # server survives a failing scrape
+        code, _ = _get(exp.port, "/healthz")
+        assert code == 200

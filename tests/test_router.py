@@ -17,6 +17,7 @@
 """
 
 import dataclasses
+import json
 import shutil
 import threading
 import time
@@ -347,6 +348,155 @@ def test_router_traces_carry_scatter_gather_merge_spans(built):
     for span in ("stage1", "lut_build", "stage2_select", "scatter",
                  "gather", "merge", "fuse"):
         assert span in totals, f"missing router span {span!r}"
+
+
+def test_host_spans_graft_under_scatter(built, tmp_path):
+    """Cross-host trace propagation: host-side spans (compact/score/
+    partial_topk, block fetch) land nested under the router's scatter
+    span, annotated host=i, and both export formats pass the extended
+    check_trace rules (per-host Chrome lanes included)."""
+    from benchmarks import check_trace
+    from repro.obs import write_trace
+    _, _, _, out_v2, qs = built
+    with _router(out_v2, 3, replication=2, trace_sample_rate=1.0) as router:
+        router.retrieve(qs.q_dense[:8], qs.q_terms[:8], qs.q_weights[:8])
+        totals = router.tracer.span_totals("batch")
+        for span in ("host_serve", "score", "partial_topk"):
+            assert span in totals, f"host-side span {span!r} never grafted"
+        traces = [t for t in router.tracer.traces if t.name == "batch"]
+        hosts_seen = set()
+        for tr in traces:
+            by_index = {i: sp for i, sp in enumerate(tr.spans)}
+            for sp in tr.spans:
+                if sp.name == "host_serve":
+                    parent = by_index[sp.parent]
+                    assert parent.name == "scatter"
+                    assert isinstance(sp.annot.get("host"), int)
+                    hosts_seen.add(sp.annot["host"])
+                    # grafted span sits inside the scatter window
+                    assert sp.t0_ms + 0.1 >= parent.t0_ms
+                    assert sp.t0_ms + sp.dur_ms <= \
+                        parent.t0_ms + parent.dur_ms + 0.1
+                if sp.name in ("score", "partial_topk", "compact",
+                               "block_fetch"):
+                    assert by_index[sp.parent].name == "host_serve"
+                    assert sp.annot.get("host") == \
+                        by_index[sp.parent].annot.get("host")
+        assert len(hosts_seen) == 3         # every host contributed spans
+        jp, cp = str(tmp_path / "r.jsonl"), str(tmp_path / "r.json")
+        write_trace(router.tracer, jp)
+        write_trace(router.tracer, cp)
+    bad, _, names = check_trace.check_jsonl(jp)
+    assert bad == [] and "host_serve" in names
+    bad_c, n_lanes, _ = check_trace.check_chrome(cp)
+    assert bad_c == []
+    # host-annotated spans ride their own per-host Chrome lanes
+    doc = json.load(open(cp))
+    host_tids = {ev["tid"] for ev in doc["traceEvents"]
+                 if (ev.get("args") or {}).get("host") is not None}
+    assert len(host_tids) >= 3
+    assert all(isinstance(t, str) and ".host" in t for t in host_tids)
+
+
+def test_router_metrics_export_includes_per_host(built):
+    """Satellite: per-host cache/IO counters from stats()["per_host"] are
+    mirrored into the registry as namespaced gauges, so a /metrics scrape
+    (or --metrics-out) captures the whole fleet, not just the router."""
+    _, _, _, out_v2, qs = built
+    with _router(out_v2, 3, replication=1) as router:
+        router.retrieve(qs.q_dense[:8], qs.q_terms[:8], qs.q_weights[:8])
+        router.hosts[2].kill()
+        st = router.stats()                 # stats() syncs the gauges
+        snap = router.metrics.snapshot()
+        prom = router.metrics.to_prometheus()
+    g = snap["gauges"]
+    assert g["router.generation"] == 0
+    assert g["router.hosts_alive"] == 2
+    assert g["router.missing_shards"] == len(st["missing_shards"]) > 0
+    for i, h in enumerate(st["per_host"]):
+        assert g[f"host{i}.alive"] == int(h["alive"])
+        assert g[f"host{i}.served"] == h["served"]
+        for k, v in (h.get("cache") or {}).items():
+            if isinstance(v, (int, float)):
+                assert g[f"host{i}.cache.{k}"] == v
+        for k, v in (h.get("io") or {}).items():
+            if isinstance(v, (int, float)):
+                assert g[f"host{i}.io.{k}"] == v
+    assert "host0_served" in prom           # dots -> underscores
+
+
+def test_router_healthz_flips_on_replica_loss_and_recovers(built):
+    """Live endpoint semantics under fault injection: /healthz serves 200
+    on a healthy fleet, 503 (shards_without_replicas) once a shard loses
+    every replica, and recovers to 200 after revive()."""
+    import urllib.error
+    import urllib.request
+    from repro.obs import MetricsExporter
+
+    def get(port, path):
+        try:
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}{path}", timeout=5) as r:
+                return r.status, r.read().decode()
+        except urllib.error.HTTPError as e:
+            return e.code, e.read().decode()
+
+    _, _, _, out_v2, qs = built
+    with _router(out_v2, 3, replication=1) as router:
+        router.retrieve(qs.q_dense[:8], qs.q_terms[:8], qs.q_weights[:8])
+        with MetricsExporter(router, port=0) as exp:
+            code, body = get(exp.port, "/healthz")
+            assert code == 200 and json.loads(body)["ok"] is True
+            code, text = get(exp.port, "/metrics")
+            assert code == 200 and "router_hosts_alive 3" in text
+
+            router.hosts[1].kill()          # R=1: shard 1 loses its only
+            code, body = get(exp.port, "/healthz")
+            reasons = json.loads(body)["reasons"]
+            assert code == 503
+            assert any("shards_without_replicas" in r for r in reasons)
+            # serving continues degraded while health reports it
+            router.retrieve(qs.q_dense[:4], qs.q_terms[:4],
+                            qs.q_weights[:4])
+            code, text = get(exp.port, "/metrics")
+            assert code == 200 and "router_hosts_alive 2" in text
+
+            router.hosts[1].revive()
+            code, body = get(exp.port, "/healthz")
+            assert code == 200 and json.loads(body)["ok"] is True
+
+
+def test_router_explain_records_host_contrib(built):
+    """Router-side explain telemetry: every sampled batch yields per-query
+    records carrying the per-host score attribution (host_contrib) and
+    the degraded flag, on top of the shared engine record fields."""
+    from repro.obs import ExplainLogger
+    cfg, _, _, out_v2, qs = built
+    ex = ExplainLogger(sample_rate=1.0)
+    with _router(out_v2, 3, replication=1, explain=ex) as router:
+        ids, _ = router.retrieve(qs.q_dense[:8], qs.q_terms[:8],
+                                 qs.q_weights[:8])
+        router.hosts[1].kill()
+        router.retrieve(qs.q_dense[8:12], qs.q_terms[8:12],
+                        qs.q_weights[8:12])
+    recs = ex.recent()
+    assert len(recs) == 12
+    assert [r["qid"] for r in recs] == list(range(12))
+    healthy, degraded = recs[:8], recs[8:]
+    assert all(r["degraded"] is False for r in healthy)
+    assert all(r["degraded"] is True for r in degraded)
+    k = np.asarray(ids).shape[1]
+    for r in healthy:
+        assert set(r) >= {"cand", "probs", "selected", "provenance",
+                          "theta", "budget", "fusion_contrib",
+                          "host_contrib"}
+        assert len(r["probs"]) == len(r["cand"]) == len(r["provenance"])
+        assert set(r["provenance"]) <= {"seed", "expand"}
+        # host attribution covers at most the final top-k, never negative
+        total = sum(r["host_contrib"].values())
+        assert 0 <= total <= k
+    # the killed host contributes to no degraded record
+    assert all(r["host_contrib"].get("1", 0) == 0 for r in degraded)
 
 
 def test_subset_store_owns_only_its_shards(built):

@@ -1,0 +1,281 @@
+"""SLO monitor + explain-logger tests: deterministic burn-rate state
+machine via an injectable clock (OK -> PAGE -> recovery across window
+rollover), error-rate delta baselines, zero-tolerance budgets, event-log
+bounding, config round-trip, and the ExplainLogger's deterministic
+sampling accumulator + bounded ring + JSONL file sink. Everything here
+is jax-free: repro.obs stays stdlib-only."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from repro.obs import (
+    ExplainLogger, MetricsRegistry, SLOMonitor, SLOObjective,
+    default_objectives)
+
+
+class FakeRegistry:
+    """Minimal registry-shaped object: SLOMonitor only calls snapshot()."""
+
+    def __init__(self):
+        self.counters = {}
+        self.gauges = {}
+        self.histograms = {}
+
+    def snapshot(self):
+        return {"counters": dict(self.counters),
+                "gauges": dict(self.gauges),
+                "histograms": {k: dict(v)
+                               for k, v in self.histograms.items()}}
+
+
+class Clock:
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+
+def _latency_obj(**kw):
+    base = dict(name="p99", kind="latency", metric="serve.batch_ms",
+                threshold=500.0, fast_window_s=10.0, slow_window_s=30.0,
+                warn_burn=0.75, page_burn=1.0)
+    base.update(kw)
+    return SLOObjective(**base)
+
+
+# ---------------------------------------------------------------------------
+# objective validation
+# ---------------------------------------------------------------------------
+
+def test_objective_validation():
+    with pytest.raises(ValueError, match="unknown objective kind"):
+        SLOObjective(name="x", kind="nope", metric="m", threshold=1.0)
+    with pytest.raises(ValueError, match="total"):
+        SLOObjective(name="x", kind="error_rate", metric="m", threshold=0.1)
+    with pytest.raises(ValueError, match="negative threshold"):
+        SLOObjective(name="x", kind="gauge", metric="m", threshold=-1.0)
+    with pytest.raises(ValueError, match="fast window"):
+        _latency_obj(fast_window_s=60.0, slow_window_s=30.0)
+    with pytest.raises(ValueError, match="unknown SLO objective keys"):
+        SLOObjective.from_dict({"name": "x", "kind": "gauge", "metric": "m",
+                                "threshold": 1.0, "bogus": 1})
+
+
+def test_monitor_rejects_empty_and_duplicate_objectives():
+    reg = FakeRegistry()
+    with pytest.raises(ValueError, match="at least one"):
+        SLOMonitor(reg, [])
+    with pytest.raises(ValueError, match="duplicate"):
+        SLOMonitor(reg, [_latency_obj(), _latency_obj()])
+
+
+def test_default_objectives_shape():
+    objs = default_objectives(p99_gate_ms=250.0)
+    assert [o.name for o in objs] == ["p99_latency", "failed_requests",
+                                      "recall_drift"]
+    assert objs[0].threshold == 250.0
+    assert objs[1].kind == "error_rate" and objs[1].total == "soak.requests"
+
+
+# ---------------------------------------------------------------------------
+# latency burn: spike -> PAGE -> window rollover -> recovery
+# ---------------------------------------------------------------------------
+
+def test_latency_page_and_window_rollover():
+    reg, clock = FakeRegistry(), Clock()
+    mon = SLOMonitor(reg, [_latency_obj()], clock=clock)
+
+    reg.histograms["serve.batch_ms"] = {"p99": 100.0}
+    assert mon.evaluate()["state"] == "OK"
+
+    # burn 1.2 lands in BOTH windows at once -> PAGE
+    clock.t = 1.0
+    reg.histograms["serve.batch_ms"] = {"p99": 600.0}
+    assert mon.evaluate()["state"] == "PAGE"
+    assert mon.state == "PAGE"
+
+    # t=12: the spike left the fast window (cutoff t=2) but still sits in
+    # the slow one -> fast burn drops, PAGE clears (multi-window: recovery
+    # confirmed by the fast window first)
+    clock.t = 12.0
+    reg.histograms["serve.batch_ms"] = {"p99": 100.0}
+    assert mon.evaluate()["state"] == "OK"
+
+    # t=40: spike out of the slow window too; still OK
+    clock.t = 40.0
+    assert mon.evaluate()["state"] == "OK"
+
+    v = mon.verdict()
+    assert v["final_state"] == "OK"
+    assert v["worst_state"] == "PAGE"       # history is not forgotten
+    assert v["pages"] == 1
+    assert v["ok"] is False                  # a page anywhere fails the run
+    transitions = [(e["from"], e["to"]) for e in mon.events]
+    assert transitions == [("OK", "PAGE"), ("PAGE", "OK")]
+
+
+def test_latency_warn_band():
+    reg, clock = FakeRegistry(), Clock()
+    mon = SLOMonitor(reg, [_latency_obj(warn_burn=0.75, page_burn=2.0)],
+                     clock=clock)
+    reg.histograms["serve.batch_ms"] = {"p99": 500.0}   # burn exactly 1.0
+    assert mon.evaluate()["state"] == "WARN"
+    v = mon.verdict()
+    assert v["warns"] == 1 and v["pages"] == 0 and v["ok"] is True
+
+
+# ---------------------------------------------------------------------------
+# error rate: delta baselines + zero tolerance
+# ---------------------------------------------------------------------------
+
+def _err_obj(threshold):
+    return SLOObjective(name="fail", kind="error_rate", metric="err",
+                        total="tot", threshold=threshold,
+                        fast_window_s=10.0, slow_window_s=30.0,
+                        warn_burn=1.0, page_burn=1.0)
+
+
+def test_error_rate_zero_tolerance_pages_then_recovers():
+    reg, clock = FakeRegistry(), Clock()
+    mon = SLOMonitor(reg, [_err_obj(0.0)], clock=clock)
+    reg.counters = {"err": 0, "tot": 10}
+    assert mon.evaluate()["state"] == "OK"
+
+    clock.t = 1.0
+    reg.counters = {"err": 2, "tot": 20}
+    assert mon.evaluate()["state"] == "PAGE"    # any windowed error pages
+    assert mon._last["fail"]["burn_fast"] == "inf"
+
+    # t=50: the error increment predates both windows; the baseline sample
+    # (newest older than the window) pins delta(err)=0 -> recovery. The
+    # counters are CUMULATIVE and never reset.
+    clock.t = 50.0
+    reg.counters = {"err": 2, "tot": 100}
+    assert mon.evaluate()["state"] == "OK"
+
+
+def test_error_rate_fractional_threshold():
+    reg, clock = FakeRegistry(), Clock()
+    mon = SLOMonitor(reg, [_err_obj(0.5)], clock=clock)
+    reg.counters = {"err": 0, "tot": 0}
+    mon.evaluate()
+    clock.t = 1.0
+    reg.counters = {"err": 2, "tot": 20}    # windowed rate 0.1, burn 0.2
+    assert mon.evaluate()["state"] == "OK"
+    clock.t = 2.0
+    reg.counters = {"err": 14, "tot": 40}   # windowed rate 0.35, burn 0.7
+    assert mon.evaluate()["state"] == "OK"
+    clock.t = 3.0
+    reg.counters = {"err": 44, "tot": 60}   # windowed rate ~0.73, burn >1
+    assert mon.evaluate()["state"] == "PAGE"
+
+
+def test_gauge_objective_and_unregistered_metric_burns_zero():
+    reg, clock = FakeRegistry(), Clock()
+    obj = SLOObjective(name="drift", kind="gauge", metric="soak.drift",
+                       threshold=0.05, fast_window_s=10.0,
+                       slow_window_s=30.0, warn_burn=0.75, page_burn=1.0)
+    mon = SLOMonitor(reg, [obj], clock=clock)
+    assert mon.evaluate()["state"] == "OK"      # metric never registered
+    reg.gauges["soak.drift"] = -0.06            # abs() -> burn 1.2
+    clock.t = 1.0
+    assert mon.evaluate()["state"] == "PAGE"
+
+
+# ---------------------------------------------------------------------------
+# bounding + config + endpoint payloads
+# ---------------------------------------------------------------------------
+
+def test_event_log_and_sample_bounding():
+    reg, clock = FakeRegistry(), Clock()
+    obj = SLOObjective(name="g", kind="gauge", metric="v", threshold=1.0,
+                       fast_window_s=1.0, slow_window_s=1.0,
+                       warn_burn=1.0, page_burn=1.0)
+    mon = SLOMonitor(reg, [obj], clock=clock, event_capacity=4,
+                     max_samples=8)
+    for i in range(40):                         # flip every evaluation
+        clock.t = float(i * 2)                  # old samples roll out
+        reg.gauges["v"] = 5.0 if i % 2 else 0.0
+        mon.evaluate()
+    assert len(mon.events) == 4                 # bounded, newest kept
+    assert len(mon._samples["g"]) == 8
+    assert mon.verdict()["pages"] > 4           # counts survive trimming
+
+
+def test_from_config_file_roundtrip(tmp_path):
+    cfg = {"objectives": [
+        {"name": "p99", "kind": "latency", "metric": "serve.batch_ms",
+         "threshold": 123.0, "fast_window_s": 5.0, "slow_window_s": 9.0},
+    ]}
+    path = os.path.join(tmp_path, "slo.json")
+    with open(path, "w") as f:
+        json.dump(cfg, f)
+    mon = SLOMonitor.from_config(FakeRegistry(), path, clock=Clock())
+    assert mon.objectives[0].threshold == 123.0
+    assert mon.objectives[0].slow_window_s == 9.0
+    with pytest.raises(ValueError, match="unknown SLO objective keys"):
+        SLOMonitor.from_config(FakeRegistry(),
+                               {"objectives": [{"name": "x", "oops": 1}]})
+
+
+def test_status_payload_shape():
+    reg, clock = FakeRegistry(), Clock()
+    mon = SLOMonitor(reg, [_latency_obj()], clock=clock)
+    reg.histograms["serve.batch_ms"] = {"p99": 50.0}
+    mon.evaluate()
+    st = mon.status()
+    assert st["state"] == "OK" and st["n_evaluations"] == 1
+    assert st["objectives"]["p99"]["threshold"] == 500.0
+    assert st["objectives"]["p99"]["kind"] == "latency"
+    json.dumps(st)                              # endpoint-serializable
+
+
+def test_works_against_real_registry():
+    reg = MetricsRegistry()
+    reg.counter("soak.requests").inc(100)
+    reg.counter("soak.failed_requests").inc(0)
+    h = reg.histogram("serve.batch_ms")
+    for _ in range(20):
+        h.observe(3.0)
+    clock = Clock()
+    mon = SLOMonitor(reg, default_objectives(p99_gate_ms=100.0),
+                     clock=clock)
+    assert mon.evaluate()["state"] == "OK"
+    reg.counter("soak.failed_requests").inc()
+    clock.t = 1.0
+    assert mon.evaluate()["state"] == "PAGE"    # zero failure budget
+
+
+# ---------------------------------------------------------------------------
+# ExplainLogger
+# ---------------------------------------------------------------------------
+
+def test_explain_sampling_deterministic():
+    ex = ExplainLogger(sample_rate=0.25)
+    # accumulator starts at 1.0: the FIRST batch is always explained
+    assert [ex.sample() for _ in range(8)] == \
+        [True, False, False, True, False, False, False, True]
+    assert ex.stats()["n_sampled"] == 3
+    assert ExplainLogger(sample_rate=0.0).sample() is False
+    assert all(ExplainLogger(sample_rate=1.0).sample() for _ in range(5))
+    with pytest.raises(ValueError):
+        ExplainLogger(sample_rate=1.5)
+
+
+def test_explain_ring_bounded_and_file_sink():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "explain.jsonl")
+        with ExplainLogger(path, capacity=3) as ex:
+            for i in range(7):
+                ex.emit({"qid": i})
+            assert [r["qid"] for r in ex.recent()] == [4, 5, 6]
+            assert ex.stats()["n_records"] == 7
+            ex.flush()
+            with open(path) as f:
+                lines = [json.loads(x) for x in f]
+        # the FILE keeps everything; only the in-memory ring is bounded
+        assert [r["qid"] for r in lines] == list(range(7))
